@@ -1,0 +1,141 @@
+"""Shared benchmark scaffolding: the paper's experimental system (Sec. VII),
+the six policies of Sec. VIII, and the converged-time metric.
+
+All Fig. 4–9 comparisons are *analytic* reproductions: policies choose
+(I, μ), the metric is total time-to-ε  T(I, μ) = R(I, μ)·T_S + Σ ⌊R/I_m⌋·T_{m,A}
+with R from Corollary 1 — the same objective the paper optimizes. The
+ablation benchmark additionally runs REAL training on the synthetic CIFAR
+stand-in (see ablations.py) to show the trends hold off-paper.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.vgg16_cifar10 import SPEC as VGG
+from repro.core import (
+    HsflProblem, SystemSpec, build_profile, solve_bcd, solve_ma, solve_ms,
+    synthetic_hyperspec,
+)
+from repro.core.convergence import theorem1_bound
+from repro.core.latency import split_latency, total_latency
+
+
+def paper_problem(
+    seed: int = 0,
+    eps_scale: float = 6.0,
+    compute_scale: float = 1.0,
+    comm_scale: float = 1.0,
+    batch: int = 16,
+) -> HsflProblem:
+    prof = build_profile(VGG, batch=batch)
+    system = SystemSpec.paper_three_tier(
+        seed=seed, compute_scale=compute_scale, comm_scale=comm_scale
+    )
+    hp = synthetic_hyperspec(VGG.n_units, 20, beta=3.0, seed=seed)
+    floor = theorem1_bound(hp, 10**9, [1, 1, 1], (3, 8))
+    return HsflProblem(prof, system, hp, eps=eps_scale * floor)
+
+
+def converged_time(prob: HsflProblem, intervals, cuts) -> float:
+    """T(I, μ) to reach ε (Eq. 19 with R from Corollary 1); inf if unreachable."""
+    R = prob.rounds(intervals, cuts)
+    if R is None or not prob.memory_feasible(cuts):
+        return float("inf")
+    return total_latency(prob.profile, prob.system, cuts, intervals, R)
+
+
+# ---------------------------------------------------------------------- #
+# the six policies (Sec. VII benchmarks)
+# ---------------------------------------------------------------------- #
+
+
+def policy_hsfl(prob: HsflProblem, rng) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
+    res = solve_bcd(prob)
+    return res.intervals, res.cuts
+
+
+def _random_intervals(rng) -> Tuple[int, ...]:
+    return (int(rng.integers(1, 26)), int(rng.integers(1, 26)), 1)
+
+
+def _random_cuts(rng, lo=3, hi=14) -> Tuple[int, ...]:
+    return tuple(sorted(int(c) for c in rng.integers(lo, hi + 1, 2)))
+
+
+def policy_rma_ms(prob, rng):
+    I = _random_intervals(rng)
+    try:
+        ms = solve_ms(prob, I)
+    except ValueError:
+        return I, None  # random I makes the bound unreachable: infeasible draw
+    return I, ms.cuts
+
+
+def policy_ma_rms(prob, rng):
+    cuts = _random_cuts(rng)
+    ma = solve_ma(prob, cuts)
+    return ma.intervals, cuts
+
+
+def policy_rma_rms(prob, rng):
+    return _random_intervals(rng), _random_cuts(rng)
+
+
+def policy_dama_rms(prob, rng):
+    """DAMA [55]: depth-aware intervals — tiers hosting more layers
+    aggregate less often (interval ∝ hosted layer count)."""
+    cuts = _random_cuts(rng)
+    L1 = cuts[0]
+    L2 = cuts[1] - cuts[0]
+    return (max(1, 2 * L1), max(1, 2 * L2), 1), cuts
+
+
+def policy_rma_ams(prob, rng):
+    """AMS [56]: resource-heterogeneity-aware MS — minimizes per-round
+    split latency only (ignores convergence impact)."""
+    best, best_t = None, float("inf")
+    for cuts in prob.iter_cut_vectors():
+        if not prob.memory_feasible(cuts):
+            continue
+        t = split_latency(prob.profile, prob.system, cuts)
+        if t < best_t:
+            best, best_t = cuts, t
+    return _random_intervals(rng), best
+
+
+POLICIES: Dict[str, Callable] = {
+    "HSFL(ours)": policy_hsfl,
+    "RMA+MS": policy_rma_ms,
+    "MA+RMS": policy_ma_rms,
+    "RMA+RMS": policy_rma_rms,
+    "DAMA+RMS": policy_dama_rms,
+    "RMA+AMS": policy_rma_ams,
+}
+
+
+def expected_converged_time(
+    prob: HsflProblem, policy: Callable, draws: int = 20, seed: int = 0
+) -> Tuple[float, float]:
+    """Mean ± std of converged time over the policy's randomness (feasible
+    draws only; infeasible draws are counted via the feasibility rate)."""
+    rng = np.random.default_rng(seed)
+    ts: List[float] = []
+    for _ in range(draws):
+        I, cuts = policy(prob, rng)
+        t = converged_time(prob, I, cuts) if cuts is not None else float("inf")
+        if np.isfinite(t):
+            ts.append(t)
+        if policy is policy_hsfl:
+            break  # deterministic
+    if not ts:
+        return float("inf"), 0.0
+    return float(np.mean(ts)), float(np.std(ts))
+
+
+def emit(rows: List[Tuple], header: Tuple[str, ...]) -> None:
+    print(",".join(header))
+    for r in rows:
+        print(",".join(f"{x:.6g}" if isinstance(x, float) else str(x) for x in r))

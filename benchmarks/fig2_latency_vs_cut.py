@@ -1,0 +1,43 @@
+"""Fig. 2(c): per-round end-to-end latency versus cut layer.
+
+Sweeps L1 with L2 fixed (and vice versa) on the paper's client-edge-cloud
+system, reproducing the non-monotone communication/computing trade-off the
+paper uses to motivate MS optimization.
+"""
+from __future__ import annotations
+
+from repro.core.latency import aggregation_latency, split_latency
+
+from .common import emit, paper_problem
+
+
+def main(quick: bool = False) -> list:
+    prob = paper_problem()
+    rows = []
+    for L1 in range(1, 14):
+        cuts = (L1, max(L1, 8))
+        ts = split_latency(prob.profile, prob.system, cuts)
+        ta = sum(
+            aggregation_latency(prob.profile, prob.system, cuts, m) for m in range(2)
+        )
+        rows.append(("L1_sweep", L1, 8, ts, ta))
+    for L2 in range(3, 15):
+        cuts = (min(3, L2), L2)
+        ts = split_latency(prob.profile, prob.system, cuts)
+        ta = sum(
+            aggregation_latency(prob.profile, prob.system, cuts, m) for m in range(2)
+        )
+        rows.append(("L2_sweep", cuts[0], L2, ts, ta))
+    emit(rows, ("sweep", "L1", "L2", "split_latency_s", "agg_latency_s"))
+    # the motivating claim (Fig. 2c): latency is NON-MONOTONE in the cut
+    # layer — deeper cuts trade device compute against activation size, so
+    # the curve zigzags and the optimum is data-dependent.
+    l1_vals = [r[3] for r in rows if r[0] == "L1_sweep"]
+    rises = any(b > a for a, b in zip(l1_vals, l1_vals[1:]))
+    falls = any(b < a for a, b in zip(l1_vals, l1_vals[1:]))
+    assert rises and falls, ("expected non-monotone cut-layer latency", l1_vals)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

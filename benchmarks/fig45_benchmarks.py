@@ -1,0 +1,33 @@
+"""Figs. 4–5: HSFL vs the five benchmark policies — converged time to the
+target ε on the paper's three-tier system (analytic reproduction; the
+training-curve version lives in ablations.py / examples/train_hsfl_e2e.py).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import POLICIES, emit, expected_converged_time, paper_problem
+
+
+def main(quick: bool = False) -> list:
+    draws = 5 if quick else 20
+    rows = []
+    for setting, eps_scale in [("easy_eps", 10.0), ("tight_eps", 3.0)]:
+        prob = paper_problem(eps_scale=eps_scale)
+        base = None
+        for name, pol in POLICIES.items():
+            t, sd = expected_converged_time(prob, pol, draws=draws)
+            if name == "HSFL(ours)":
+                base = t
+            rows.append((setting, name, t, sd, t / base if base else 1.0))
+    emit(rows, ("setting", "policy", "converged_time_s", "std_s", "vs_hsfl"))
+    # the headline claim: HSFL is fastest in every setting
+    for setting in ("easy_eps", "tight_eps"):
+        sub = [r for r in rows if r[0] == setting]
+        best = min(sub, key=lambda r: r[2])
+        assert best[1] == "HSFL(ours)", sub
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Benchmark runner (deliverable d): one harness per paper table/figure,
+plus the roofline extraction over the dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--skip-training]
+
+Harness -> paper artifact map (details in DESIGN.md sect. 7):
+    fig2_latency_vs_cut   Fig. 2(c)  per-round latency vs cut layer
+    fig45_benchmarks      Figs. 4-5  HSFL vs the 5 baseline policies
+    fig67_resources       Figs. 6-7  resource scaling + tier count
+    ablations             Figs. 8-9  MA / MS ablations (+ real training)
+    bound_check           Thm 1      empirical gradient norms vs the bound
+    roofline              sect. g    three-term roofline per (arch x shape)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller grids / fewer training rounds")
+    ap.add_argument("--skip-training", action="store_true",
+                    help="skip the real-training ablation/bound harnesses")
+    ap.add_argument("--only", default=None, help="run a single harness")
+    args = ap.parse_args(argv)
+
+    from . import ablations, bound_check, fig2_latency_vs_cut, fig45_benchmarks
+    from . import fig67_resources, roofline
+
+    analytic = [
+        ("fig2_latency_vs_cut", lambda: fig2_latency_vs_cut.main(args.quick)),
+        ("fig45_benchmarks", lambda: fig45_benchmarks.main(args.quick)),
+        ("fig67_resources", lambda: fig67_resources.main(args.quick)),
+    ]
+    training = [
+        ("ablations", lambda: ablations.main(args.quick)),
+        ("bound_check", lambda: bound_check.main(args.quick)),
+    ]
+    extracted = [
+        ("roofline", lambda: roofline.main(
+            ["--csv", "experiments/roofline_16x16.csv"])),
+    ]
+
+    jobs = analytic + ([] if args.skip_training else training) + extracted
+    if args.only:
+        jobs = [(n, f) for n, f in jobs if n == args.only]
+        if not jobs:
+            print(f"unknown harness {args.only!r}", file=sys.stderr)
+            return 2
+
+    failures = []
+    for name, fn in jobs:
+        print(f"\n{'='*70}\n== {name}\n{'='*70}")
+        t0 = time.time()
+        try:
+            fn()
+            print(f"-- {name} ok ({time.time()-t0:.1f}s)")
+        except Exception as e:  # keep going; report at the end
+            failures.append((name, repr(e)))
+            print(f"-- {name} FAILED: {e!r}", file=sys.stderr)
+    if failures:
+        print(f"\n{len(failures)} harness(es) failed: {failures}", file=sys.stderr)
+        return 1
+    print(f"\nall {len(jobs)} harnesses passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

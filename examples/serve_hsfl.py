@@ -1,0 +1,24 @@
+"""Serve an HSFL-trained model with batched autoregressive decoding.
+
+After training, the fed server owns the aggregated model; this example
+restores a checkpoint (or initializes fresh weights), then decodes a batch
+of requests against a KV/state cache - the same ``decode_step`` that the
+decode_32k / long_500k dry-runs lower onto the production mesh.
+
+    PYTHONPATH=src python examples/serve_hsfl.py                       # qwen2 reduced
+    PYTHONPATH=src python examples/serve_hsfl.py --arch mamba2-1.3b    # SSM decode
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:] or [
+        "--arch", "qwen2-1.5b",
+        "--batch", "4",
+        "--prompt-len", "8",
+        "--gen", "24",
+        "--cache-len", "64",
+        "--temperature", "0.8",
+    ]
+    raise SystemExit(main(argv))

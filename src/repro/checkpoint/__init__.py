@@ -1,0 +1,1 @@
+from .npz import load_checkpoint, save_checkpoint

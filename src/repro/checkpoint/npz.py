@@ -1,0 +1,77 @@
+"""Flat-npz checkpointing of arbitrary pytrees + HSFL schedule metadata.
+
+Layout: one ``.npz`` holding every leaf under its '/'-joined key path plus a
+JSON sidecar entry ``__meta__`` (step, tier plan, arbitrary user dict).
+Restores exactly (structure is rebuilt from the key paths against a
+template tree, so dtype/shape mismatches fail loudly).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_seg(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _seg(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save_checkpoint(
+    path: str,
+    tree: Any,
+    step: int = 0,
+    meta: Optional[Dict[str, Any]] = None,
+) -> None:
+    flat = _flatten(tree)
+    payload = dict(flat)
+    payload["__meta__"] = np.frombuffer(
+        json.dumps({"step": int(step), **(meta or {})}).encode(), dtype=np.uint8
+    )
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    # atomic write: tmp + rename
+    d = os.path.dirname(os.path.abspath(path))
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp.npz")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **payload)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+
+
+def load_checkpoint(path: str, template: Any) -> Tuple[Any, int, Dict[str, Any]]:
+    """Restore into the structure of ``template``; returns (tree, step, meta)."""
+    with np.load(path) as z:
+        meta = json.loads(bytes(z["__meta__"]).decode())
+        leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+        new_leaves = []
+        for path_keys, leaf in leaves_paths:
+            key = "/".join(_seg(p) for p in path_keys)
+            if key not in z:
+                raise KeyError(f"checkpoint missing leaf {key!r}")
+            arr = z[key]
+            want = np.asarray(leaf)
+            if arr.shape != want.shape:
+                raise ValueError(f"{key}: shape {arr.shape} != template {want.shape}")
+            new_leaves.append(arr.astype(want.dtype))
+    tree = jax.tree_util.tree_unflatten(treedef, new_leaves)
+    step = int(meta.pop("step", 0))
+    return tree, step, meta

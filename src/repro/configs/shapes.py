@@ -1,0 +1,85 @@
+"""Assigned input shapes + ShapeDtypeStruct factories for the dry-run.
+
+Shapes (assignment):
+  train_4k       seq_len=  4,096  global_batch= 256  (training)
+  prefill_32k    seq_len= 32,768  global_batch=  32  (inference-prefill)
+  decode_32k     seq_len= 32,768  global_batch= 128  (inference-decode)
+  long_500k      seq_len=524,288  global_batch=   1  (long-context-decode)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..models.spec import ModelSpec
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+# sliding window applied to quadratic-attention archs for long_500k
+LONG_CONTEXT_WINDOW = 8192
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(spec: ModelSpec, shape: InputShape) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of a train/prefill
+    step (no device allocation). Decode shapes use `decode_input_specs`."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if spec.family == "vlm":
+        P = spec.prefix_len
+        return {
+            "patch_embeds": sds((B, P, spec.d_model), spec.cdtype),
+            "tokens": sds((B, S - P), i32),
+            "labels": sds((B, S - P), i32),
+        }
+    if spec.family == "audio":
+        return {
+            "frames": sds((B, spec.encoder_len, spec.d_model), spec.cdtype),
+            "tokens": sds((B, S), i32),
+            "labels": sds((B, S), i32),
+        }
+    return {"tokens": sds((B, S), i32), "labels": sds((B, S), i32)}
+
+
+def concrete_inputs(spec: ModelSpec, batch: int, seq: int, key=None) -> Dict[str, jax.Array]:
+    """Small concrete batch for smoke tests."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    V = spec.vocab_size
+    if spec.family == "vlm":
+        P = spec.prefix_len
+        return {
+            "patch_embeds": jax.random.normal(k3, (batch, P, spec.d_model), spec.cdtype),
+            "tokens": jax.random.randint(k1, (batch, seq - P), 0, V),
+            "labels": jax.random.randint(k2, (batch, seq - P), 0, V),
+        }
+    if spec.family == "audio":
+        return {
+            "frames": jax.random.normal(k3, (batch, spec.encoder_len, spec.d_model), spec.cdtype),
+            "tokens": jax.random.randint(k1, (batch, seq), 0, V),
+            "labels": jax.random.randint(k2, (batch, seq), 0, V),
+        }
+    return {
+        "tokens": jax.random.randint(k1, (batch, seq), 0, V),
+        "labels": jax.random.randint(k2, (batch, seq), 0, V),
+    }

@@ -1,0 +1,18 @@
+# The paper's primary contribution: the HSFL framework (engines), its
+# convergence theory (Theorem 1 / Corollary 1), and the MA+MS system
+# optimizer (Proposition 1, Dinkelbach, Algorithm 2 BCD).
+from .convergence import HyperSpec, corollary1_rounds, synthetic_hyperspec, theorem1_bound
+from .latency import LayerProfile, SystemSpec, build_profile, total_latency
+from .problem import HsflProblem
+from .ma_solver import MaSolution, solve_ma, solve_ma_bruteforce
+from .ms_solver import MsSolution, solve_ms, solve_ms_bruteforce
+from .bcd import BcdResult, solve_bcd
+from .estimator import HyperEstimator, estimate_from_probe
+from .tiers import TierPlan, default_plan, synchronize, tier_subtrees
+from .engine import (
+    TrainState,
+    build_train_step_a,
+    build_train_step_b,
+    init_state_a,
+    init_state_b,
+)

@@ -1,0 +1,291 @@
+"""HSFL execution engines.
+
+Engine A ("sync-groups", production): every tier's parameters are stacked
+per-client on axis 0 and sharded over the `data` (and `pod`) mesh axes. The
+hierarchy is realized purely as the multi-timescale aggregation schedule of
+``tiers.synchronize`` — memory-balanced and collective-efficient on TPU.
+
+Engine B ("split-placement", reference): tier-1 params stacked per client,
+tier-2 per entity, tier-3 single — the literal SFL dataflow where activations
+physically move client → entity → cloud. Used to prove Engine A's math and to
+ground the latency model's activation-transfer terms.
+
+Both engines implement Algorithm 1 of the paper exactly (per-client SGD on
+replicas + Eq. 3 entity sync + Eq. 4 fed-server aggregation at I_m).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..optim import Optimizer
+from .tiers import TierPlan, synchronize, tier_subtrees, combine_tiers
+
+Params = Dict[str, Any]
+
+
+@dataclass
+class TrainState:
+    params: Params
+    opt_state: Any
+    step: jax.Array
+
+    def tree_flatten(self):
+        return (self.params, self.opt_state, self.step), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.params, s.opt_state, s.step), None),
+    lambda aux, ch: TrainState(*ch),
+)
+
+
+def replicate_for_clients(params: Params, num_clients: int) -> Params:
+    """Broadcast a single-model pytree to the client-stacked layout."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (num_clients,) + x.shape), params
+    )
+
+
+def unreplicate(params: Params) -> Params:
+    return jax.tree.map(lambda x: x[0], params)
+
+
+# --------------------------------------------------------------------------- #
+# Engine A — sync groups
+# --------------------------------------------------------------------------- #
+
+
+def init_state_a(model, plan: TierPlan, opt: Optimizer, key) -> TrainState:
+    p0 = model.init_params(key)
+    params = replicate_for_clients(p0, plan.num_clients)
+    return TrainState(params=params, opt_state=opt.init(params), step=jnp.zeros((), jnp.int32))
+
+
+def build_train_step_a(
+    model, plan: TierPlan, opt: Optimizer, *, sync_opt_state: bool = False,
+    fed_round=None,
+) -> Callable[[TrainState, Params], Tuple[TrainState, jax.Array]]:
+    """Engine-A step: vmapped per-client update + hierarchical aggregation.
+
+    batch leaves have a leading client axis [N, b, ...].
+
+    ``fed_round``: None compiles one step with an in-graph ``lax.cond`` on
+    the round counter; False/True compile the specialized local/sync round
+    steps (see ``tiers.synchronize``) — the production dispatch is
+    ``sync_step if (t+1) % I == 0 else local_step``.
+    """
+
+    def step_fn(state: TrainState, batch: Params) -> Tuple[TrainState, jax.Array]:
+        losses, grads = jax.vmap(jax.value_and_grad(model.loss_fn))(
+            state.params, batch
+        )
+        new_params, new_opt = opt.update(state.params, grads, state.opt_state)
+        new_params = synchronize(new_params, plan, state.step, fed_round=fed_round)
+        if sync_opt_state and jax.tree.leaves(new_opt):
+            new_opt = jax.tree.map(
+                lambda x: x, new_opt
+            )  # structure-preserving no-op; moments follow params below
+            # momentum/adam moments are client-stacked like params: apply the
+            # same schedule so replicas stay consistent after aggregation.
+            if opt.name == "momentum":
+                new_opt = synchronize(new_opt, plan, state.step, fed_round=fed_round)
+            elif opt.name == "adam":
+                new_opt = dict(new_opt)
+                new_opt["m"] = synchronize(
+                    new_opt["m"], plan, state.step, fed_round=fed_round
+                )
+                new_opt["v"] = synchronize(
+                    new_opt["v"], plan, state.step, fed_round=fed_round
+                )
+        return (
+            TrainState(new_params, new_opt, state.step + 1),
+            jnp.mean(losses),
+        )
+
+    return step_fn
+
+
+# --------------------------------------------------------------------------- #
+# Engine B — split placement (reference)
+# --------------------------------------------------------------------------- #
+
+
+def init_state_b(model, plan: TierPlan, opt: Optimizer, key) -> TrainState:
+    """Params: list of per-tier pytrees; tier m stacked over J_m entities."""
+    p0 = model.init_params(key)
+    full = replicate_for_clients(p0, plan.num_clients)
+    parts = tier_subtrees(full, plan)
+    tier_params = []
+    for m, part in enumerate(parts):
+        J = plan.entities[m]
+        per = plan.num_clients // J
+        tier_params.append(jax.tree.map(lambda x: x[::per], part))  # [J_m, ...]
+    return TrainState(
+        params=tier_params,
+        opt_state=opt.init(tier_params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def build_train_step_b(
+    model, plan: TierPlan, opt: Optimizer
+) -> Callable[[TrainState, Params], Tuple[TrainState, jax.Array]]:
+    """Engine-B step: literal split execution.
+
+    Forward: tier-1 vmapped over N clients; activations regrouped into J_2
+    entity batches; ... up to the single tier-M model over the global batch.
+    Backward: one value_and_grad through the composed function; per-tier
+    gradients rescaled to implement per-client SGD + Eq. 3 exactly.
+    """
+    N = plan.num_clients
+    M = plan.M
+    spec = model.spec
+
+    def global_loss(tier_params, batch):
+        # ---- tier 1 on each client ----
+        def t1(p, b):
+            carry = model.frontend_apply(p["frontend"], b)
+            lo, hi = plan.tier_bounds(0)
+            prefix = spec.prefix_len if spec.family == "vlm" else 0
+            return model.apply_units(p["units"], carry, 0, hi - lo, prefix_len=prefix)
+
+        # MoE capacity semantics: a server hosting several clients' tokens
+        # must dispatch with per-client groups, or pooled tokens compete for
+        # expert slots and the split execution diverges from per-client SFL
+        # (Eq. 2/3 operate per client). moe_groups = co-located clients.
+        if hasattr(model, "moe_groups"):
+            model.moe_groups = 1  # t1 is vmapped per client
+        carry = jax.vmap(t1)(tier_params[0], batch)  # leaves [N, b, ...]
+
+        # ---- middle tiers on entity-regrouped activations ----
+        for m in range(1, M - 1):
+            J = plan.entities[m]
+            per = N // J
+
+            def regroup(x):
+                return x.reshape(J, per * x.shape[1], *x.shape[2:])
+
+            def split_back(x):
+                return x.reshape(N, x.shape[1] // per, *x.shape[2:])
+
+            carry_e = jax.tree.map(
+                lambda x: regroup(x) if x.ndim >= 2 else x.reshape(J, per).mean(1),
+                carry,
+            )
+            lo, hi = plan.tier_bounds(m)
+
+            def tm(p, c):
+                # p["units"] is pre-sliced to this tier -> local indices
+                prefix = spec.prefix_len if spec.family == "vlm" else 0
+                return model.apply_units(p["units"], c, 0, hi - lo, prefix_len=prefix)
+
+            if hasattr(model, "moe_groups"):
+                model.moe_groups = per  # entity batch pools `per` clients
+            carry_e = jax.vmap(tm)(tier_params[m], carry_e)
+            # scalars (the moe aux) carry *means*: regroup averages over an
+            # entity's clients, so split_back replicates the mean back to
+            # each client unchanged (a /per here would shrink aux per tier).
+            carry = jax.tree.map(
+                lambda x: split_back(x) if x.ndim >= 2 else jnp.repeat(x, per),
+                carry_e,
+            )
+
+        # ---- top tier on the concatenated global batch ----
+        def flatten(x):
+            return x.reshape(N * x.shape[1], *x.shape[2:])
+
+        carry_g = jax.tree.map(
+            lambda x: flatten(x) if x.ndim >= 2 else x.mean() * N, carry
+        )
+        lo, hi = plan.tier_bounds(M - 1)
+        pM = jax.tree.map(lambda x: x[0], tier_params[M - 1])
+        prefix = spec.prefix_len if spec.family == "vlm" else 0
+        if hasattr(model, "moe_groups"):
+            model.moe_groups = N  # cloud batch pools all N clients
+        aux_pre = carry_g.get("aux", jnp.zeros((), jnp.float32))
+        carry_g = model.apply_units(pM["units"], carry_g, 0, hi - lo, prefix_len=prefix)
+        if hasattr(model, "moe_groups"):
+            model.moe_groups = 1  # restore
+        from ..models import layers as L
+
+        if spec.tie_embeddings:
+            # tied unembedding weights live on tier 1 (per client)
+            h = L.rms_norm(carry_g["h"], pM["head"]["norm"], spec.norm_eps)
+            b_sz = h.shape[0] // N
+            hn = h.reshape(N, b_sz, *h.shape[1:])
+            emb = tier_params[0]["frontend"]["embed"]  # [N, V, d]
+            logits = jnp.einsum("nbsd,nvd->nbsv", hn, emb.astype(hn.dtype))
+            logits = logits.reshape(h.shape[0], h.shape[1], -1)
+        else:
+            logits = model.head_apply(
+                {"head": pM["head"], "frontend": None}, carry_g
+            )
+        labels = batch["labels"].reshape(-1, batch["labels"].shape[-1])
+        if spec.family == "vlm":
+            logits = logits[:, spec.prefix_len :]
+        mask = (labels >= 0).astype(jnp.float32)
+        loss = L.cross_entropy(logits, jnp.maximum(labels, 0), mask)
+        if spec.moe is not None:
+            # aux bookkeeping: pre-flatten aux arrives scaled by N (the
+            # scalar flatten is x.mean()*N), so divide it back; the top
+            # tier's own aux (post - pre) is shared by every client in
+            # Engine A and enters at full weight.
+            aux_top = carry_g["aux"] - aux_pre
+            loss = loss + 0.01 * (aux_pre / N + aux_top)
+        return loss
+
+    def step_fn(state: TrainState, batch: Params) -> Tuple[TrainState, jax.Array]:
+        loss, grads = jax.value_and_grad(global_loss)(state.params, batch)
+        # per-client SGD semantics: tier m's shared entity model moves by the
+        # *mean of its clients' gradients* = (N / N_m^j) * dL/dw_m  (see DESIGN)
+        scaled = []
+        for m, g in enumerate(grads):
+            J = plan.entities[m]
+            scaled.append(jax.tree.map(lambda x, J=J: x * J, g))
+        new_params, new_opt = opt.update(state.params, scaled, state.opt_state)
+        # Eq. 4 fed-server aggregation across entities at I_m
+        out = []
+        for m, p in enumerate(new_params):
+            interval = int(plan.intervals[m])
+            if plan.entities[m] > 1 and interval >= 1:
+                do = (state.step + 1) % interval == 0
+
+                def agg(t):
+                    return jax.tree.map(
+                        lambda x: jnp.broadcast_to(
+                            jnp.mean(x, 0, keepdims=True), x.shape
+                        ),
+                        t,
+                    )
+
+                p = lax.cond(do, agg, lambda t: t, p)
+            out.append(p)
+        return TrainState(out, new_opt, state.step + 1), loss
+
+    return step_fn
+
+
+def engine_b_to_full(model, plan: TierPlan, tier_params) -> Params:
+    """Materialize Engine-B tier params back into a client-stacked pytree."""
+    parts = []
+    for m, p in enumerate(tier_params):
+        J = plan.entities[m]
+        per = plan.num_clients // J
+        parts.append(jax.tree.map(lambda x: jnp.repeat(x, per, axis=0), p))
+    template = {
+        "units": parts[0]["units"],
+        "frontend": parts[0]["frontend"],
+        "head": parts[-1]["head"],
+    }
+    return combine_tiers(parts, template)

@@ -1,0 +1,173 @@
+"""Estimation of the convergence-bound constants (β, σ_l², G_l², ϑ).
+
+Follows the approach of Wang et al. [28] (as cited in Sec. VI): the constants
+are estimated from a short probe run of the actual training system —
+
+* G_l²  : running mean of per-unit squared gradient norms (per client),
+* σ_l²  : running mean of the per-unit across-client variance of the
+          stochastic gradients (unbiased per Assumption 2's structure),
+* β     : max ratio ‖∇̄f(w_t) − ∇̄f(w_{t-1})‖ / ‖w_t − w_{t-1}‖ over probe
+          steps (a smoothness lower-envelope estimate),
+* ϑ     : f(w_0) − f̂* with f̂* the best loss seen (refined as training runs).
+
+All quantities are computed on the client-stacked Engine-A layout, so the
+estimator can run inside the production training loop at negligible cost.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .convergence import HyperSpec
+
+Params = Dict[str, Any]
+
+
+def _unit_sq_norms(tree: Params, n_units: int) -> jax.Array:
+    """Per-unit squared norms of a (client-stacked) pytree: returns [N, U].
+
+    ``frontend`` folds into unit 0 and ``head`` into unit U−1, mirroring the
+    paper's convention that cut layers never separate the embedding from the
+    first block nor the head from the last.
+    """
+    units = tree["units"]
+
+    def stack_sq(t) -> jax.Array:  # [N, U]
+        leaves = jax.tree.leaves(t)
+        tot = None
+        for x in leaves:
+            s = jnp.sum(
+                jnp.square(x.astype(jnp.float32)), axis=tuple(range(2, x.ndim))
+            )
+            tot = s if tot is None else tot + s
+        return tot
+
+    if isinstance(units, (list, tuple)):
+        per = [
+            sum(
+                jnp.sum(jnp.square(x.astype(jnp.float32)), axis=tuple(range(1, x.ndim)))
+                for x in jax.tree.leaves(u)
+            )
+            for u in units
+        ]
+        sq = jnp.stack(per, axis=1)  # [N, U]
+    elif isinstance(units, dict) and set(units) == {"enc", "dec"}:
+        sq = jnp.concatenate([stack_sq(units["enc"]), stack_sq(units["dec"])], axis=1)
+    else:
+        sq = stack_sq(units)
+    assert sq.shape[1] == n_units, (sq.shape, n_units)
+
+    def extra_sq(part) -> jax.Array:  # [N]
+        if part is None or not jax.tree.leaves(part):
+            return jnp.zeros(sq.shape[0], jnp.float32)
+        return sum(
+            jnp.sum(jnp.square(x.astype(jnp.float32)), axis=tuple(range(1, x.ndim)))
+            for x in jax.tree.leaves(part)
+        )
+
+    sq = sq.at[:, 0].add(extra_sq(tree.get("frontend")))
+    sq = sq.at[:, -1].add(extra_sq(tree.get("head")))
+    return sq
+
+
+def _unit_sq_norms_mean_tree(tree: Params, n_units: int) -> jax.Array:
+    """[U] squared norms of a non-stacked tree (client axis already reduced)."""
+    stacked = jax.tree.map(lambda x: x[None], tree)
+    return _unit_sq_norms(stacked, n_units)[0]
+
+
+def _global_sq_norm(tree) -> jax.Array:
+    return sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+
+
+@dataclass
+class HyperEstimator:
+    """Accumulates probe-run statistics into a HyperSpec."""
+
+    n_units: int
+    num_clients: int
+    gamma: float
+
+    def __post_init__(self):
+        self._g2_sum = np.zeros(self.n_units)
+        self._var_sum = np.zeros(self.n_units)
+        self._steps = 0
+        self._beta = 0.0
+        self._prev_mean_grad: Optional[Params] = None
+        self._prev_params: Optional[Params] = None
+        self._f0: Optional[float] = None
+        self._fmin = float("inf")
+
+    # ------------------------------------------------------------------ #
+    def observe(self, params: Params, grads: Params, loss: float) -> None:
+        """Feed one probe round: client-stacked params/grads + mean loss."""
+        sq = np.asarray(_unit_sq_norms(grads, self.n_units))  # [N, U]
+        self._g2_sum += sq.mean(axis=0)
+        mean_grad = jax.tree.map(
+            lambda g: jnp.mean(g.astype(jnp.float32), axis=0, keepdims=True), grads
+        )
+        # Var_n[g] per unit = E_n ||g_n||² − ||ḡ||² (per-unit decomposition)
+        mean_sq = np.asarray(_unit_sq_norms(mean_grad, self.n_units))[0]
+        self._var_sum += np.maximum(sq.mean(axis=0) - mean_sq, 0.0)
+        if self._prev_mean_grad is not None:
+            dg = jax.tree.map(
+                lambda a, b: a - b, mean_grad, self._prev_mean_grad
+            )
+            dw = jax.tree.map(lambda a, b: a - b, params, self._prev_params)
+            num = float(jnp.sqrt(_global_sq_norm(dg)))
+            den = float(jnp.sqrt(_global_sq_norm(dw)))
+            if den > 1e-12:
+                self._beta = max(self._beta, num / den)
+        self._prev_mean_grad = mean_grad
+        self._prev_params = jax.tree.map(lambda x: x, params)
+        loss = float(loss)
+        if self._f0 is None:
+            self._f0 = loss
+        self._fmin = min(self._fmin, loss)
+        self._steps += 1
+
+    # ------------------------------------------------------------------ #
+    def hyperspec(self, fstar_margin: float = 0.5) -> HyperSpec:
+        if self._steps == 0:
+            raise ValueError("no probe rounds observed")
+        G2 = self._g2_sum / self._steps
+        sigma2 = self._var_sum / self._steps
+        theta0 = max(self._f0 - self._fmin, fstar_margin * self._f0, 1e-3)
+        beta = max(self._beta, 1e-3)
+        return HyperSpec(
+            gamma=self.gamma,
+            beta=beta,
+            theta0=float(theta0),
+            num_clients=self.num_clients,
+            sigma2=sigma2,
+            G2=G2,
+        )
+
+
+def estimate_from_probe(
+    model,
+    plan,
+    opt,
+    batches: Iterable[Params],
+    key,
+    gamma: float,
+) -> HyperSpec:
+    """Convenience: run Engine A for the probe batches and estimate."""
+    from .engine import build_train_step_a, init_state_a
+
+    state = init_state_a(model, plan, opt, key)
+    est = HyperEstimator(plan.n_units, plan.num_clients, gamma)
+
+    grad_fn = jax.jit(
+        lambda p, b: jax.vmap(jax.value_and_grad(model.loss_fn))(p, b)
+    )
+    step = jax.jit(build_train_step_a(model, plan, opt))
+    for batch in batches:
+        losses, grads = grad_fn(state.params, batch)
+        est.observe(state.params, grads, float(jnp.mean(losses)))
+        state, _ = step(state, batch)
+    return est.hyperspec()

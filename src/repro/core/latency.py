@@ -1,0 +1,261 @@
+"""HSFL training-latency model — Eqs. (11)–(19) of the paper.
+
+Two parameterizations of the same code:
+  * the paper's WAN numbers (Sec. VII) for reproducing Figs. 2, 4–9;
+  * TPU ICI/DCN constants for the pod mapping (see DESIGN.md §2).
+
+``LayerProfile`` carries per-unit compute/communication quantities derived
+from a ModelSpec/VggSpec; ``SystemSpec`` carries the multi-tier resource
+topology. Everything downstream (solvers, benchmarks) consumes only these.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..models.spec import ModelSpec
+from ..models.vgg import VggSpec
+
+BITS = 8.0
+
+
+@dataclass(frozen=True)
+class LayerProfile:
+    """Per-unit workload profile (unit = HSFL cut granularity)."""
+    n_units: int
+    flops_fwd: np.ndarray        # [U] forward FLOPs per mini-batch b
+    flops_bwd: np.ndarray        # [U] backward FLOPs per mini-batch b
+    act_bytes: np.ndarray        # [U] activation bytes *per sample* at the
+                                 #     boundary after unit u (ψ_l)
+    grad_act_bytes: np.ndarray   # [U] activation-gradient bytes per sample (χ_l)
+    param_bytes: np.ndarray      # [U] parameter bytes of unit u (δ contribution)
+    opt_bytes: np.ndarray        # [U] optimizer-state bytes of unit u (ϑ̃_l)
+    frontend_param_bytes: float
+    head_param_bytes: float
+    batch: int
+
+    def tier_flops(self, cuts: Sequence[int], m: int, bwd: bool = False) -> float:
+        lo, hi = self._bounds(cuts, m)
+        arr = self.flops_bwd if bwd else self.flops_fwd
+        return float(np.sum(arr[lo:hi]))
+
+    def tier_param_bytes(self, cuts: Sequence[int], m: int) -> float:
+        lo, hi = self._bounds(cuts, m)
+        M = len(cuts) + 1
+        extra = 0.0
+        if m == 0:
+            extra += self.frontend_param_bytes
+        if m == M - 1:
+            extra += self.head_param_bytes
+        return float(np.sum(self.param_bytes[lo:hi])) + extra
+
+    def _bounds(self, cuts: Sequence[int], m: int) -> Tuple[int, int]:
+        b = [0, *cuts, self.n_units]
+        return b[m], b[m + 1]
+
+
+def build_profile(
+    spec,
+    batch: int,
+    seq: int = 1,
+    bytes_per_param: float = 4.0,
+    bytes_per_act: float = 4.0,
+    optimizer: str = "sgd",
+    bwd_fwd_ratio: float = 2.0,
+) -> LayerProfile:
+    """Derive a LayerProfile from a ModelSpec or VggSpec."""
+    from ..optim import opt_state_bytes_per_param
+
+    U = spec.n_units
+    flops = np.array([spec.unit_flops_fwd(u, batch, seq) for u in range(U)])
+    params = np.array([spec.unit_param_count(u) for u in range(U)], dtype=float)
+    if isinstance(spec, VggSpec):
+        act = np.array(
+            [spec.unit_act_bytes_at(u, 1, int(bytes_per_act)) for u in range(U)],
+            dtype=float,
+        )
+    else:
+        act = np.full(U, float(spec.unit_act_bytes(1, seq, int(bytes_per_act))))
+    opt_per = opt_state_bytes_per_param(optimizer)
+    return LayerProfile(
+        n_units=U,
+        flops_fwd=flops,
+        flops_bwd=bwd_fwd_ratio * flops,
+        act_bytes=act,
+        grad_act_bytes=act.copy(),
+        param_bytes=params * bytes_per_param,
+        opt_bytes=params * opt_per,
+        frontend_param_bytes=spec.frontend_param_count() * bytes_per_param,
+        head_param_bytes=spec.head_param_count() * bytes_per_param,
+        batch=batch,
+    )
+
+
+@dataclass(frozen=True)
+class SystemSpec:
+    """Multi-tier resource topology (client→…→cloud) + fed-server links."""
+    M: int
+    num_clients: int
+    entities: Tuple[int, ...]            # J_m
+    compute: Tuple[np.ndarray, ...]      # per tier: FLOPS per hosted sub-model [N]
+    act_up: Tuple[np.ndarray, ...]       # [M-1][N] bit/s client-sub-model uplink
+    act_down: Tuple[np.ndarray, ...]     # [M-1][N] bit/s
+    model_up: Tuple[np.ndarray, ...]     # [M-1][J_m] bit/s to fed server
+    model_down: Tuple[np.ndarray, ...]   # [M-1][J_m] bit/s from fed server
+    memory: Tuple[np.ndarray, ...]       # [M][J_m] bytes (C5)
+
+    @classmethod
+    def paper_three_tier(
+        cls,
+        num_clients: int = 20,
+        num_edges: int = 5,
+        seed: int = 0,
+        compute_scale: float = 1.0,
+        comm_scale: float = 1.0,
+        memory_bytes: float = 16e9,
+    ) -> "SystemSpec":
+        """Sec. VII experimental setup (client–edge–cloud)."""
+        rng = np.random.default_rng(seed)
+        N, J2 = num_clients, num_edges
+        per_edge = N // J2
+        dev = rng.uniform(0.4e12, 0.6e12, N) * compute_scale
+        edge = np.full(N, 5e12 / per_edge) * compute_scale  # evenly split
+        cloud = np.full(N, 50e12 / N) * compute_scale
+        up_dev = rng.uniform(75e6, 80e6, N) * comm_scale
+        down_dev = np.full(N, 370e6) * comm_scale
+        edge_cloud = rng.uniform(370e6, 400e6, N) * comm_scale
+        edge_fed = rng.uniform(370e6, 400e6, J2) * comm_scale
+        dev_fed = rng.uniform(75e6, 80e6, N) * comm_scale
+        return cls(
+            M=3,
+            num_clients=N,
+            entities=(N, J2, 1),
+            compute=(dev, edge, cloud),
+            act_up=(up_dev, edge_cloud),
+            act_down=(down_dev, edge_cloud),
+            model_up=(dev_fed, edge_fed),
+            model_down=(np.full(N, 370e6) * comm_scale, edge_fed),
+            memory=(
+                np.full(N, 8e9),
+                np.full(J2, memory_bytes),
+                np.array([64e9]),
+            ),
+        )
+
+    @classmethod
+    def tpu_pod_mapping(
+        cls,
+        num_clients: int = 16,
+        num_edges: int = 4,
+        chip_flops: float = 197e12,
+        ici_bps: float = 50e9 * 8,
+        dcn_bps: float = 25e9 * 8,
+        hbm_bytes: float = 16e9,
+    ) -> "SystemSpec":
+        """HSFL hierarchy priced with TPU v5e constants (DESIGN.md §2):
+        tier links = ICI, fed-server (cross-pod) links = DCN."""
+        N, J2 = num_clients, num_edges
+        return cls(
+            M=3,
+            num_clients=N,
+            entities=(N, J2, 1),
+            compute=(
+                np.full(N, chip_flops),
+                np.full(N, chip_flops),
+                np.full(N, chip_flops),
+            ),
+            act_up=(np.full(N, ici_bps), np.full(N, ici_bps)),
+            act_down=(np.full(N, ici_bps), np.full(N, ici_bps)),
+            model_up=(np.full(N, dcn_bps), np.full(J2, dcn_bps)),
+            model_down=(np.full(N, dcn_bps), np.full(J2, dcn_bps)),
+            memory=(
+                np.full(N, hbm_bytes),
+                np.full(J2, hbm_bytes),
+                np.array([hbm_bytes * 16]),
+            ),
+        )
+
+
+# --------------------------------------------------------------------------- #
+# Eq. (11)–(19)
+# --------------------------------------------------------------------------- #
+
+
+def split_latency(profile: LayerProfile, system: SystemSpec, cuts: Sequence[int]) -> float:
+    """T_S(μ): per-round split-training latency, Eq. (17)."""
+    N, M = system.num_clients, system.M
+    b = profile.batch
+    per_client = np.zeros(N)
+    for m in range(M):
+        fwd = profile.tier_flops(cuts, m, bwd=False)
+        bwd = profile.tier_flops(cuts, m, bwd=True)
+        per_client += (fwd + bwd) / system.compute[m]  # Eq. (11) + (13)
+    bnds = [0, *cuts, profile.n_units]
+    for m in range(M - 1):
+        cut = bnds[m + 1]
+        if cut == 0:
+            act = profile.act_bytes[0] * 0.0  # degenerate empty tier
+        else:
+            act = profile.act_bytes[cut - 1]
+        gact = act
+        per_client += b * act * BITS / system.act_up[m]      # Eq. (12)
+        per_client += b * gact * BITS / system.act_down[m]   # Eq. (14)
+    return float(np.max(per_client))
+
+
+def aggregation_latency(
+    profile: LayerProfile, system: SystemSpec, cuts: Sequence[int], m: int
+) -> float:
+    """T_{m,A}(μ): fed-server aggregation latency of tier m, Eq. (18)."""
+    if system.entities[m] <= 1:
+        return 0.0  # Eq. (15)/(16) indicator
+    lam = profile.tier_param_bytes(cuts, m) * BITS
+    up = float(np.max(lam / system.model_up[m]))
+    down = float(np.max(lam / system.model_down[m]))
+    return up + down
+
+
+def total_latency(
+    profile: LayerProfile,
+    system: SystemSpec,
+    cuts: Sequence[int],
+    intervals: Sequence[int],
+    R: float,
+) -> float:
+    """T(I, μ), Eq. (19)."""
+    ts = split_latency(profile, system, cuts)
+    tot = R * ts
+    for m in range(system.M - 1):
+        tot += np.floor(R / intervals[m]) * aggregation_latency(
+            profile, system, cuts, m
+        )
+    return float(tot)
+
+
+def memory_ok(profile: LayerProfile, system: SystemSpec, cuts: Sequence[int]) -> bool:
+    """Constraint C5: per-entity memory for hosted sub-models."""
+    N = system.num_clients
+    bnds = [0, *cuts, profile.n_units]
+    csum_act = np.cumsum(profile.act_bytes)
+    csum_gact = np.cumsum(profile.grad_act_bytes)
+    for m in range(system.M):
+        lo, hi = bnds[m], bnds[m + 1]
+        hosted = N // system.entities[m]
+        per_model = float(
+            (csum_act[hi - 1] if hi > 0 else 0.0)
+            - (csum_act[lo - 1] if lo > 0 else 0.0)
+            + (csum_gact[hi - 1] if hi > 0 else 0.0)
+            - (csum_gact[lo - 1] if lo > 0 else 0.0)
+        ) * profile.batch + float(
+            np.sum(profile.param_bytes[lo:hi]) + np.sum(profile.opt_bytes[lo:hi])
+        )
+        if m == 0:
+            per_model += profile.frontend_param_bytes
+        if m == system.M - 1:
+            per_model += profile.head_param_bytes
+        cap = float(np.min(system.memory[m]))
+        if hosted * per_model >= cap:
+            return False
+    return True

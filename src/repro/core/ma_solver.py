@@ -1,0 +1,167 @@
+r"""P1 — the model-aggregation sub-problem (Proposition 1).
+
+For fixed cuts μ, minimize over I ∈ (ℕ⁺)^{M-1}
+
+    Θ'(I) ∝ (a + Σ_m b_m / I_m) / (c − κ Σ_m 1{I_m>1} d_m I_m²).
+
+Proposition 1 structure:
+  * enumerate all 2^{M-1} subsets M' of tiers pinned to I_m = 1;
+  * for the free tiers M'', the stationary condition ∂Θ'/∂I_{m'} = 0 is the
+    cubic  Ξ_{m'}(I) = 2κ d a' I³ + 3κ d b I² − b c' = 0  with
+        a' = a + Σ_{m∈M''\{m'}} b_m/I_m + Σ_{m∈M'} b_m,
+        c' = c − κ Σ_{m∈M''\{m'}} d_m I_m²,
+    which has exactly one positive root (Ξ is increasing, Ξ(0) < 0);
+  * solve the coupled system by Newton–Jacobi sweeps, then pick the best of
+    the 2^{|M''|} floor/ceil roundings under the *exact* objective (with the
+    I=1 indicator discontinuity honoured).
+
+The solver is exact up to the integer rounding neighbourhood, which matches
+Eq. (26)/(38); ``tests/test_solvers.py`` verifies optimality against brute
+force over the full integer grid.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .problem import INFEASIBLE, HsflProblem
+
+
+@dataclass(frozen=True)
+class MaSolution:
+    intervals: Tuple[int, ...]  # length M (top tier forced to 1)
+    theta: float
+
+
+def _cubic_positive_root(ka: float, kb: float, kc: float) -> float:
+    """Unique positive root of  ka·I³ + kb·I² − kc = 0  (ka, kb, kc > 0)."""
+    roots = np.roots([ka, kb, 0.0, -kc])
+    real = roots[np.abs(roots.imag) < 1e-9].real
+    pos = real[real > 0]
+    if len(pos) == 0:  # numerical fallback: bisection
+        lo, hi = 1e-9, 1.0
+        f = lambda x: ka * x**3 + kb * x**2 - kc
+        while f(hi) < 0:
+            hi *= 2.0
+        for _ in range(200):
+            mid = 0.5 * (lo + hi)
+            if f(mid) < 0:
+                lo = mid
+            else:
+                hi = mid
+        return 0.5 * (lo + hi)
+    return float(pos[0])
+
+
+def _newton_jacobi(
+    a: float,
+    b: np.ndarray,
+    c: float,
+    kappa: float,
+    d: np.ndarray,
+    free: List[int],
+    pinned_b_sum: float,
+    iters: int = 200,
+    tol: float = 1e-10,
+) -> Optional[np.ndarray]:
+    """Solve the stationary system for the free tiers; None if c' ≤ 0 always
+    (the bound cannot reach ε with any finite interval)."""
+    I = np.full(len(free), 2.0)
+    for _ in range(iters):
+        new = I.copy()
+        for i, m in enumerate(free):
+            others = [j for j in range(len(free)) if j != i]
+            a_eff = a + pinned_b_sum + sum(b[free[j]] / I[j] for j in others)
+            c_eff = c - kappa * sum(d[free[j]] * I[j] ** 2 for j in others)
+            if c_eff <= 0:
+                return None
+            if d[m] <= 0:
+                # tier has no G² mass: Θ' strictly decreases in I_m → unbounded;
+                # cap at a large interval (aggregation is pure overhead here).
+                new[i] = 1e6
+                continue
+            ka = 2.0 * kappa * d[m] * a_eff
+            kb = 3.0 * kappa * d[m] * b[m]
+            kc = b[m] * c_eff
+            if kc <= 0:
+                return None
+            new[i] = _cubic_positive_root(ka, kb, kc)
+        if np.max(np.abs(new - I)) < tol * (1.0 + np.max(np.abs(I))):
+            return new
+        I = new
+    return I
+
+
+def solve_ma(
+    problem: HsflProblem,
+    cuts: Sequence[int],
+    i_max: int = 10_000,
+) -> MaSolution:
+    """Optimal MA intervals for fixed cuts (Proposition 1 + enumeration)."""
+    M = problem.M
+    a = problem.split_T(cuts)
+    b = problem.agg_T(cuts)  # [M-1]
+    c, kappa = problem.constants()
+    d = problem.tier_d(cuts)[: M - 1]
+
+    best: Optional[MaSolution] = None
+
+    def consider(intervals: Tuple[int, ...]):
+        nonlocal best
+        th = problem.theta(list(intervals) + [1], cuts)
+        if th < (best.theta if best else INFEASIBLE):
+            best = MaSolution(tuple(intervals) + (1,), th)
+
+    tiers = list(range(M - 1))
+    for pinned in itertools.chain.from_iterable(
+        itertools.combinations(tiers, k) for k in range(M)
+    ):
+        free = [m for m in tiers if m not in pinned]
+        base = {m: 1 for m in pinned}
+        if not free:
+            consider(tuple(base[m] for m in tiers))
+            continue
+        pinned_b = float(sum(b[m] for m in pinned))
+        root = _newton_jacobi(a, b, c, kappa, d, free, pinned_b)
+        if root is None:
+            continue
+        # floor/ceil neighbourhood of the continuous stationary point
+        cands_per = [
+            sorted(
+                {
+                    int(np.clip(np.floor(r), 1, i_max)),
+                    int(np.clip(np.ceil(r), 1, i_max)),
+                }
+            )
+            for r in root
+        ]
+        for combo in itertools.product(*cands_per):
+            iv = dict(base)
+            iv.update({m: v for m, v in zip(free, combo)})
+            consider(tuple(iv[m] for m in tiers))
+
+    if best is None:
+        # No finite-interval schedule reaches ε: fall back to all-ones
+        # (most frequent aggregation = tightest bound).
+        ones = tuple([1] * (M - 1)) + (1,)
+        return MaSolution(ones, problem.theta(list(ones), cuts))
+    return best
+
+
+def solve_ma_bruteforce(
+    problem: HsflProblem, cuts: Sequence[int], i_max: int = 60
+) -> MaSolution:
+    """Exhaustive grid search (test oracle; exponential in M)."""
+    M = problem.M
+    best_iv, best_th = None, INFEASIBLE
+    for combo in itertools.product(range(1, i_max + 1), repeat=M - 1):
+        th = problem.theta(list(combo) + [1], cuts)
+        if th < best_th:
+            best_iv, best_th = tuple(combo) + (1,), th
+    if best_iv is None:
+        best_iv = tuple([1] * M)
+        best_th = problem.theta(list(best_iv), cuts)
+    return MaSolution(best_iv, best_th)

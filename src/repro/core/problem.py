@@ -1,0 +1,146 @@
+"""The joint MA+MS optimization problem P'' (Eq. 21–24) as an object.
+
+Bundles the three ingredients the solvers need:
+
+* ``LayerProfile``  — per-unit compute/communication quantities (Eq. 11–16),
+* ``SystemSpec``    — the multi-tier resource topology,
+* ``HyperSpec``     — the convergence-bound constants (Theorem 1),
+
+and exposes the exact objective
+
+    Θ'(I, μ) = (2ϑ/γ) · N(I, μ) / D(I, μ)
+    N = T_S(μ) + Σ_{m<M} T_{m,A}(μ) / I_m            (latency numerator)
+    D = c − κ · Σ_{m<M} 1{I_m>1} I_m² d_m(μ)         (bound denominator)
+
+with c, κ from ``bound_constants`` and d_m(μ) the tier-m sum of G_l².
+A schedule is *feasible* iff D > 0 (the bound can reach ε) and the memory
+constraint C5 holds.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .convergence import HyperSpec, bound_constants, tier_G2_sums
+from .latency import (
+    LayerProfile,
+    SystemSpec,
+    aggregation_latency,
+    memory_ok,
+    split_latency,
+)
+
+INFEASIBLE = float("inf")
+
+
+@dataclass(frozen=True)
+class HsflProblem:
+    profile: LayerProfile
+    system: SystemSpec
+    hyper: HyperSpec
+    eps: float
+
+    @property
+    def M(self) -> int:
+        return self.system.M
+
+    @property
+    def n_units(self) -> int:
+        return self.profile.n_units
+
+    # ------------------------------------------------------------------ #
+    # objective pieces
+    # ------------------------------------------------------------------ #
+    def constants(self) -> Tuple[float, float]:
+        """(c, κ) of the bound denominator."""
+        return bound_constants(self.hyper, self.eps)
+
+    def tier_d(self, cuts: Sequence[int]) -> np.ndarray:
+        """d_m(μ) = Σ_{l ∈ tier m} G_l² for all tiers."""
+        return tier_G2_sums(self.hyper.G2, cuts)
+
+    def split_T(self, cuts: Sequence[int]) -> float:
+        return split_latency(self.profile, self.system, cuts)
+
+    def agg_T(self, cuts: Sequence[int]) -> np.ndarray:
+        """b_m = T_{m,A} for tiers m < M."""
+        return np.array(
+            [
+                aggregation_latency(self.profile, self.system, cuts, m)
+                for m in range(self.M - 1)
+            ]
+        )
+
+    def numerator(self, intervals: Sequence[int], cuts: Sequence[int]) -> float:
+        b = self.agg_T(cuts)
+        return self.split_T(cuts) + float(
+            np.sum(b / np.asarray(intervals[: self.M - 1], dtype=float))
+        )
+
+    def denominator(self, intervals: Sequence[int], cuts: Sequence[int]) -> float:
+        c, kappa = self.constants()
+        d = self.tier_d(cuts)
+        s = sum(
+            (I**2) * dm
+            for I, dm in zip(intervals[: self.M - 1], d[: self.M - 1])
+            if I > 1
+        )
+        return c - kappa * s
+
+    def theta(self, intervals: Sequence[int], cuts: Sequence[int]) -> float:
+        """Exact Θ'(I, μ); +inf when infeasible (D ≤ 0 or C5 violated)."""
+        if not self.memory_feasible(cuts):
+            return INFEASIBLE
+        D = self.denominator(intervals, cuts)
+        if D <= 0:
+            return INFEASIBLE
+        return (
+            2.0
+            * self.hyper.theta0
+            / self.hyper.gamma
+            * self.numerator(intervals, cuts)
+            / D
+        )
+
+    def rounds(self, intervals: Sequence[int], cuts: Sequence[int]) -> Optional[float]:
+        """R(I, μ) of Corollary 1 (None if unreachable)."""
+        D = self.denominator(intervals, cuts)
+        if D <= 0:
+            return None
+        return 2.0 * self.hyper.theta0 / (self.hyper.gamma * D)
+
+    # ------------------------------------------------------------------ #
+    # constraints
+    # ------------------------------------------------------------------ #
+    def memory_feasible(self, cuts: Sequence[int]) -> bool:
+        return memory_ok(self.profile, self.system, cuts)
+
+    def valid_cuts(self, cuts: Sequence[int]) -> bool:
+        """C2–C4: M−1 non-decreasing boundaries within [0, U]."""
+        if len(cuts) != self.M - 1:
+            return False
+        prev = 0
+        for cval in cuts:
+            if cval < prev or cval > self.n_units:
+                return False
+            prev = cval
+        return True
+
+    def iter_cut_vectors(
+        self, min_tier_units: int = 1
+    ) -> Iterator[Tuple[int, ...]]:
+        """All C2–C4-valid cut vectors with every tier holding at least
+        ``min_tier_units`` units (the paper requires each tier non-empty so
+        the split actually spans the hierarchy)."""
+        U, M = self.n_units, self.M
+        rng = range(min_tier_units, U - min_tier_units * (M - 1) + 1)
+        for cuts in itertools.combinations(rng, M - 1):
+            ok = all(
+                cuts[i + 1] - cuts[i] >= min_tier_units
+                for i in range(len(cuts) - 1)
+            )
+            if ok:
+                yield cuts

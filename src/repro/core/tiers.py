@@ -1,0 +1,226 @@
+"""Tier plans: HSFL's model-splitting + multi-timescale aggregation schedule.
+
+A ``TierPlan`` captures the paper's (μ, I) decisions plus the entity topology:
+
+* ``cuts``       — M-1 unit boundaries; tier m owns units [cuts[m-1], cuts[m])
+                   (frontend ∈ tier 1, head ∈ tier M).
+* ``intervals``  — I_m per tier; I_M is forced to 1 (single cloud server).
+* ``levels``     — generalized aggregation schedule: per tier, a list of
+                   (num_groups, interval) levels applied round-robin. The
+                   paper's scheme is [(J_m, 1), (1, I_m)] (entity sync every
+                   round — Eq. 3; fed-server aggregation every I_m — Eq. 4).
+                   Multi-pod adds a pod level, e.g. tier M: [(P, 1), (1, I_pod)].
+
+Synchronization operates on client-stacked parameter pytrees (axis 0 = client).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Params = Dict[str, Any]
+
+
+@dataclass(frozen=True)
+class TierPlan:
+    n_units: int
+    num_clients: int
+    cuts: Tuple[int, ...]          # len M-1, non-decreasing, in [0, n_units]
+    intervals: Tuple[int, ...]     # len M (last forced 1)
+    entities: Tuple[int, ...]      # J_m per tier; J_1 = num_clients, J_M = 1
+    pod_interval: int = 0          # >0: extra cross-pod level on the top tier
+    num_pods: int = 1
+
+    def __post_init__(self):
+        M = len(self.intervals)
+        assert len(self.cuts) == M - 1, (self.cuts, self.intervals)
+        assert all(
+            self.cuts[i] <= self.cuts[i + 1] for i in range(len(self.cuts) - 1)
+        ), f"cuts must be non-decreasing (C4): {self.cuts}"
+        assert all(0 <= c <= self.n_units for c in self.cuts)
+        assert self.intervals[-1] == 1, "top tier is always synchronized"
+        assert len(self.entities) == M
+        for j in self.entities:
+            assert self.num_clients % j == 0, (self.entities, self.num_clients)
+
+    @property
+    def M(self) -> int:
+        return len(self.intervals)
+
+    def tier_bounds(self, m: int) -> Tuple[int, int]:
+        """Unit range [lo, hi) of tier m (0-indexed)."""
+        lo = 0 if m == 0 else self.cuts[m - 1]
+        hi = self.n_units if m == self.M - 1 else self.cuts[m]
+        return lo, hi
+
+    def tier_of_unit(self, u: int) -> int:
+        for m in range(self.M):
+            lo, hi = self.tier_bounds(m)
+            if lo <= u < hi:
+                return m
+        return self.M - 1
+
+    def levels(self, m: int) -> List[Tuple[int, int]]:
+        """Aggregation levels (num_groups, interval) for tier m."""
+        lv: List[Tuple[int, int]] = []
+        if self.entities[m] < self.num_clients:
+            lv.append((self.entities[m], 1))  # Eq. (3): entity-local, per-round
+        if m == self.M - 1:
+            if self.pod_interval > 0 and self.num_pods > 1:
+                # per-pod logical cloud every round; cross-pod at I_pod
+                lv = [(self.num_pods, 1), (1, self.pod_interval)]
+            else:
+                lv.append((1, 1))
+        else:
+            lv.append((1, int(self.intervals[m])))  # Eq. (4): fed server
+        return lv
+
+
+# --------------------------------------------------------------------------- #
+# pytree partition by tier
+# --------------------------------------------------------------------------- #
+
+
+def _slice_units(units: Any, lo: int, hi: int) -> Any:
+    """Slice a unit container (stacked arrays: axis *after* the client axis,
+    or python list) to the range [lo, hi)."""
+    if isinstance(units, (list, tuple)):
+        return list(units)[lo:hi]
+    if isinstance(units, dict) and set(units) == {"enc", "dec"}:
+        # audio: two stacks laid out enc ++ dec
+        out = {}
+        ne = jax.tree.leaves(units["enc"])[0].shape[1]
+        e_lo, e_hi = min(lo, ne), min(hi, ne)
+        d_lo, d_hi = max(lo, ne) - ne, max(hi, ne) - ne
+        out["enc"] = jax.tree.map(lambda x: x[:, e_lo:e_hi], units["enc"])
+        out["dec"] = jax.tree.map(lambda x: x[:, d_lo:d_hi], units["dec"])
+        return out
+    return jax.tree.map(lambda x: x[:, lo:hi], units)
+
+
+def tier_subtrees(params: Params, plan: TierPlan) -> List[Params]:
+    """Split a client-stacked model pytree into per-tier pytrees (views)."""
+    parts: List[Params] = []
+    for m in range(plan.M):
+        lo, hi = plan.tier_bounds(m)
+        part: Params = {"units": _slice_units(params["units"], lo, hi)}
+        if m == 0:
+            part["frontend"] = params["frontend"]
+        if m == plan.M - 1:
+            part["head"] = params["head"]
+        parts.append(part)
+    return parts
+
+
+def combine_tiers(parts: List[Params], template: Params) -> Params:
+    """Inverse of tier_subtrees (same cut structure)."""
+    units_parts = [p["units"] for p in parts]
+    tu = template["units"]
+    if isinstance(tu, (list, tuple)):
+        units = [u for part in units_parts for u in part]
+    elif isinstance(tu, dict) and set(tu) == {"enc", "dec"}:
+        units = {
+            "enc": _concat_stacks([p["enc"] for p in units_parts]),
+            "dec": _concat_stacks([p["dec"] for p in units_parts]),
+        }
+    else:
+        units = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=1), *units_parts)
+    out = {"units": units, "frontend": parts[0]["frontend"], "head": parts[-1]["head"]}
+    return out
+
+
+def _concat_stacks(stacks: List[Any]) -> Any:
+    stacks = [s for s in stacks if jax.tree.leaves(s)]
+    if len(stacks) == 1:
+        return stacks[0]
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=1), *stacks)
+
+
+# --------------------------------------------------------------------------- #
+# synchronization (the HSFL aggregation schedule, Eqs. 3–4)
+# --------------------------------------------------------------------------- #
+
+
+def _group_mean(tree: Params, groups: int) -> Params:
+    """Mean over client groups, broadcast back. Leaves: [N, ...]."""
+
+    def f(x):
+        n = x.shape[0]
+        g = x.reshape(groups, n // groups, *x.shape[1:])
+        m = jnp.mean(g, axis=1, keepdims=True, dtype=jnp.float32).astype(x.dtype)
+        return jnp.broadcast_to(m, g.shape).reshape(x.shape)
+
+    return jax.tree.map(f, tree)
+
+
+def synchronize(
+    params: Params, plan: TierPlan, step: jax.Array, *, fed_round=None
+) -> Params:
+    """Apply the per-tier aggregation schedule at round ``step`` (post-update).
+
+    Rounds are 1-indexed in the paper; we sync when (step+1) % I == 0 so that
+    interval I=k aggregates after every k-th update.
+
+    ``fed_round`` specializes the interval-gated (I_m > 1) fed-server levels:
+      * None — dynamic ``lax.cond`` on the step counter (single compiled
+        step; both branches live in the HLO, so the hot path carries the
+        fed-server collectives even though they amortize 1/I_m at runtime);
+      * bool or per-tier sequence of bools — compile the round variant where
+        tier m's fed-server level is applied iff ``fed_round[m]``. The
+        production dispatch picks the variant ``tuple((t+1) % I_m == 0)``
+        per round — at most 2^(M-1) compiled steps, typically 2-3 since
+        optimal intervals nest (paper's Insight after Eq. 37).
+    Specializing step functions instead of branching in-graph is the
+    production path (see EXPERIMENTS.md sect. Perf).
+    """
+    parts = tier_subtrees(params, plan)
+    if fed_round is not None and not isinstance(fed_round, (tuple, list)):
+        fed_round = (bool(fed_round),) * plan.M
+    out_parts: List[Params] = []
+    for m, part in enumerate(parts):
+        for groups, interval in plan.levels(m):
+            if interval <= 1:
+                part = _group_mean(part, groups)
+            elif fed_round is None:
+                do = (step + 1) % interval == 0
+                part = lax.cond(
+                    do, lambda p: _group_mean(p, groups), lambda p: p, part
+                )
+            elif fed_round[m]:
+                part = _group_mean(part, groups)
+            # fed_round[m] is False -> skip tier m's fed-server level
+        out_parts.append(part)
+    return combine_tiers(out_parts, params)
+
+
+def default_plan(
+    n_units: int,
+    num_clients: int = 16,
+    cuts: Tuple[int, ...] = None,
+    intervals: Tuple[int, ...] = None,
+    entities: Tuple[int, ...] = None,
+    num_pods: int = 1,
+    pod_interval: int = 0,
+) -> TierPlan:
+    """Paper-style 3-tier client-edge-cloud plan with sensible defaults."""
+    if cuts is None:
+        c1 = max(1, n_units // 5)
+        c2 = max(c1, n_units // 2)
+        cuts = (c1, c2)
+    if intervals is None:
+        intervals = (8, 4, 1)
+    if entities is None:
+        entities = (num_clients, max(1, num_clients // 4), 1)
+    return TierPlan(
+        n_units=n_units,
+        num_clients=num_clients,
+        cuts=tuple(cuts),
+        intervals=tuple(intervals),
+        entities=tuple(entities),
+        num_pods=num_pods,
+        pod_interval=pod_interval,
+    )

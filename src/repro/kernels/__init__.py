@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the compute/memory hot-spots HSFL owns:
+#   tiered_aggregate -- fused two-level (Eq. 3 + Eq. 4) parameter aggregation
+#   swa_attention    -- blocked sliding-window flash attention (long_500k path)
+# Each package ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+# wrapper with custom_vjp where needed), and ref.py (pure-jnp oracle).
+from .tiered_aggregate import tiered_aggregate, tiered_aggregate_ref
+from .swa_attention import swa_attention, swa_attention_ref

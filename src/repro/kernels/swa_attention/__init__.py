@@ -1,0 +1,2 @@
+from .ops import swa_attention
+from .ref import swa_attention_ref

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for causal sliding-window attention (GQA).
+
+q [B, S, H, hd]; k, v [B, S, K, hd] with H = G·K. A query at position p
+attends keys in (p − window, p] (causal, window inclusive of self).
+window=0 means full causal attention.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def swa_attention_ref(q, k, v, window: int = 0):
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qf = q.astype(jnp.float32) / math.sqrt(hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qg = qf.reshape(B, S, K, G, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, kf)
+    pos = jnp.arange(S)
+    ok = pos[None, :] <= pos[:, None]
+    if window > 0:
+        ok = ok & (pos[None, :] > pos[:, None] - window)
+    scores = jnp.where(ok[None, None, None], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, vf)
+    return out.reshape(B, S, H, hd).astype(q.dtype)

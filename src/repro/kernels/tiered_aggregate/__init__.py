@@ -1,0 +1,2 @@
+from .ops import tiered_aggregate
+from .ref import tiered_aggregate_ref

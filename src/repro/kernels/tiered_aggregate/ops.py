@@ -1,0 +1,61 @@
+"""jit'd public wrapper: apply the fused aggregation to whole pytrees.
+
+``aggregate_tree`` flattens a client-stacked pytree (leaves [N, ...]) into
+one [N, P] buffer view per leaf, runs the kernel, and reassembles —
+exactly what ``tiers.synchronize`` does per (tier, level), but in one fused
+HBM pass per leaf. On CPU (tests / this container) ``interpret=True`` runs
+the same kernel body in Python; on TPU set ``interpret=False``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .ref import tiered_aggregate_ref
+from .tiered_aggregate import tiered_aggregate_pallas
+
+
+@partial(jax.jit, static_argnames=("num_entities", "use_pallas", "interpret"))
+def tiered_aggregate(
+    x: jax.Array,
+    weights: jax.Array,
+    do_entity: jax.Array,
+    do_global: jax.Array,
+    num_entities: int,
+    use_pallas: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    """[N, P] fused two-level aggregation (see ref.py for semantics)."""
+    do_entity = jnp.asarray(do_entity)
+    do_global = jnp.asarray(do_global)
+    if use_pallas:
+        return tiered_aggregate_pallas(
+            x, weights, do_entity, do_global, num_entities, interpret=interpret
+        )
+    return tiered_aggregate_ref(x, weights, do_entity, do_global, num_entities)
+
+
+def aggregate_tree(
+    tree: Any,
+    weights: jax.Array,
+    do_entity: jax.Array,
+    do_global: jax.Array,
+    num_entities: int,
+    use_pallas: bool = True,
+    interpret: bool = True,
+) -> Any:
+    """Apply the fused aggregation leaf-wise to a client-stacked pytree."""
+
+    def f(x):
+        n = x.shape[0]
+        flat = x.reshape(n, -1)
+        out = tiered_aggregate(
+            flat, weights, do_entity, do_global, num_entities,
+            use_pallas=use_pallas, interpret=interpret,
+        )
+        return out.reshape(x.shape)
+
+    return jax.tree.map(f, tree)

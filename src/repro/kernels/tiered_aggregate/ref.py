@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the fused two-level HSFL aggregation (Eqs. 3–4).
+
+Semantics (one tier's parameter shard, client-stacked):
+
+    x        [N, P]   per-client parameter values
+    weights  [N]      fed-server aggregation weights (N_m^j/N expanded to
+                      clients; uniform = 1/N), must sum to 1
+    do_entity scalar  bool — apply Eq. (3) entity-local mean (every round)
+    do_global scalar  bool — apply Eq. (4) fed-server weighted mean (at I_m)
+
+    y1 = do_entity ? mean within each of the J contiguous client groups : x
+    y2 = do_global ? Σ_n w_n · y1_n  (broadcast back)                  : y1
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def tiered_aggregate_ref(x, weights, do_entity, do_global, num_entities: int):
+    N, P = x.shape
+    J = num_entities
+    per = N // J
+    xf = x.astype(jnp.float32)
+    grouped = xf.reshape(J, per, P)
+    emean = jnp.broadcast_to(
+        jnp.mean(grouped, axis=1, keepdims=True), grouped.shape
+    ).reshape(N, P)
+    y1 = jnp.where(do_entity, emean, xf)
+    w = weights.astype(jnp.float32)[:, None]
+    gmean = jnp.sum(y1 * w, axis=0, keepdims=True)
+    y2 = jnp.where(do_global, jnp.broadcast_to(gmean, y1.shape), y1)
+    return y2.astype(x.dtype)

@@ -1,0 +1,46 @@
+"""Production meshes (TPU v5e target).
+
+Single pod:  (data=16, model=16)          = 256 chips
+Multi-pod:   (pod=2, data=16, model=16)   = 512 chips
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS *before* any jax initialization).
+The HSFL mapping (DESIGN.md §2): one index of the client axis — `data`,
+or (`pod`, `data`) in multi-pod — hosts one client's parameter replicas;
+`model` is Megatron-style tensor parallelism inside every tier; the `pod`
+axis is an additional HSFL hierarchy level whose aggregation interval the
+MA solver prices with DCN (not ICI) constants.
+"""
+from __future__ import annotations
+
+import jax
+
+POD_SHAPE = (16, 16)
+MULTIPOD_SHAPE = (2, 16, 16)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = MULTIPOD_SHAPE if multi_pod else POD_SHAPE
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def client_axes(multi_pod: bool = False):
+    """Mesh axes the client-stacked parameter axis is sharded over."""
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def num_clients(multi_pod: bool = False) -> int:
+    """One HSFL client per (pod, data) index."""
+    import math
+
+    shape = MULTIPOD_SHAPE if multi_pod else POD_SHAPE
+    return math.prod(shape) // shape[-1]
+
+
+def make_debug_mesh(data: int = 2, model: int = 2, pods: int = 0):
+    """Tiny host-device mesh for tests (requires the caller to have set
+    --xla_force_host_platform_device_count accordingly)."""
+    if pods:
+        return jax.make_mesh((pods, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,8 @@
+from .spec import ModelSpec, MoeSpec, SsmSpec
+from .model import SplittableModel
+from .vgg import VggModel, VggSpec, build_model
+
+__all__ = [
+    "ModelSpec", "MoeSpec", "SsmSpec", "SplittableModel",
+    "VggModel", "VggSpec", "build_model",
+]

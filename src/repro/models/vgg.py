@@ -1,0 +1,185 @@
+"""VGG-16 (the paper's experimental model, Sec. VII) as a SplittableModel.
+
+Units are the 13 conv layers + 3 FC layers = 16 cut-indexable units, matching
+the paper's cut-layer sweep (Fig. 2c uses cuts 1..14, L1=3 / L2=8 defaults).
+Unlike the LLM zoo the units are heterogeneous, so they are kept as a python
+list (the HSFL engine supports both stacked and listed unit containers).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import cross_entropy
+
+Params = Dict[str, Any]
+
+
+@dataclass(frozen=True)
+class VggSpec:
+    name: str
+    conv_channels: Tuple[int, ...]
+    pool_after: Tuple[int, ...]  # conv indices followed by a 2x2 max-pool
+    fc_dims: Tuple[int, ...]
+    image_size: int
+    in_channels: int
+    num_classes: int
+    family: str = "vgg"
+    param_dtype: str = "float32"
+
+    @property
+    def n_units(self) -> int:
+        return len(self.conv_channels) + len(self.fc_dims)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def _feature_hw(self) -> int:
+        hw = self.image_size
+        for _ in self.pool_after:
+            hw //= 2
+        return hw
+
+    def unit_io(self, unit: int) -> Tuple[int, int, int]:
+        """(in_dim, out_dim, spatial_hw_after) for analytic cost accounting."""
+        ncv = len(self.conv_channels)
+        hw = self.image_size
+        if unit < ncv:
+            cin = self.in_channels if unit == 0 else self.conv_channels[unit - 1]
+            for i in range(unit + 1):
+                if i in self.pool_after and i < unit:
+                    pass
+            # spatial size after this unit
+            pools = sum(1 for p in self.pool_after if p <= unit)
+            hw_out = self.image_size // (2**pools)
+            return cin, self.conv_channels[unit], hw_out
+        fi = unit - ncv
+        fhw = self._feature_hw()
+        in_dim = (
+            self.conv_channels[-1] * fhw * fhw if fi == 0 else self.fc_dims[fi - 1]
+        )
+        return in_dim, self.fc_dims[fi], 1
+
+    # analytic per-unit accounting for the HSFL latency model ------------- #
+    def unit_param_count(self, unit: int) -> int:
+        ncv = len(self.conv_channels)
+        cin, cout, _ = self.unit_io(unit)
+        if unit < ncv:
+            return 9 * cin * cout + cout
+        return cin * cout + cout
+
+    def unit_flops_fwd(self, unit: int, batch: int, seq: int = 1) -> float:
+        ncv = len(self.conv_channels)
+        cin, cout, hw = self.unit_io(unit)
+        if unit < ncv:
+            pools_before = sum(1 for p in self.pool_after if p < unit)
+            hw_in = self.image_size // (2**pools_before)
+            return 2.0 * batch * hw_in * hw_in * 9 * cin * cout
+        return 2.0 * batch * cin * cout
+
+    def unit_act_bytes(self, batch: int, seq: int = 1, bytes_per: int = 4) -> int:
+        # conservative: activation at unit boundaries varies; use max conv map
+        return batch * self.image_size * self.image_size * self.conv_channels[0] * bytes_per
+
+    def unit_act_bytes_at(self, unit: int, batch: int, bytes_per: int = 4) -> int:
+        ncv = len(self.conv_channels)
+        if unit < ncv:
+            _, cout, hw = self.unit_io(unit)
+            return batch * hw * hw * cout * bytes_per
+        _, dout, _ = self.unit_io(unit)
+        return batch * dout * bytes_per
+
+    def frontend_param_count(self) -> int:
+        return 0
+
+    def head_param_count(self) -> int:
+        return 0
+
+    def total_param_count(self) -> int:
+        return sum(self.unit_param_count(u) for u in range(self.n_units))
+
+    def active_param_count(self) -> int:
+        return self.total_param_count()
+
+
+class VggModel:
+    def __init__(self, spec: VggSpec):
+        self.spec = spec
+
+    def init_params(self, key) -> Params:
+        spec = self.spec
+        units: List[Params] = []
+        ncv = len(spec.conv_channels)
+        keys = jax.random.split(key, spec.n_units)
+        for u in range(spec.n_units):
+            cin, cout, _ = spec.unit_io(u)
+            if u < ncv:
+                w = jax.random.normal(keys[u], (3, 3, cin, cout)) * math.sqrt(
+                    2.0 / (9 * cin)
+                )
+            else:
+                w = jax.random.normal(keys[u], (cin, cout)) * math.sqrt(2.0 / cin)
+            units.append(
+                {"w": w.astype(spec.pdtype), "b": jnp.zeros((cout,), spec.pdtype)}
+            )
+        return {"frontend": {}, "units": units, "head": {}}
+
+    def apply_units(self, units, carry: Params, lo: int, hi: int, **_) -> Params:
+        spec = self.spec
+        h = carry["h"]
+        ncv = len(spec.conv_channels)
+        for u in range(lo, hi):
+            p = units[u]
+            if u < ncv:
+                h = lax.conv_general_dilated(
+                    h, p["w"], (1, 1), "SAME",
+                    dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                ) + p["b"]
+                h = jax.nn.relu(h)
+                if u in spec.pool_after:
+                    h = lax.reduce_window(
+                        h, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+                    )
+            else:
+                if u == ncv:
+                    h = h.reshape(h.shape[0], -1)
+                h = h @ p["w"] + p["b"]
+                if u < spec.n_units - 1:
+                    h = jax.nn.relu(h)
+        out = dict(carry)
+        out["h"] = h
+        return out
+
+    def frontend_apply(self, frontend, batch) -> Params:
+        return {"h": batch["images"], "aux": jnp.zeros((), jnp.float32)}
+
+    def head_apply(self, params, carry) -> jax.Array:
+        return carry["h"]
+
+    def forward(self, params, batch):
+        carry = self.frontend_apply(params["frontend"], batch)
+        carry = self.apply_units(params["units"], carry, 0, self.spec.n_units)
+        return self.head_apply(params, carry), carry["aux"]
+
+    def loss_fn(self, params, batch) -> jax.Array:
+        logits, _ = self.forward(params, batch)
+        return cross_entropy(logits, batch["labels"])
+
+    def accuracy(self, params, batch) -> jax.Array:
+        logits, _ = self.forward(params, batch)
+        return jnp.mean((jnp.argmax(logits, -1) == batch["labels"]).astype(jnp.float32))
+
+
+def build_model(spec):
+    """Factory accepting either ModelSpec or VggSpec."""
+    if isinstance(spec, VggSpec):
+        return VggModel(spec)
+    from .model import SplittableModel
+
+    return SplittableModel(spec)

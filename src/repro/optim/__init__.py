@@ -1,0 +1,3 @@
+from .optimizers import Optimizer, sgd, momentum, adam, opt_state_bytes_per_param
+
+__all__ = ["Optimizer", "sgd", "momentum", "adam", "opt_state_bytes_per_param"]

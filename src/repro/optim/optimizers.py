@@ -1,0 +1,77 @@
+"""Minimal optimizer library (optax is not available offline).
+
+Optimizers are (init, update) pairs over pytrees. The HSFL memory constraint
+C5 prices optimizer state, so each optimizer reports bytes-per-parameter.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+OptState = Any
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Params], OptState]
+    update: Callable[[Params, Params, OptState], Tuple[Params, OptState]]
+    state_bytes_per_param: float  # for constraint C5
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(params, grads, state):
+        new = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, grads)
+        return new, state
+
+    return Optimizer("sgd", init, update, 0.0)
+
+
+def momentum(lr: float, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(params, grads, state):
+        new_m = jax.tree.map(lambda m, g: beta * m + g.astype(m.dtype), state, grads)
+        new_p = jax.tree.map(lambda p, m: p - lr * m.astype(p.dtype), params, new_m)
+        return new_p, new_m
+
+    return Optimizer("momentum", init, update, 4.0)
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return {"m": z, "v": jax.tree.map(jnp.zeros_like, z), "t": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state):
+        t = state["t"] + 1
+        m = jax.tree.map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32), state["m"], grads
+        )
+        v = jax.tree.map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads,
+        )
+        tf = t.astype(jnp.float32)
+        c1 = 1.0 - b1**tf
+        c2 = 1.0 - b2**tf
+        new_p = jax.tree.map(
+            lambda p, m_, v_: p
+            - (lr * (m_ / c1) / (jnp.sqrt(v_ / c2) + eps)).astype(p.dtype),
+            params, m, v,
+        )
+        return new_p, {"m": m, "v": v, "t": t}
+
+    return Optimizer("adam", init, update, 8.0)
+
+
+def opt_state_bytes_per_param(name: str) -> float:
+    return {"sgd": 0.0, "momentum": 4.0, "adam": 8.0}[name]

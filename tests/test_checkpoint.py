@@ -1,0 +1,53 @@
+"""npz checkpoint roundtrip + failure modes."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+
+
+def tree(key=0):
+    k = jax.random.PRNGKey(key)
+    return {
+        "frontend": {"embed": jax.random.normal(k, (4, 8))},
+        "units": {"w": jnp.arange(24.0).reshape(2, 3, 4)},
+        "list": [jnp.ones((2,)), jnp.zeros((3,), jnp.int32)],
+    }
+
+
+def test_roundtrip(tmp_path):
+    t = tree()
+    p = str(tmp_path / "ck.npz")
+    save_checkpoint(p, t, step=42, meta={"cuts": [3, 8], "intervals": [140, 20, 1]})
+    t2, step, meta = load_checkpoint(p, tree(key=1))
+    assert step == 42
+    assert meta == {"cuts": [3, 8], "intervals": [140, 20, 1]}
+    for a, b in zip(jax.tree.leaves(t2), jax.tree.leaves(t)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype
+
+
+def test_missing_leaf_fails(tmp_path):
+    p = str(tmp_path / "ck.npz")
+    save_checkpoint(p, {"a": jnp.ones(3)}, step=1)
+    with pytest.raises(KeyError):
+        load_checkpoint(p, {"a": jnp.ones(3), "b": jnp.ones(2)})
+
+
+def test_shape_mismatch_fails(tmp_path):
+    p = str(tmp_path / "ck.npz")
+    save_checkpoint(p, {"a": jnp.ones(3)}, step=1)
+    with pytest.raises(ValueError):
+        load_checkpoint(p, {"a": jnp.ones(4)})
+
+
+def test_atomic_overwrite(tmp_path):
+    p = str(tmp_path / "ck.npz")
+    save_checkpoint(p, {"a": jnp.zeros(2)}, step=1)
+    save_checkpoint(p, {"a": jnp.ones(2)}, step=2)
+    t, step, _ = load_checkpoint(p, {"a": jnp.zeros(2)})
+    assert step == 2 and np.all(np.asarray(t["a"]) == 1)
+    assert not [f for f in os.listdir(tmp_path) if f.endswith(".tmp.npz")]

@@ -1,0 +1,68 @@
+"""Theorem 1 / Corollary 1 behaviour."""
+import numpy as np
+import pytest
+
+from repro.core.convergence import (
+    HyperSpec, corollary1_rounds, synthetic_hyperspec, theorem1_bound,
+    tier_G2_sums, bound_constants,
+)
+
+
+@pytest.fixture
+def hp():
+    return synthetic_hyperspec(n_units=12, num_clients=20, beta=5.0, seed=0)
+
+
+def test_tier_g2_sums(hp):
+    d = tier_G2_sums(hp.G2, (3, 8))
+    assert d.shape == (3,)
+    np.testing.assert_allclose(d.sum(), hp.G2.sum(), rtol=1e-12)
+    np.testing.assert_allclose(d[0], hp.G2[:3].sum(), rtol=1e-12)
+
+
+def test_bound_monotone_in_intervals(hp):
+    """Insight 1: shorter aggregation intervals tighten the bound."""
+    prev = None
+    for I1 in [1, 2, 4, 8, 16]:
+        b = theorem1_bound(hp, R=1000, intervals=[I1, 2, 1], cuts=(4, 8))
+        if prev is not None:
+            assert b >= prev
+        prev = b
+
+
+def test_bound_monotone_in_rounds(hp):
+    bs = [theorem1_bound(hp, R, [2, 2, 1], (4, 8)) for R in [10, 100, 1000]]
+    assert bs[0] > bs[1] > bs[2]
+
+
+def test_bound_indicator_at_one(hp):
+    """I=1 tiers contribute no drift term (the 1{I>1} indicator)."""
+    b1 = theorem1_bound(hp, 100, [1, 1, 1], (4, 8))
+    # residual = first two terms only
+    c, kappa = bound_constants(hp, 0.0)
+    expected = 2 * hp.theta0 / (hp.gamma * 100) + (-c)
+    np.testing.assert_allclose(b1, expected, rtol=1e-9)
+
+
+def test_cut_shifts_g2_between_tiers(hp):
+    """Insight 2: moving the cut moves G_l^2 mass between interval classes."""
+    deep = theorem1_bound(hp, 1000, [8, 1, 1], (10, 11))
+    shallow = theorem1_bound(hp, 1000, [8, 1, 1], (1, 11))
+    # deeper cut_1 puts more layers under the slow I=8 tier -> looser bound
+    assert deep > shallow
+
+
+def test_corollary_rounds(hp):
+    eps = theorem1_bound(hp, 500, [2, 2, 1], (4, 8))
+    R = corollary1_rounds(hp, eps, [2, 2, 1], (4, 8))
+    np.testing.assert_allclose(R, 500, rtol=1e-6)
+    assert corollary1_rounds(hp, 1e-12, [2, 2, 1], (4, 8)) is None
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_bound_positive_property(seed):
+    hp = synthetic_hyperspec(10, 16, seed=seed)
+    rng = np.random.default_rng(seed)
+    I = [int(rng.integers(1, 30)), int(rng.integers(1, 30)), 1]
+    cuts = tuple(sorted(rng.integers(0, 11, 2)))
+    assert theorem1_bound(hp, int(rng.integers(1, 10**6)), I, cuts) > 0

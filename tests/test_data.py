@@ -1,0 +1,84 @@
+"""Data pipeline: synthetic sets, partitioners, federated loader."""
+import numpy as np
+import pytest
+
+from repro.data import (
+    FederatedLoader, image_loader, label_skew, lm_loader, make_cifar10_like,
+    make_lm_stream, make_mnist_like, partition_iid, partition_sort_and_shard,
+)
+
+
+def test_dataset_shapes():
+    c = make_cifar10_like(128)
+    assert c.images.shape == (128, 32, 32, 3) and c.labels.shape == (128,)
+    m = make_mnist_like(64)
+    assert m.images.shape == (64, 28, 28, 1)
+    lm = make_lm_stream(32, seq=16, vocab=100)
+    assert lm.tokens.shape == (32, 17)
+    assert lm.tokens.max() < 100
+
+
+def test_lm_stream_learnable_structure():
+    """Bigram chain: successor entropy << uniform (dataset is learnable)."""
+    lm = make_lm_stream(512, seq=32, vocab=64, branching=4)
+    succ = {}
+    for row in lm.tokens:
+        for a, b in zip(row[:-1], row[1:]):
+            succ.setdefault(int(a), set()).add(int(b))
+    avg_branch = np.mean([len(v) for v in succ.values()])
+    assert avg_branch <= 4.5  # ~branching, far below vocab=64
+
+
+@pytest.mark.parametrize("partitioner", ["iid", "shard"])
+def test_partitions_disjoint_and_cover(partitioner):
+    ds = make_cifar10_like(400)
+    if partitioner == "iid":
+        parts = partition_iid(len(ds), 20)
+    else:
+        parts = partition_sort_and_shard(ds.labels, 20, 2)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == 400
+    assert len(np.unique(allidx)) == 400
+
+
+def test_non_iid_skew_exceeds_iid():
+    ds = make_cifar10_like(2000)
+    iid = partition_iid(len(ds), 20)
+    nid = partition_sort_and_shard(ds.labels, 20, 2)
+    assert label_skew(ds.labels, nid) > 3 * label_skew(ds.labels, iid)
+
+
+def test_sort_and_shard_limits_classes_per_client():
+    ds = make_cifar10_like(2000)
+    parts = partition_sort_and_shard(ds.labels, 20, 2)
+    n_classes = [len(np.unique(ds.labels[p])) for p in parts]
+    assert max(n_classes) <= 4  # 2 shards -> at most ~2-3 classes
+
+
+def test_loader_layout_and_determinism():
+    ds = make_cifar10_like(200)
+    parts = partition_iid(len(ds), 10)
+    l1 = image_loader(ds, parts, batch=4, seed=7)
+    l2 = image_loader(ds, parts, batch=4, seed=7)
+    b1, b2 = l1.next_round(), l2.next_round()
+    assert b1["images"].shape == (10, 4, 32, 32, 3)
+    assert b1["labels"].shape == (10, 4)
+    np.testing.assert_array_equal(b1["images"], b2["images"])
+
+
+def test_loader_samples_within_partition():
+    ds = make_cifar10_like(300)
+    parts = partition_sort_and_shard(ds.labels, 10, 2)
+    loader = image_loader(ds, parts, batch=8)
+    batch = loader.next_round()
+    for n in range(10):
+        allowed = set(np.unique(ds.labels[parts[n]]))
+        assert set(np.unique(batch["labels"][n])) <= allowed
+
+
+def test_lm_loader_labels_are_shifted_tokens():
+    lm = make_lm_stream(64, seq=16, vocab=50)
+    loader = lm_loader(lm, partition_iid(64, 4), batch=4)
+    b = loader.next_round()
+    assert b["tokens"].shape == (4, 4, 16)
+    assert b["labels"].shape == (4, 4, 16)

@@ -1,0 +1,62 @@
+"""Bound-constant estimator (beta, sigma^2, G^2, theta0) on a probe run."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.configs.shapes import concrete_inputs
+from repro.core import build_train_step_a, init_state_a
+from repro.core.estimator import HyperEstimator, _unit_sq_norms
+from repro.core.tiers import default_plan
+from repro.models.model import SplittableModel
+from repro.optim import sgd
+
+
+def test_unit_sq_norms_partition():
+    """Per-unit squared norms sum to the global squared norm."""
+    key = jax.random.PRNGKey(0)
+    N, U = 4, 6
+    tree = {
+        "frontend": {"e": jax.random.normal(key, (N, 5))},
+        "units": {"w": jax.random.normal(jax.random.fold_in(key, 1), (N, U, 3, 3))},
+        "head": {"h": jax.random.normal(jax.random.fold_in(key, 2), (N, 2))},
+    }
+    sq = _unit_sq_norms(tree, U)
+    assert sq.shape == (N, U)
+    total = sum(float(jnp.sum(x**2)) for x in jax.tree.leaves(tree))
+    np.testing.assert_allclose(float(jnp.sum(sq)), total, rtol=1e-5)
+
+
+def test_estimator_on_probe_run():
+    spec = get_reduced("smollm-135m")
+    model = SplittableModel(spec)
+    N = 4
+    plan = default_plan(spec.n_units, N, entities=(N, 2, 1))
+    opt = sgd(1e-2)
+    state = init_state_a(model, plan, opt, jax.random.PRNGKey(0))
+    step = jax.jit(build_train_step_a(model, plan, opt))
+    grad_fn = jax.jit(lambda p, b: jax.vmap(jax.value_and_grad(model.loss_fn))(p, b))
+    est = HyperEstimator(plan.n_units, N, gamma=1e-2)
+    for t in range(4):
+        batch = concrete_inputs(spec, N * 2, 16, jax.random.PRNGKey(t))
+        batch = {k: v.reshape(N, 2, *v.shape[1:]) for k, v in batch.items()}
+        losses, grads = grad_fn(state.params, batch)
+        est.observe(state.params, grads, float(jnp.mean(losses)))
+        state, _ = step(state, batch)
+    hp = est.hyperspec()
+    assert hp.G2.shape == (plan.n_units,)
+    assert np.all(hp.G2 > 0)
+    assert np.all(hp.sigma2 >= 0)
+    # non-IID client batches: variance is strictly positive somewhere
+    assert hp.sigma2.sum() > 0
+    assert hp.beta > 0 and np.isfinite(hp.beta)
+    assert hp.theta0 > 0
+    # variance can never exceed the second moment (Assumption 2 structure)
+    assert np.all(hp.sigma2 <= hp.G2 + 1e-9)
+
+
+def test_estimator_requires_observations():
+    est = HyperEstimator(4, 2, 1e-3)
+    with pytest.raises(ValueError):
+        est.hyperspec()

@@ -1,0 +1,67 @@
+"""Latency model Eqs. (11)-(19) against hand-computed values."""
+import numpy as np
+import pytest
+
+from repro.configs.vgg16_cifar10 import SPEC as VGG
+from repro.core.latency import (
+    SystemSpec, aggregation_latency, build_profile, memory_ok, split_latency,
+    total_latency,
+)
+
+
+def uniform_system(M=3, N=4, J2=2, f=1e12, r=1e8, mem=1e12):
+    return SystemSpec(
+        M=M, num_clients=N, entities=(N, J2, 1),
+        compute=tuple(np.full(N, f) for _ in range(M)),
+        act_up=tuple(np.full(N, r) for _ in range(M - 1)),
+        act_down=tuple(np.full(N, r) for _ in range(M - 1)),
+        model_up=(np.full(N, r), np.full(J2, r)),
+        model_down=(np.full(N, r), np.full(J2, r)),
+        memory=tuple(np.full(N, mem) for _ in range(M)),
+    )
+
+
+def test_split_latency_hand_computed():
+    prof = build_profile(VGG, batch=2)
+    sysu = uniform_system()
+    cuts = (3, 8)
+    ts = split_latency(prof, sysu, cuts)
+    expect_compute = (prof.flops_fwd.sum() + prof.flops_bwd.sum()) / 1e12
+    a3 = prof.act_bytes[2] * 8.0 * 2 / 1e8
+    a8 = prof.act_bytes[7] * 8.0 * 2 / 1e8
+    np.testing.assert_allclose(ts, expect_compute + 2 * a3 + 2 * a8, rtol=1e-9)
+
+
+def test_aggregation_latency_indicator():
+    prof = build_profile(VGG, batch=2)
+    sysu = uniform_system()
+    # top tier has one entity -> no fed-server traffic (Eq. 15/16 indicator)
+    assert aggregation_latency(prof, sysu, (3, 8), 2) == 0.0
+    t0 = aggregation_latency(prof, sysu, (3, 8), 0)
+    lam = prof.param_bytes[:3].sum() + prof.frontend_param_bytes
+    np.testing.assert_allclose(t0, 2 * lam * 8.0 / 1e8, rtol=1e-9)
+
+
+def test_total_latency_floor_division():
+    prof = build_profile(VGG, batch=2)
+    sysu = uniform_system()
+    R = 10
+    t = total_latency(prof, sysu, (3, 8), [3, 2, 1], R)
+    ts = split_latency(prof, sysu, (3, 8))
+    t1 = aggregation_latency(prof, sysu, (3, 8), 0)
+    t2 = aggregation_latency(prof, sysu, (3, 8), 1)
+    np.testing.assert_allclose(t, R * ts + 3 * t1 + 5 * t2, rtol=1e-9)
+
+
+def test_memory_constraint_detects_overflow():
+    prof = build_profile(VGG, batch=2)
+    assert memory_ok(prof, uniform_system(mem=1e12), (3, 8))
+    assert not memory_ok(prof, uniform_system(mem=1e3), (3, 8))
+
+
+def test_deeper_cut_moves_compute_to_lower_tier():
+    prof = build_profile(VGG, batch=16)
+    slow_devices = SystemSpec.paper_three_tier(compute_scale=0.01)
+    shallow = split_latency(prof, slow_devices, (1, 8))
+    deep = split_latency(prof, slow_devices, (10, 12))
+    assert deep > shallow  # slow clients hurt more with deeper tier-1 cuts

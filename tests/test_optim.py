@@ -1,0 +1,47 @@
+"""Optimizer math + state-size accounting (C5 inputs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import adam, momentum, opt_state_bytes_per_param, sgd
+
+
+def test_sgd_step():
+    opt = sgd(0.1)
+    p = {"w": jnp.array([1.0, 2.0])}
+    g = {"w": jnp.array([0.5, -1.0])}
+    s = opt.init(p)
+    p2, _ = opt.update(p, g, s)
+    np.testing.assert_allclose(p2["w"], [0.95, 2.1])
+
+
+def test_momentum_accumulates():
+    opt = momentum(0.1, beta=0.5)
+    p = {"w": jnp.zeros(1)}
+    g = {"w": jnp.ones(1)}
+    s = opt.init(p)
+    p, s = opt.update(p, g, s)
+    np.testing.assert_allclose(p["w"], [-0.1])
+    p, s = opt.update(p, g, s)
+    np.testing.assert_allclose(p["w"], [-0.25])  # m = 1.5
+
+
+def test_adam_bias_correction_first_step():
+    opt = adam(1e-3)
+    p = {"w": jnp.zeros(3)}
+    g = {"w": jnp.array([1.0, -2.0, 0.5])}
+    s = opt.init(p)
+    p2, s2 = opt.update(p, g, s)
+    # first step of adam moves every coordinate by ~lr * sign(g)
+    np.testing.assert_allclose(p2["w"], -1e-3 * np.sign(g["w"]), rtol=1e-3)
+    assert int(s2["t"]) == 1
+
+
+def test_state_bytes():
+    assert opt_state_bytes_per_param("sgd") == 0.0
+    assert opt_state_bytes_per_param("momentum") == 4.0
+    assert opt_state_bytes_per_param("adam") == 8.0
+    for name, mk in [("sgd", sgd), ("momentum", momentum), ("adam", adam)]:
+        opt = mk(1e-3)
+        assert opt.name == name
+        assert opt.state_bytes_per_param == opt_state_bytes_per_param(name)

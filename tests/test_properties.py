@@ -1,0 +1,112 @@
+"""Property-style invariant sweeps (seed-parametrized; hypothesis is not
+installable offline — same invariants, explicit random instances)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.tiers import TierPlan, default_plan, synchronize
+from repro.core.problem import HsflProblem
+from repro.core import SystemSpec, build_profile, synthetic_hyperspec
+from repro.configs.vgg16_cifar10 import SPEC as VGG
+
+
+def _rand_plan(rng, N=8, U=10):
+    c1 = int(rng.integers(1, U - 1))
+    c2 = int(rng.integers(c1, U))
+    J2 = int(rng.choice([1, 2, 4, 8]))
+    return default_plan(
+        U, N, cuts=(c1, c2),
+        intervals=(int(rng.integers(1, 9)), int(rng.integers(1, 9)), 1),
+        entities=(N, J2, 1),
+    )
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_synchronize_preserves_client_mean(seed):
+    """Invariant: aggregation never changes the client-mean of any leaf
+    (uniform weights) — HSFL only redistributes, it does not drift."""
+    rng = np.random.default_rng(seed)
+    plan = _rand_plan(rng)
+    key = jax.random.PRNGKey(seed)
+    params = {
+        "frontend": {"e": jax.random.normal(key, (8, 5, 3))},
+        "units": {"w": jax.random.normal(jax.random.fold_in(key, 1), (8, 10, 4))},
+        "head": {"h": jax.random.normal(jax.random.fold_in(key, 2), (8, 6))},
+    }
+    step = int(rng.integers(0, 20))
+    out = synchronize(params, plan, jnp.int32(step))
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(params)):
+        np.testing.assert_allclose(
+            np.asarray(a).mean(0), np.asarray(b).mean(0), atol=1e-5
+        )
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_synchronize_idempotent(seed):
+    """Applying the same round's schedule twice == once (projection)."""
+    rng = np.random.default_rng(100 + seed)
+    plan = _rand_plan(rng)
+    key = jax.random.PRNGKey(seed)
+    params = {
+        "frontend": {"e": jax.random.normal(key, (8, 2))},
+        "units": {"w": jax.random.normal(jax.random.fold_in(key, 1), (8, 10, 3))},
+        "head": {"h": jax.random.normal(jax.random.fold_in(key, 2), (8, 2))},
+    }
+    step = int(rng.integers(0, 20))
+    once = synchronize(params, plan, jnp.int32(step))
+    twice = synchronize(once, plan, jnp.int32(step))
+    for a, b in zip(jax.tree.leaves(once), jax.tree.leaves(twice)):
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_theta_consistency_numerator_denominator(seed):
+    """Θ' == (2ϑ/γ)·N/D for random feasible points (objective assembly)."""
+    rng = np.random.default_rng(seed)
+    prob = HsflProblem(
+        build_profile(VGG, batch=16),
+        SystemSpec.paper_three_tier(seed=seed),
+        synthetic_hyperspec(VGG.n_units, 20, beta=2.0, seed=seed),
+        eps=10.0,
+    )
+    cuts = tuple(sorted(int(c) for c in rng.integers(1, 15, 2)))
+    I = [int(rng.integers(1, 10)), int(rng.integers(1, 10)), 1]
+    th = prob.theta(I, cuts)
+    D = prob.denominator(I, cuts)
+    if D > 0 and prob.memory_feasible(cuts):
+        expect = 2 * prob.hyper.theta0 / prob.hyper.gamma * prob.numerator(I, cuts) / D
+        np.testing.assert_allclose(th, expect, rtol=1e-12)
+    else:
+        assert th == float("inf")
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_rounds_decrease_with_smaller_intervals(seed):
+    """Corollary 1 monotonicity on random problems."""
+    prob = HsflProblem(
+        build_profile(VGG, batch=16),
+        SystemSpec.paper_three_tier(seed=seed),
+        synthetic_hyperspec(VGG.n_units, 20, beta=2.0, seed=seed),
+        eps=8.0,
+    )
+    rng = np.random.default_rng(seed)
+    cuts = tuple(sorted(int(c) for c in rng.integers(1, 15, 2)))
+    rounds = [prob.rounds([i, 2, 1], cuts) for i in (1, 3, 6)]
+    rounds = [r for r in rounds if r is not None]
+    assert rounds == sorted(rounds)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_cut_vectors_all_valid(seed):
+    prob = HsflProblem(
+        build_profile(VGG, batch=16),
+        SystemSpec.paper_three_tier(seed=seed),
+        synthetic_hyperspec(VGG.n_units, 20, seed=seed),
+        eps=10.0,
+    )
+    cuts_list = list(prob.iter_cut_vectors())
+    assert len(cuts_list) > 50
+    for cuts in cuts_list:
+        assert prob.valid_cuts(cuts)
+        assert all(c >= 1 for c in cuts)

@@ -1,0 +1,87 @@
+"""MA (Prop. 1), MS (Dinkelbach), BCD (Alg. 2) — optimality vs brute force."""
+import numpy as np
+import pytest
+
+from repro.configs.vgg16_cifar10 import SPEC as VGG
+from repro.core import (
+    HsflProblem, SystemSpec, build_profile, solve_bcd, solve_ma,
+    solve_ma_bruteforce, solve_ms, solve_ms_bruteforce, synthetic_hyperspec,
+)
+from repro.core.convergence import theorem1_bound
+
+
+def make_problem(seed=0, eps_scale=5.0, beta=None, g2=None):
+    rng = np.random.default_rng(seed)
+    prof = build_profile(VGG, batch=16)
+    system = SystemSpec.paper_three_tier(seed=seed)
+    hp = synthetic_hyperspec(
+        VGG.n_units, 20,
+        beta=beta if beta is not None else rng.uniform(1, 10),
+        g2_scale=g2 if g2 is not None else rng.uniform(1, 30),
+        seed=seed,
+    )
+    floor = theorem1_bound(hp, 10**9, [1, 1, 1], (3, 8))
+    return HsflProblem(prof, system, hp, eps=eps_scale * floor)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_ma_matches_bruteforce(seed):
+    rng = np.random.default_rng(100 + seed)
+    prob = make_problem(seed, eps_scale=float(rng.uniform(1.5, 40)))
+    cuts = tuple(sorted(int(c) for c in rng.choice(range(1, 15), 2)))
+    ma = solve_ma(prob, cuts)
+    bf = solve_ma_bruteforce(prob, cuts, i_max=250)
+    assert ma.theta <= bf.theta * (1 + 1e-9), (ma, bf)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_ms_dinkelbach_matches_ratio_enumeration(seed):
+    prob = make_problem(seed)
+    rng = np.random.default_rng(200 + seed)
+    intervals = [int(rng.integers(1, 12)), int(rng.integers(1, 12)), 1]
+    try:
+        ms = solve_ms(prob, intervals)
+    except ValueError:
+        # infeasible (D<=0 for every cut): the oracle must agree
+        with pytest.raises(ValueError):
+            solve_ms_bruteforce(prob, intervals)
+        return
+    bf = solve_ms_bruteforce(prob, intervals)
+    np.testing.assert_allclose(ms.theta, bf.theta, rtol=1e-7)
+    assert ms.dinkelbach_iters <= 10
+
+
+def test_ms_respects_memory_constraint():
+    prof = build_profile(VGG, batch=16)
+    system = SystemSpec.paper_three_tier(memory_bytes=16e9)
+    # devices with tiny memory: shallow tier-1 cuts become infeasible (C5)
+    import dataclasses
+
+    small_mem = dataclasses.replace(
+        system, memory=(np.full(20, 30e6), system.memory[1], system.memory[2])
+    )
+    hp = synthetic_hyperspec(VGG.n_units, 20, beta=3.0, seed=0)
+    floor = theorem1_bound(hp, 10**9, [1, 1, 1], (3, 8))
+    prob = HsflProblem(prof, small_mem, hp, eps=5 * floor)
+    ms = solve_ms(prob, [2, 2, 1])
+    assert prob.memory_feasible(ms.cuts)
+
+
+def test_bcd_monotone_and_feasible():
+    prob = make_problem(3, eps_scale=10.0)
+    res = solve_bcd(prob)
+    hist = list(res.history)
+    for a, b in zip(hist, hist[1:]):
+        assert b <= a * (1 + 1e-9)
+    assert np.isfinite(res.theta)
+    assert res.rounds > 0 and res.total_latency > 0
+    assert prob.valid_cuts(res.cuts)
+    # BCD beats the naive all-ones + even-cut starting point
+    naive = prob.theta([1] * 3, res.cuts)
+    assert res.theta <= naive * (1 + 1e-9)
+
+
+def test_infeasible_eps_raises():
+    prob = make_problem(0, eps_scale=0.0)  # eps below the bound floor
+    with pytest.raises(ValueError):
+        solve_ms(prob, [1, 1, 1])

@@ -1,0 +1,134 @@
+"""TierPlan + synchronize: the HSFL aggregation schedule (Eqs. 3-4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.tiers import TierPlan, default_plan, synchronize, tier_subtrees, combine_tiers
+
+
+def _params(key, N, U, d=4):
+    ks = jax.random.split(key, 3)
+    return {
+        "frontend": {"embed": jax.random.normal(ks[0], (N, 8, d))},
+        "units": {"w": jax.random.normal(ks[1], (N, U, d, d))},
+        "head": {"norm": jax.random.normal(ks[2], (N, d))},
+    }
+
+
+def test_plan_validation():
+    with pytest.raises(AssertionError):
+        TierPlan(8, 8, cuts=(5, 3), intervals=(2, 2, 1), entities=(8, 4, 1))
+    with pytest.raises(AssertionError):
+        TierPlan(8, 8, cuts=(2, 4), intervals=(2, 2, 2), entities=(8, 4, 1))
+    with pytest.raises(AssertionError):
+        TierPlan(8, 8, cuts=(2, 4), intervals=(2, 2, 1), entities=(8, 3, 1))
+
+
+def test_tier_bounds_cover():
+    plan = default_plan(10, 8, cuts=(2, 6))
+    bounds = [plan.tier_bounds(m) for m in range(plan.M)]
+    assert bounds == [(0, 2), (2, 6), (6, 10)]
+    for u in range(10):
+        m = plan.tier_of_unit(u)
+        lo, hi = plan.tier_bounds(m)
+        assert lo <= u < hi
+
+
+def test_subtrees_roundtrip():
+    N, U = 8, 10
+    params = _params(jax.random.PRNGKey(0), N, U)
+    plan = default_plan(U, N, cuts=(3, 7))
+    parts = tier_subtrees(params, plan)
+    assert parts[0]["units"]["w"].shape == (N, 3, 4, 4)
+    assert parts[1]["units"]["w"].shape == (N, 4, 4, 4)
+    back = combine_tiers(parts, params)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(params)):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_synchronize_entity_level_every_round(seed):
+    """Eq. 3: sub-models co-hosted by an entity are identical every round."""
+    N, U = 8, 6
+    params = _params(jax.random.PRNGKey(seed), N, U)
+    plan = default_plan(U, N, cuts=(2, 4), intervals=(5, 3, 1), entities=(N, 4, 1))
+    out = synchronize(params, plan, jnp.int32(0))  # step 0: no global for I>1
+    w = out["units"]["w"]
+    # tier 2 (units 2..4) entity groups of 2 clients are equal
+    for g in range(4):
+        np.testing.assert_allclose(w[2 * g, 2:4], w[2 * g + 1, 2:4], rtol=1e-6)
+    # tier 3 (units 4..6) globally equal (cloud server, I=1)
+    for n in range(1, N):
+        np.testing.assert_allclose(w[0, 4:], w[n, 4:], rtol=1e-6)
+    # tier 1 (units 0..2) untouched at step 0 (J_1 = N, I_1 = 5)
+    assert not np.allclose(w[0, 0], w[1, 0])
+
+
+@pytest.mark.parametrize("interval", [2, 3, 4])
+def test_synchronize_interval_trigger(interval):
+    """Eq. 4 fires exactly when (step+1) % I == 0."""
+    N, U = 4, 4
+    params = _params(jax.random.PRNGKey(1), N, U)
+    plan = default_plan(
+        U, N, cuts=(2,), intervals=(interval, 1), entities=(N, 1)
+    )
+    for step in range(6):
+        out = synchronize(params, plan, jnp.int32(step))
+        w = out["units"]["w"]
+        synced = np.allclose(w[0, :2], w[1, :2])
+        assert synced == (((step + 1) % interval) == 0), step
+
+
+def test_synchronize_means_are_exact():
+    N, U = 6, 3
+    params = _params(jax.random.PRNGKey(2), N, U)
+    # tier 1: global at I=1; tier 2: entity-only at step 0 (I=5 not due)
+    plan = default_plan(U, N, cuts=(1, 2), intervals=(1, 5, 1), entities=(N, 3, 1))
+    out = synchronize(params, plan, jnp.int32(0))
+    w_in = params["units"]["w"]
+    w = out["units"]["w"]
+    np.testing.assert_allclose(
+        w[:, 0], np.broadcast_to(w_in[:, 0].mean(0), w_in[:, 0].shape), rtol=1e-5
+    )
+    np.testing.assert_allclose(
+        w[0, 1], w_in[[0, 1], 1].mean(0), rtol=1e-5
+    )  # entity group {0,1} of tier 2
+
+
+def test_pod_level_schedule():
+    """Multi-pod: top tier is per-pod every round, cross-pod at pod_interval."""
+    N, U = 8, 2
+    params = _params(jax.random.PRNGKey(3), N, U)
+    plan = TierPlan(
+        n_units=U, num_clients=N, cuts=(1,), intervals=(1, 1),
+        entities=(N, 1), num_pods=2, pod_interval=3,
+    )
+    out0 = synchronize(params, plan, jnp.int32(0))
+    w = out0["units"]["w"]
+    # per-pod mean on tier 2: pods {0..3}, {4..7} internally equal but differ
+    np.testing.assert_allclose(w[0, 1:], w[3, 1:], rtol=1e-6)
+    assert not np.allclose(w[0, 1:], w[4, 1:])
+    out2 = synchronize(params, plan, jnp.int32(2))  # (2+1) % 3 == 0
+    w2 = out2["units"]["w"]
+    np.testing.assert_allclose(w2[0, 1:], w2[7, 1:], rtol=1e-6)
+
+
+@pytest.mark.parametrize("step", [0, 1, 3, 7])
+def test_round_specialization_matches_dynamic(step):
+    """fed_round=True/False specialized steps == the dynamic cond schedule.
+
+    The production dispatch `sync if (t+1) % I == 0 else local` must produce
+    bit-identical params to the single dynamic step at every round.
+    """
+    N, U = 8, 4
+    params = _params(jax.random.PRNGKey(7), N, U)
+    plan = default_plan(U, N, cuts=(1, 3), intervals=(4, 2, 1),
+                        entities=(N, 4, 1))
+    dyn = synchronize(params, plan, jnp.int32(step))
+    # production dispatch: per-tier round-type tuple
+    fed = tuple((step + 1) % I == 0 for I in plan.intervals)
+    spec = synchronize(params, plan, jnp.int32(step), fed_round=fed)
+    for d_leaf, s_leaf in zip(jax.tree.leaves(dyn), jax.tree.leaves(spec)):
+        np.testing.assert_allclose(np.asarray(d_leaf), np.asarray(s_leaf),
+                                   rtol=0, atol=0)
