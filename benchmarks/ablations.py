@@ -38,7 +38,7 @@ def analytic_rows(prob) -> list:
     return rows
 
 
-def training_rows(rounds: int = 50) -> list:
+def training_rows(rounds: int = 50, seed: int = 0) -> list:
     """Real non-IID training: *global held-out accuracy of the fed-server
     aggregate* under different schedules — the paper's Fig. 8/9 metric.
     (Local training loss would invert the ordering: PSL reaches lower local
@@ -56,19 +56,19 @@ def training_rows(rounds: int = 50) -> list:
         VGG, conv_channels=(8, 8, 16, 16, 32, 32, 32), pool_after=(0, 1, 3, 5),
         fc_dims=(64, 32, 10), name="vgg-thin",
     )
-    ds = make_cifar10_like(512, noise=0.4, seed=2)
-    held = make_cifar10_like(256, noise=0.4, seed=99, template_seed=2)
-    parts = partition_sort_and_shard(ds.labels, 8, 2, seed=2)
+    ds = make_cifar10_like(512, noise=0.4, seed=seed + 2)
+    held = make_cifar10_like(256, noise=0.4, seed=seed + 99, template_seed=seed + 2)
+    parts = partition_sort_and_shard(ds.labels, 8, 2, seed=seed + 2)
     model = VggModel(spec)
     eval_batch = {"images": jnp.asarray(held.images),
                   "labels": jnp.asarray(held.labels)}
 
     def global_acc(intervals, cuts):
-        loader = image_loader(ds, parts, batch=8, seed=2)
+        loader = image_loader(ds, parts, batch=8, seed=seed + 2)
         plan = default_plan(spec.n_units, 8, cuts=cuts, intervals=intervals,
                             entities=(8, 4, 1))
         opt = sgd(0.05)
-        state = init_state_a(model, plan, opt, jax.random.PRNGKey(2))
+        state = init_state_a(model, plan, opt, jax.random.PRNGKey(seed + 2))
         step = jax.jit(build_train_step_a(model, plan, opt))
         for _ in range(rounds):
             batch = {k: jnp.asarray(v) for k, v in loader.next_round().items()}
@@ -85,10 +85,10 @@ def training_rows(rounds: int = 50) -> list:
     return rows
 
 
-def main(quick: bool = False) -> list:
-    prob = paper_problem()
+def main(quick: bool = False, seed: int = 0) -> list:
+    prob = paper_problem(seed=seed)
     rows = analytic_rows(prob)
-    rows += training_rows(rounds=30 if quick else 50)
+    rows += training_rows(rounds=30 if quick else 50, seed=seed)
     emit(rows, ("ablation", "a", "b", "bound_or_acc", "comm_s_per_round"))
     # Insight-1 check: bound tightens monotonically as I shrinks
     grid = {(r[1], r[2]): r[3] for r in rows if r[0] == "fig8_ma"}

@@ -11,7 +11,7 @@ import numpy as np
 from .common import emit
 
 
-def main(quick: bool = False) -> list:
+def main(quick: bool = False, seed: int = 0) -> list:
     import jax
     import jax.numpy as jnp
 
@@ -30,8 +30,10 @@ def main(quick: bool = False) -> list:
     )
     N, gamma = 4, 0.01
     rounds = 15 if quick else 30
-    ds = make_cifar10_like(256, noise=0.4, seed=3)
-    loader = image_loader(ds, partition_iid(len(ds), N, 3), batch=8, seed=3)
+    ds = make_cifar10_like(256, noise=0.4, seed=seed + 3)
+    loader = image_loader(
+        ds, partition_iid(len(ds), N, seed + 3), batch=8, seed=seed + 3
+    )
     model = VggModel(spec)
     # Theorem 1's LHS is E||grad f(w_bar)||^2: the FULL gradient of the global
     # loss at the *aggregated* params. Estimate it with a large fixed batch at
@@ -47,7 +49,7 @@ def main(quick: bool = False) -> list:
         plan = default_plan(spec.n_units, N, cuts=(2, 3), intervals=(I1, 1, 1),
                             entities=(N, 2, 1))
         opt = sgd(gamma)
-        state = init_state_a(model, plan, opt, jax.random.PRNGKey(3))
+        state = init_state_a(model, plan, opt, jax.random.PRNGKey(seed + 3))
         step = jax.jit(build_train_step_a(model, plan, opt))
         grad_fn = jax.jit(
             lambda p, b: jax.vmap(jax.value_and_grad(model.loss_fn))(p, b)

@@ -11,8 +11,8 @@ from repro.core.latency import aggregation_latency, split_latency
 from .common import emit, paper_problem
 
 
-def main(quick: bool = False) -> list:
-    prob = paper_problem()
+def main(quick: bool = False, seed: int = 0) -> list:
+    prob = paper_problem(seed=seed)
     rows = []
     for L1 in range(1, 14):
         cuts = (L1, max(L1, 8))

@@ -9,14 +9,14 @@ import numpy as np
 from .common import POLICIES, emit, expected_converged_time, paper_problem
 
 
-def main(quick: bool = False) -> list:
+def main(quick: bool = False, seed: int = 0) -> list:
     draws = 5 if quick else 20
     rows = []
     for setting, eps_scale in [("easy_eps", 10.0), ("tight_eps", 3.0)]:
-        prob = paper_problem(eps_scale=eps_scale)
+        prob = paper_problem(eps_scale=eps_scale, seed=seed)
         base = None
         for name, pol in POLICIES.items():
-            t, sd = expected_converged_time(prob, pol, draws=draws)
+            t, sd = expected_converged_time(prob, pol, draws=draws, seed=seed)
             if name == "HSFL(ours)":
                 base = t
             rows.append((setting, name, t, sd, t / base if base else 1.0))

@@ -1,15 +1,22 @@
-"""Benchmark runner (deliverable d): one harness per paper table/figure,
-plus the roofline extraction over the dry-run artifacts.
+"""Benchmark runner: one harness per paper table/figure, the roofline
+extraction over the dry-run artifacts, and the fleet-simulator scale sweep.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick] [--skip-training]
+    PYTHONPATH=src python -m benchmarks.run [names...] [--quick] [--seed S]
+                                            [--skip-training] [--list]
 
-Harness -> paper artifact map (details in DESIGN.md sect. 7):
+Every harness is registered in ``HARNESSES`` with a group tag; ``--list``
+prints the registry, positional names (or ``--only``) select a subset, and
+``--seed`` is threaded through every harness that derives randomness
+(system draws, policy draws, synthetic data, model init).
+
+Harness -> paper artifact map (details in DESIGN.md §7):
     fig2_latency_vs_cut   Fig. 2(c)  per-round latency vs cut layer
     fig45_benchmarks      Figs. 4-5  HSFL vs the 5 baseline policies
     fig67_resources       Figs. 6-7  resource scaling + tier count
+    sim_scale             (ours)     fleet simulator: oracle check + 10^6-client sweep
     ablations             Figs. 8-9  MA / MS ablations (+ real training)
     bound_check           Thm 1      empirical gradient norms vs the bound
-    roofline              sect. g    three-term roofline per (arch x shape)
+    roofline              §g         three-term roofline per (arch x shape)
 """
 from __future__ import annotations
 
@@ -18,38 +25,75 @@ import sys
 import time
 
 
+def _registry(args):
+    from . import (
+        ablations, bound_check, fig2_latency_vs_cut, fig45_benchmarks,
+        fig67_resources, roofline, sim_scale,
+    )
+
+    return [
+        # (name, group, thunk)
+        ("fig2_latency_vs_cut", "analytic",
+         lambda: fig2_latency_vs_cut.main(args.quick, seed=args.seed)),
+        ("fig45_benchmarks", "analytic",
+         lambda: fig45_benchmarks.main(args.quick, seed=args.seed)),
+        ("fig67_resources", "analytic",
+         lambda: fig67_resources.main(args.quick, seed=args.seed)),
+        ("sim_scale", "analytic",
+         lambda: sim_scale.main(args.quick, seed=args.seed)),
+        ("ablations", "training",
+         lambda: ablations.main(args.quick, seed=args.seed)),
+        ("bound_check", "training",
+         lambda: bound_check.main(args.quick, seed=args.seed)),
+        ("roofline", "extracted", lambda: _roofline(roofline)),
+    ]
+
+
+def _roofline(roofline):
+    import os
+
+    if not os.path.isdir("experiments/dryrun"):
+        print("roofline skipped: no dry-run artifacts under experiments/ "
+              "(produce them with `python -m repro.launch.dryrun` first)")
+        return []
+    return roofline.main(["--csv", "experiments/roofline_16x16.csv"])
+
+
 def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("names", nargs="*",
+                    help="harness names to run (default: all)")
     ap.add_argument("--quick", action="store_true",
                     help="smaller grids / fewer training rounds")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base PRNG seed threaded through every harness")
     ap.add_argument("--skip-training", action="store_true",
                     help="skip the real-training ablation/bound harnesses")
-    ap.add_argument("--only", default=None, help="run a single harness")
+    ap.add_argument("--only", default=None,
+                    help="run a single harness (same as one positional name)")
+    ap.add_argument("--list", action="store_true", dest="list_harnesses",
+                    help="print the registered harnesses and exit")
     args = ap.parse_args(argv)
 
-    from . import ablations, bound_check, fig2_latency_vs_cut, fig45_benchmarks
-    from . import fig67_resources, roofline
+    registry = _registry(args)
+    if args.list_harnesses:
+        for name, group, _ in registry:
+            print(f"{name:22s} [{group}]")
+        return 0
 
-    analytic = [
-        ("fig2_latency_vs_cut", lambda: fig2_latency_vs_cut.main(args.quick)),
-        ("fig45_benchmarks", lambda: fig45_benchmarks.main(args.quick)),
-        ("fig67_resources", lambda: fig67_resources.main(args.quick)),
-    ]
-    training = [
-        ("ablations", lambda: ablations.main(args.quick)),
-        ("bound_check", lambda: bound_check.main(args.quick)),
-    ]
-    extracted = [
-        ("roofline", lambda: roofline.main(
-            ["--csv", "experiments/roofline_16x16.csv"])),
-    ]
-
-    jobs = analytic + ([] if args.skip_training else training) + extracted
-    if args.only:
-        jobs = [(n, f) for n, f in jobs if n == args.only]
-        if not jobs:
-            print(f"unknown harness {args.only!r}", file=sys.stderr)
+    selected = list(args.names) + ([args.only] if args.only else [])
+    if selected:
+        known = {n for n, _, _ in registry}
+        unknown = [n for n in selected if n not in known]
+        if unknown:
+            print(f"unknown harness(es) {unknown!r}; --list shows the "
+                  "registry", file=sys.stderr)
             return 2
+        # an explicitly named harness always runs, even under --skip-training
+        jobs = [(n, f) for n, _, f in registry if n in selected]
+    else:
+        jobs = [(n, f) for n, group, f in registry
+                if not (args.skip_training and group == "training")]
 
     failures = []
     for name, fn in jobs:

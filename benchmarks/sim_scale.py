@@ -1,0 +1,83 @@
+"""sim_scale: fleet-simulator throughput vs fleet size, to 10⁶ clients.
+
+Two parts:
+
+* oracle cross-check — for every scenario in the library, the discrete-event
+  core and the vectorized fast path must agree *bit-exactly* at N ≤ 256
+  (the contract ``tests/test_sim.py`` enforces; re-asserted here so the
+  benchmark never reports throughput for a path that drifted);
+* scale sweep — rounds/sec and client·rounds/sec of the vectorized path for
+  N = 10³ … 10⁶ on the straggler-tail scenario (per-round PRNG draws + the
+  full stage chain, i.e. the most work per round).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs.vgg16_cifar10 import SPEC as VGG
+from repro.core import SystemSpec, build_profile
+from repro.sim import SCENARIOS, make_trace, simulate, simulate_rounds
+
+from .common import emit
+
+CUTS = (3, 8)
+INTERVALS = (2, 4, 1)
+
+
+def big_system(n: int, seed: int) -> SystemSpec:
+    return SystemSpec.paper_three_tier(
+        num_clients=n, num_edges=max(1, n // 200), seed=seed
+    )
+
+
+def main(quick: bool = False, seed: int = 0) -> list:
+    prof = build_profile(VGG, batch=16)
+    rows = []
+
+    # --- event-core oracle vs vectorized path, all scenarios, N <= 256 ----
+    for n in (64, 256):
+        system = big_system(n, seed)
+        for name in sorted(SCENARIOS):
+            trace = make_trace(name, prof, system, rounds=4, seed=seed)
+            ev = simulate(trace, CUTS, INTERVALS)
+            fl = simulate_rounds(trace, CUTS, INTERVALS)
+            exact = bool(
+                np.array_equal(ev.split, fl.split)
+                and np.array_equal(ev.agg, fl.agg)
+                and np.array_equal(ev.total, fl.total)
+            )
+            assert exact, f"oracle mismatch: {name} at N={n}"
+            rows.append(("oracle_check", name, n, 4, 0.0, float(exact)))
+
+    # --- vectorized throughput sweep --------------------------------------
+    # The warm pass generates + caches every round's PRNG state and warms the
+    # jnp dispatch, so the timed pass measures the fast-path arithmetic alone
+    # (trace generation is a one-time cost per round, amortized on replay).
+    sweep = [1_000, 10_000, 100_000] + ([] if quick else [1_000_000])
+    rounds = 4
+    for n in sweep:
+        system = big_system(n, seed)
+        trace = make_trace("straggler-tail", prof, system, rounds=rounds, seed=seed)
+        t0 = time.perf_counter()
+        simulate_rounds(trace, CUTS, INTERVALS)  # generation + fast path
+        gen_dt = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        res = simulate_rounds(trace, CUTS, INTERVALS)  # fast path only
+        dt = time.perf_counter() - t0
+        rows.append(("scale_sweep_cold", "straggler-tail", n, rounds, gen_dt,
+                     n * rounds / gen_dt))
+        rows.append(("scale_sweep", "straggler-tail", n, rounds, dt,
+                     n * rounds / dt))
+        assert (res.participants > 0).all()
+
+    emit(rows, ("part", "scenario", "clients", "rounds", "seconds",
+                "client_rounds_per_s"))
+    if not quick:  # the headline: a million-client round via the fast path
+        assert max(r[2] for r in rows if r[0] == "scale_sweep") >= 1_000_000
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -56,9 +56,9 @@ def solve_bcd(
         theta = new_theta
 
     R = problem.rounds(intervals, cuts)
-    from .latency import total_latency
-
-    T = total_latency(problem.profile, problem.system, cuts, intervals, R)
+    # Eq. (19) under the problem's latency pricing (nominal point estimates,
+    # or trace quantiles when a sim latency_model is attached).
+    T = problem.total_T(intervals, cuts, R)
     return BcdResult(
         intervals=intervals,
         cuts=cuts,

@@ -183,26 +183,92 @@ class SystemSpec:
 # --------------------------------------------------------------------------- #
 
 
+@dataclass(frozen=True)
+class Stage:
+    """One sequential leg of a client's per-round pipeline.
+
+    ``kind``  ∈ {compute_fwd, uplink, compute_bwd, downlink};
+    ``index`` is the tier for compute stages, the link (cut boundary) for
+    communication stages; ``work`` is FLOPs for compute, bits for links.
+
+    The tuple returned by :func:`split_stages` is the *canonical chain
+    order* — fwd up the hierarchy, bwd back down.  Every consumer
+    (``split_latency``, the fleet simulator's vectorized path, and the
+    discrete-event oracle) accumulates latency in exactly this order so
+    their floating-point results agree bit-for-bit.
+    """
+    kind: str
+    index: int
+    work: float
+
+
+def split_stages(profile: LayerProfile, cuts: Sequence[int]) -> Tuple[Stage, ...]:
+    """Canonical per-client stage chain for cut vector μ (Eqs. 11–14)."""
+    M = len(cuts) + 1
+    b = profile.batch
+    bnds = [0, *cuts, profile.n_units]
+
+    def boundary_bits(m: int) -> float:
+        cut = bnds[m + 1]
+        act = 0.0 if cut == 0 else float(profile.act_bytes[cut - 1])
+        return b * act * BITS
+
+    stages: List[Stage] = []
+    for m in range(M):  # forward sweep: Eq. (11) interleaved with Eq. (12)
+        stages.append(Stage("compute_fwd", m, profile.tier_flops(cuts, m, bwd=False)))
+        if m < M - 1:
+            stages.append(Stage("uplink", m, boundary_bits(m)))
+    for m in range(M - 1, -1, -1):  # backward sweep: Eq. (13) + Eq. (14)
+        stages.append(Stage("compute_bwd", m, profile.tier_flops(cuts, m, bwd=True)))
+        if m > 0:
+            stages.append(Stage("downlink", m - 1, boundary_bits(m - 1)))
+    return tuple(stages)
+
+
+def stage_rate(system: SystemSpec, stage: Stage) -> np.ndarray:
+    """Nominal per-client service rate [N] for one stage (FLOPS or bit/s)."""
+    if stage.kind in ("compute_fwd", "compute_bwd"):
+        return system.compute[stage.index]
+    if stage.kind == "uplink":
+        return system.act_up[stage.index]
+    return system.act_down[stage.index]
+
+
+def per_client_split_latency(
+    profile: LayerProfile, system: SystemSpec, cuts: Sequence[int]
+) -> np.ndarray:
+    """Per-client round latency [N], accumulated in canonical chain order.
+
+    The fleet simulator (``repro.sim``) prices the same ``work / rate``
+    stages with trace-perturbed rates and MUST keep this accumulation
+    order — the homogeneous golden test in ``tests/test_sim.py`` pins the
+    two paths to exact floating-point equality.
+    """
+    stages = split_stages(profile, cuts)
+    t = np.zeros(system.num_clients)
+    for s in stages:
+        t = t + s.work / stage_rate(system, s)
+    return t
+
+
 def split_latency(profile: LayerProfile, system: SystemSpec, cuts: Sequence[int]) -> float:
     """T_S(μ): per-round split-training latency, Eq. (17)."""
-    N, M = system.num_clients, system.M
-    b = profile.batch
-    per_client = np.zeros(N)
-    for m in range(M):
-        fwd = profile.tier_flops(cuts, m, bwd=False)
-        bwd = profile.tier_flops(cuts, m, bwd=True)
-        per_client += (fwd + bwd) / system.compute[m]  # Eq. (11) + (13)
-    bnds = [0, *cuts, profile.n_units]
-    for m in range(M - 1):
-        cut = bnds[m + 1]
-        if cut == 0:
-            act = profile.act_bytes[0] * 0.0  # degenerate empty tier
-        else:
-            act = profile.act_bytes[cut - 1]
-        gact = act
-        per_client += b * act * BITS / system.act_up[m]      # Eq. (12)
-        per_client += b * gact * BITS / system.act_down[m]   # Eq. (14)
-    return float(np.max(per_client))
+    return float(np.max(per_client_split_latency(profile, system, cuts)))
+
+
+def aggregation_phases(
+    profile: LayerProfile,
+    system: SystemSpec,
+    cuts: Sequence[int],
+    m: int,
+    up_rate: Optional[np.ndarray] = None,
+    down_rate: Optional[np.ndarray] = None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-entity (upload, download) times [J_m] of a tier-m sync, Eq. (18)."""
+    lam = profile.tier_param_bytes(cuts, m) * BITS
+    up = lam / (system.model_up[m] if up_rate is None else up_rate)
+    down = lam / (system.model_down[m] if down_rate is None else down_rate)
+    return up, down
 
 
 def aggregation_latency(
@@ -211,10 +277,8 @@ def aggregation_latency(
     """T_{m,A}(μ): fed-server aggregation latency of tier m, Eq. (18)."""
     if system.entities[m] <= 1:
         return 0.0  # Eq. (15)/(16) indicator
-    lam = profile.tier_param_bytes(cuts, m) * BITS
-    up = float(np.max(lam / system.model_up[m]))
-    down = float(np.max(lam / system.model_down[m]))
-    return up + down
+    up, down = aggregation_phases(profile, system, cuts, m)
+    return float(np.max(up)) + float(np.max(down))
 
 
 def total_latency(

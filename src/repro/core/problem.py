@@ -15,12 +15,18 @@ and exposes the exact objective
 with c, κ from ``bound_constants`` and d_m(μ) the tier-m sum of G_l².
 A schedule is *feasible* iff D > 0 (the bound can reach ε) and the memory
 constraint C5 holds.
+
+The latency terms T_S / T_{m,A} default to the nominal point estimates of
+Eqs. (17)–(18); an optional ``latency_model`` (any object with
+``split_T(cuts)`` / ``agg_T(cuts, m)`` — see ``repro.sim.robust``) swaps in
+empirical per-round quantiles from a fleet-simulation trace, so the same
+solvers optimize against heterogeneous / straggler / churn regimes.
 """
 from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass
-from typing import Iterator, List, Optional, Sequence, Tuple
+from typing import Iterator, List, Optional, Protocol, Sequence, Tuple
 
 import numpy as np
 
@@ -36,12 +42,21 @@ from .latency import (
 INFEASIBLE = float("inf")
 
 
+class LatencyModel(Protocol):
+    """Pluggable pricing of the latency terms (nominal or trace-based)."""
+
+    def split_T(self, cuts: Sequence[int]) -> float: ...
+
+    def agg_T(self, cuts: Sequence[int], m: int) -> float: ...
+
+
 @dataclass(frozen=True)
 class HsflProblem:
     profile: LayerProfile
     system: SystemSpec
     hyper: HyperSpec
     eps: float
+    latency_model: Optional[LatencyModel] = None
 
     @property
     def M(self) -> int:
@@ -63,16 +78,32 @@ class HsflProblem:
         return tier_G2_sums(self.hyper.G2, cuts)
 
     def split_T(self, cuts: Sequence[int]) -> float:
+        if self.latency_model is not None:
+            return self.latency_model.split_T(cuts)
         return split_latency(self.profile, self.system, cuts)
 
     def agg_T(self, cuts: Sequence[int]) -> np.ndarray:
         """b_m = T_{m,A} for tiers m < M."""
+        if self.latency_model is not None:
+            return np.array(
+                [self.latency_model.agg_T(cuts, m) for m in range(self.M - 1)]
+            )
         return np.array(
             [
                 aggregation_latency(self.profile, self.system, cuts, m)
                 for m in range(self.M - 1)
             ]
         )
+
+    def total_T(
+        self, intervals: Sequence[int], cuts: Sequence[int], R: float
+    ) -> float:
+        """T(I, μ) of Eq. (19) under this problem's latency pricing."""
+        tot = R * self.split_T(cuts)
+        b = self.agg_T(cuts)
+        for m in range(self.M - 1):
+            tot += np.floor(R / intervals[m]) * b[m]
+        return float(tot)
 
     def numerator(self, intervals: Sequence[int], cuts: Sequence[int]) -> float:
         b = self.agg_T(cuts)

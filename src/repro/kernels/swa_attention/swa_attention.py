@@ -24,6 +24,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 NEG = -1e30
 
+# renamed upstream: jax >= 0.5 exposes ``CompilerParams``, 0.4.x the
+# ``TPUCompilerParams`` spelling of the same dataclass
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def _pos(i, T):
     return i * T + jax.lax.broadcasted_iota(jnp.int32, (T, 1), 0)
@@ -136,7 +140,7 @@ def _fwd(q, k, v, *, window, T, S_true, interpret):
             pltpu.VMEM((T, 128), jnp.float32),
             pltpu.VMEM((T, hd), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
@@ -321,7 +325,7 @@ def _bwd(q, k, v, o, lse, do, *, window, T, S_true, interpret):
         out_specs=pl.BlockSpec((1, 1, T, hd), q_map),
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         scratch_shapes=[pltpu.VMEM((T, hd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
@@ -365,7 +369,7 @@ def _bwd(q, k, v, o, lse, do, *, window, T, S_true, interpret):
             pltpu.VMEM((T, hd), jnp.float32),
             pltpu.VMEM((T, hd), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=(
                 "parallel", "parallel", "parallel", "arbitrary", "arbitrary",
             ),

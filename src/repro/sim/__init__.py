@@ -1,0 +1,18 @@
+# Fleet simulator: heterogeneity-aware discrete-event simulation of
+# multi-tier HSFL systems. events.py is the deterministic oracle, fleet.py
+# the vectorized (jnp) fast path, scenarios.py the regime library, and
+# robust.py plugs trace quantiles into the MA+MS solvers.
+from .scenarios import (
+    RoundState,
+    SCENARIOS,
+    SystemTrace,
+    diurnal_churn,
+    flaky_wan,
+    homogeneous_paper,
+    lognormal_heterogeneous,
+    make_trace,
+    straggler_tail,
+)
+from .events import EventSimResult, RoundResult, simulate, simulate_round
+from .fleet import FleetResult, FleetRound, round_latency, simulate_rounds
+from .robust import TraceLatency, robust_problem

@@ -1,0 +1,147 @@
+"""Vectorized fleet fast path: whole-round advancement for N clients at once.
+
+Where ``events.py`` schedules one event per client per stage, this path
+treats the round as pure array arithmetic: per-client compute rates, link
+bandwidths, and availability live in ``[N]`` float64 arrays, a round is a
+fixed chain of elementwise divide/accumulate ops, and the round latency is
+one masked reduction.  A 10⁶-client round is ~10 array ops, which is what
+lets ``benchmarks/run.py sim_scale`` sweep to a million clients.
+
+Bit-exactness contract: the fast path consumes the *same* per-stage
+duration arrays as the event core (``events.round_stage_durations``) and
+accumulates them in the same canonical order, so for any trace and cut
+vector ``simulate_rounds`` and ``events.simulate`` agree to the last bit —
+``tests/test_sim.py`` enforces this on every scenario.  The JAX backend
+runs under ``jax.experimental.enable_x64`` (float64 elementwise IEEE ops
+match NumPy exactly); straggler quantiles are ``jnp`` reductions.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from .events import fires, round_agg_phases, round_stage_durations
+from .scenarios import SystemTrace
+
+try:  # CPU jax is in the image; keep the subsystem importable without it
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    _HAS_JAX = True
+except Exception:  # pragma: no cover - exercised only on jax-less installs
+    _HAS_JAX = False
+
+
+@dataclass(frozen=True)
+class FleetRound:
+    split: float                 # max over participants
+    per_client: np.ndarray       # [N] finish times (NaN when absent)
+    agg: np.ndarray              # [M-1] priced tier-sync latency
+    n_participants: int
+
+
+@dataclass(frozen=True)
+class FleetResult:
+    split: np.ndarray            # [R]
+    agg: np.ndarray              # [M-1, R] priced every round
+    fired: np.ndarray            # [M-1, R] sync schedule
+    total: np.ndarray            # [R]
+    participants: np.ndarray     # [R]
+
+    def straggler_quantiles(self, qs=(0.5, 0.95, 0.99)) -> np.ndarray:
+        """Quantiles of per-round *round* latency (the straggler-shaped tail)."""
+        return quantiles(self.total, qs)
+
+
+def _resolve_backend(backend: str) -> str:
+    if backend == "auto":
+        return "jax" if _HAS_JAX else "numpy"
+    if backend == "jax" and not _HAS_JAX:
+        raise RuntimeError("jax backend requested but jax is not importable")
+    return backend
+
+
+def quantiles(x: np.ndarray, qs: Sequence[float], backend: str = "auto") -> np.ndarray:
+    """Quantile reduction (jnp when available — the sim_scale hot path)."""
+    if _resolve_backend(backend) == "jax":
+        with enable_x64():
+            return np.asarray(jnp.quantile(jnp.asarray(x), jnp.asarray(list(qs))))
+    return np.quantile(np.asarray(x), list(qs))
+
+
+def round_latency(
+    trace: SystemTrace, r: int, cuts: Sequence[int], backend: str = "auto"
+) -> FleetRound:
+    """Advance one whole round for all N clients at once."""
+    be = _resolve_backend(backend)
+    state = trace.round_state(r)
+    avail = state.available
+    n_part = int(np.count_nonzero(avail))
+    _, durs = round_stage_durations(trace, r, cuts)
+    M = trace.system.M
+
+    if be == "jax":
+        with enable_x64():
+            t = jnp.zeros(trace.system.num_clients)
+            for d in durs:
+                t = t + jnp.asarray(d)
+            masked = jnp.where(jnp.asarray(avail), t, -jnp.inf)
+            split = float(jnp.max(masked)) if n_part else 0.0
+            per_client = np.asarray(
+                jnp.where(jnp.asarray(avail), t, jnp.nan)
+            )
+    else:
+        t = np.zeros(trace.system.num_clients)
+        for d in durs:
+            t = t + d
+        split = float(np.max(t[avail])) if n_part else 0.0
+        per_client = np.where(avail, t, np.nan)
+
+    agg = np.zeros(M - 1)
+    for m in range(M - 1):
+        phases = round_agg_phases(trace, r, cuts, m)
+        if phases is None:
+            continue
+        up, down = phases
+        if be == "jax":
+            with enable_x64():
+                agg[m] = float(jnp.max(jnp.asarray(up))) + float(
+                    jnp.max(jnp.asarray(down))
+                )
+        else:
+            agg[m] = float(np.max(up)) + float(np.max(down))
+    return FleetRound(split, per_client, agg, n_part)
+
+
+def simulate_rounds(
+    trace: SystemTrace,
+    cuts: Sequence[int],
+    intervals: Optional[Sequence[int]] = None,
+    rounds: Optional[int] = None,
+    backend: str = "auto",
+) -> FleetResult:
+    """Vectorized counterpart of ``events.simulate`` (same result layout)."""
+    R = trace.rounds if rounds is None else min(rounds, trace.rounds)
+    M = trace.system.M
+    iv = [1] * (M - 1) if intervals is None else list(intervals[: M - 1])
+
+    split = np.zeros(R)
+    agg = np.zeros((M - 1, R))
+    fired = np.zeros((M - 1, R), dtype=bool)
+    total = np.zeros(R)
+    participants = np.zeros(R, dtype=int)
+    for r in range(R):
+        res = round_latency(trace, r, cuts, backend=backend)
+        split[r] = res.split
+        agg[:, r] = res.agg
+        participants[r] = res.n_participants
+        tot = res.split
+        for m in range(M - 1):
+            if fires(r, iv[m]):
+                fired[m, r] = True
+                tot = tot + res.agg[m]
+        total[r] = tot
+    return FleetResult(split, agg, fired, total, participants)

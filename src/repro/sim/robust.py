@@ -1,0 +1,78 @@
+"""Robust system optimization: trace quantiles in place of point estimates.
+
+``TraceLatency`` implements the ``LatencyModel`` protocol of
+``repro.core.problem``: T_S(μ) and T_{m,A}(μ) become the q-quantile (p50 =
+typical, p95 = straggler-robust) of the per-round latencies a scenario
+trace produces for that cut vector.  Attaching it to an ``HsflProblem``
+(``robust_problem``) leaves the convergence side of Θ' untouched, so the
+existing Proposition-1 MA solver, Dinkelbach MS solver, and BCD loop
+optimize (I, μ) against the empirical regime with no changes — on the
+homogeneous-paper scenario the quantiles collapse to exactly Eq. (17)/(18)
+and the robust problem *is* the nominal one.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Sequence, Tuple
+
+import numpy as np
+
+from ..core.problem import HsflProblem
+from .fleet import simulate_rounds
+from .scenarios import SystemTrace
+
+
+class TraceLatency:
+    """q-quantile pricing of the latency terms over a ``SystemTrace``.
+
+    Per-round latencies are simulated once per cut vector through the
+    vectorized fleet path and cached — the BCD/Dinkelbach solvers revisit
+    the same lattice points many times.
+    """
+
+    def __init__(
+        self,
+        trace: SystemTrace,
+        quantile: float = 0.95,
+        rounds: int = None,
+        backend: str = "numpy",
+    ):
+        self.trace = trace
+        self.quantile = float(quantile)
+        self.rounds = trace.rounds if rounds is None else min(rounds, trace.rounds)
+        self.backend = backend
+        self._cache: Dict[Tuple[int, ...], Tuple[np.ndarray, np.ndarray]] = {}
+
+    def per_round(self, cuts: Sequence[int]) -> Tuple[np.ndarray, np.ndarray]:
+        """(split [R], agg [M-1, R]) for this cut vector, cached."""
+        key = tuple(int(c) for c in cuts)
+        hit = self._cache.get(key)
+        if hit is None:
+            res = simulate_rounds(
+                self.trace, key, rounds=self.rounds, backend=self.backend
+            )
+            hit = self._cache[key] = (res.split, res.agg)
+        return hit
+
+    # ------------------------------------------------------------------ #
+    # LatencyModel protocol
+    # ------------------------------------------------------------------ #
+    def split_T(self, cuts: Sequence[int]) -> float:
+        split, _ = self.per_round(cuts)
+        return float(np.quantile(split, self.quantile))
+
+    def agg_T(self, cuts: Sequence[int], m: int) -> float:
+        _, agg = self.per_round(cuts)
+        return float(np.quantile(agg[m], self.quantile))
+
+
+def robust_problem(
+    problem: HsflProblem,
+    trace: SystemTrace,
+    quantile: float = 0.95,
+    rounds: int = None,
+    backend: str = "numpy",
+) -> HsflProblem:
+    """The same MA+MS problem, priced at the trace's q-quantile latencies."""
+    model = TraceLatency(trace, quantile=quantile, rounds=rounds, backend=backend)
+    return dataclasses.replace(problem, latency_model=model)

@@ -10,6 +10,9 @@ from repro.configs.shapes import concrete_inputs
 from repro.core import build_train_step_a, build_train_step_b, init_state_a, init_state_b
 from repro.core.engine import engine_b_to_full
 from repro.core.tiers import default_plan
+
+# multi-arch jit compiles dominate (~2 min total): out of the CI fast subset
+pytestmark = pytest.mark.slow
 from repro.models.model import SplittableModel
 from repro.optim import sgd
 

@@ -1,0 +1,186 @@
+"""Fleet simulator: oracle equivalence, golden pricing, robust solving."""
+import numpy as np
+import pytest
+
+from repro.configs.vgg16_cifar10 import SPEC as VGG
+from repro.core import (
+    HsflProblem, SystemSpec, build_profile, solve_bcd, synthetic_hyperspec,
+)
+from repro.core.convergence import theorem1_bound
+from repro.core.latency import (
+    aggregation_latency, per_client_split_latency, split_latency, split_stages,
+)
+from repro.sim import (
+    SCENARIOS, TraceLatency, make_trace, robust_problem, simulate,
+    simulate_rounds,
+)
+
+CUTS = (3, 8)
+INTERVALS = (2, 3, 1)
+
+
+def small_setup(num_clients=20, num_edges=5, batch=2, seed=0):
+    prof = build_profile(VGG, batch=batch)
+    system = SystemSpec.paper_three_tier(
+        num_clients=num_clients, num_edges=num_edges, seed=seed
+    )
+    return prof, system
+
+
+# --------------------------------------------------------------------------- #
+# stage chain
+# --------------------------------------------------------------------------- #
+
+
+def test_stage_chain_covers_all_work():
+    prof, system = small_setup()
+    stages = split_stages(prof, CUTS)
+    fwd = sum(s.work for s in stages if s.kind == "compute_fwd")
+    bwd = sum(s.work for s in stages if s.kind == "compute_bwd")
+    assert fwd == pytest.approx(prof.flops_fwd.sum())
+    assert bwd == pytest.approx(prof.flops_bwd.sum())
+    # chain is fwd up then bwd down: one uplink + one downlink per boundary
+    assert sum(1 for s in stages if s.kind == "uplink") == system.M - 1
+    assert sum(1 for s in stages if s.kind == "downlink") == system.M - 1
+
+
+def test_per_client_split_latency_max_is_split_latency():
+    prof, system = small_setup()
+    t = per_client_split_latency(prof, system, CUTS)
+    assert float(np.max(t)) == split_latency(prof, system, CUTS)
+
+
+# --------------------------------------------------------------------------- #
+# event core vs vectorized fast path (bit-exact)
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_event_core_matches_fleet_bit_exact(scenario, backend):
+    prof, system = small_setup()
+    trace = make_trace(scenario, prof, system, rounds=8, seed=123)
+    ev = simulate(trace, CUTS, INTERVALS)
+    fl = simulate_rounds(trace, CUTS, INTERVALS, backend=backend)
+    assert np.array_equal(ev.split, fl.split)
+    assert np.array_equal(ev.agg, fl.agg)
+    assert np.array_equal(ev.fired, fl.fired)
+    assert np.array_equal(ev.total, fl.total)
+    assert np.array_equal(ev.participants, fl.participants)
+
+
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+def test_event_core_matches_fleet_n256(scenario):
+    prof = build_profile(VGG, batch=2)
+    system = SystemSpec.paper_three_tier(num_clients=256, num_edges=8, seed=1)
+    trace = make_trace(scenario, prof, system, rounds=4, seed=7)
+    ev = simulate(trace, CUTS, INTERVALS)
+    fl = simulate_rounds(trace, CUTS, INTERVALS)
+    assert np.array_equal(ev.split, fl.split)
+    assert np.array_equal(ev.total, fl.total)
+
+
+def test_trace_determinism():
+    prof, system = small_setup()
+    a = make_trace("flaky-wan", prof, system, rounds=6, seed=9)
+    b = make_trace("flaky-wan", prof, system, rounds=6, seed=9)
+    ra = simulate_rounds(a, CUTS)
+    rb = simulate_rounds(b, CUTS)
+    assert np.array_equal(ra.total, rb.total)
+    c = make_trace("flaky-wan", prof, system, rounds=6, seed=10)
+    assert not np.array_equal(ra.total, simulate_rounds(c, CUTS).total)
+
+
+def test_every_round_has_a_participant():
+    prof, system = small_setup(num_clients=4, num_edges=2)
+    trace = make_trace(
+        "diurnal-churn", prof, system, rounds=48, seed=3, p_min=0.01, p_max=0.2
+    )
+    res = simulate_rounds(trace, CUTS)
+    assert (res.participants >= 1).all()
+
+
+def test_dropout_and_join_events_emitted():
+    from repro.sim.events import DROPOUT, JOIN, simulate_round
+
+    prof, system = small_setup(num_clients=8)
+    trace = make_trace("diurnal-churn", prof, system, rounds=32, seed=5)
+    kinds = set()
+    prev = None
+    for r in range(trace.rounds):
+        res = simulate_round(trace, r, CUTS, prev_available=prev)
+        kinds |= {e.kind for e in res.events}
+        prev = trace.round_state(r).available
+    assert DROPOUT in kinds and JOIN in kinds
+
+
+# --------------------------------------------------------------------------- #
+# golden: homogeneous-paper == the analytic model, exactly
+# --------------------------------------------------------------------------- #
+
+
+def test_homogeneous_golden_reproduces_analytic_model():
+    prof, system = small_setup()
+    trace = make_trace("homogeneous-paper", prof, system, rounds=8, seed=0)
+    res = simulate_rounds(trace, CUTS)
+    ts = split_latency(prof, system, CUTS)
+    assert all(s == ts for s in res.split)  # exact, not approx
+    for m in range(system.M - 1):
+        ta = aggregation_latency(prof, system, CUTS, m)
+        assert all(a == ta for a in res.agg[m])
+    # and through the quantile pricing layer too
+    lat = TraceLatency(trace, quantile=0.95)
+    assert lat.split_T(CUTS) == ts
+    assert lat.agg_T(CUTS, 0) == aggregation_latency(prof, system, CUTS, 0)
+
+
+# --------------------------------------------------------------------------- #
+# robust solving
+# --------------------------------------------------------------------------- #
+
+
+def paper_problem():
+    prof = build_profile(VGG, batch=16)
+    system = SystemSpec.paper_three_tier(num_clients=20, num_edges=5, seed=0)
+    hp = synthetic_hyperspec(VGG.n_units, 20, beta=3.0, seed=0)
+    floor = theorem1_bound(hp, 10**9, [1, 1, 1], (3, 8))
+    return HsflProblem(prof, system, hp, eps=6.0 * floor)
+
+
+def test_robust_problem_homogeneous_equals_nominal():
+    prob = paper_problem()
+    trace = make_trace(
+        "homogeneous-paper", prob.profile, prob.system, rounds=16, seed=0
+    )
+    rp = robust_problem(prob, trace, quantile=0.95)
+    cuts, iv = (3, 8), (2, 3, 1)
+    assert rp.split_T(cuts) == prob.split_T(cuts)
+    assert np.array_equal(rp.agg_T(cuts), prob.agg_T(cuts))
+    assert rp.theta(iv, cuts) == prob.theta(iv, cuts)
+
+
+@pytest.mark.slow
+def test_bcd_solves_straggler_tail_and_moves_the_cut():
+    prob = paper_problem()
+    nominal = solve_bcd(prob)
+    trace = make_trace(
+        "straggler-tail", prob.profile, prob.system, rounds=64, seed=0
+    )
+    res = solve_bcd(robust_problem(prob, trace, quantile=0.95))
+    assert np.isfinite(res.theta)
+    # heavy on-device tail -> robust optimum keeps fewer units client-side
+    assert res.cuts != nominal.cuts
+    assert res.cuts[0] <= nominal.cuts[0]
+    # robust pricing can only see the nominal system or worse
+    assert res.theta >= nominal.theta
+
+
+def test_trace_latency_p95_dominates_p50():
+    prob = paper_problem()
+    trace = make_trace(
+        "straggler-tail", prob.profile, prob.system, rounds=64, seed=0
+    )
+    p50 = TraceLatency(trace, quantile=0.5)
+    p95 = TraceLatency(trace, quantile=0.95)
+    assert p95.split_T(CUTS) >= p50.split_T(CUTS)
+    assert p95.split_T(CUTS) > split_latency(prob.profile, prob.system, CUTS)

@@ -18,6 +18,9 @@ from repro.models.model import SplittableModel
 from repro.models.vgg import VggModel
 from repro.optim import sgd
 
+# real multi-round training end to end (~1.5 min): out of the CI fast subset
+pytestmark = pytest.mark.slow
+
 
 def run_training(model, spec, loader, plan, rounds, lr=0.05, seed=0):
     opt = sgd(lr)
