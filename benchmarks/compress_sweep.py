@@ -1,0 +1,206 @@
+"""Compression sweep: the (ratio, ω) knob priced end-to-end (DESIGN.md §9).
+
+Four asserted claims, not just tables:
+
+1. **Ratio sweep** — as the fed-server model-byte ratio drops, the
+   BCD-optimal cut moves deeper (tier-1 hosts more units: the per-round
+   model upload that punished deep client cuts got cheap), the optimal
+   aggregation intervals weakly shrink (cheap syncs → sync more often),
+   the optimal per-round latency weakly drops, and so does total
+   converged time.
+2. **Scheme table** — identity / int8 / top-k priced with their real
+   (ratio, ω); the ω-inflated problem stays feasible and its optimum is
+   reported next to the full-precision one.
+3. **Bound check under compression** — a REAL (tiny-VGG) HSFL run with
+   int8-compressed fed-server aggregation: the measured average gradient
+   norm must sit below Theorem 1 evaluated with the codec's ω.  (The
+   engine path rounds deterministically — error second moment ≤ ω but not
+   unbiased — so this is an empirical sanity check of the ω-inflated
+   bound, not a proof of the unbiased-noise model it derives from.)
+4. **Kernel oracle** — the fused quantize→aggregate→dequantize Pallas
+   path equals its ``ref.py`` oracle bit-for-bit (interpret mode) at every
+   tested (N, J, P, tile) shape, including pad-branch shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .common import emit, paper_problem
+
+
+# --------------------------------------------------------------------------- #
+# 1. ratio sweep through the BCD solver
+# --------------------------------------------------------------------------- #
+
+
+def ratio_sweep(quick: bool, seed: int) -> list:
+    from repro.compress import CompressionSpec
+    from repro.core import solve_bcd
+
+    prob = paper_problem(seed=seed)
+    ratios = (1.0, 0.25, 0.05) if quick else (1.0, 0.5, 0.25, 0.1, 0.05)
+    results = []
+    for r in ratios:
+        comp = CompressionSpec.uniform(prob.M, model_ratio=r)
+        res = solve_bcd(prob, compression=comp)
+        num = prob.with_compression(comp).numerator(res.intervals, res.cuts)
+        results.append((r, res, num))
+    rows = [(r, res.cuts[0], str(res.cuts), str(res.intervals),
+             num, res.total_latency) for r, res, num in results]
+    emit(rows, ("model_ratio", "tier1_depth", "cuts", "intervals",
+                "round_latency", "converged_T"))
+
+    depth = [res.cuts[0] for _, res, _ in results]
+    rlat = [num for _, _, num in results]
+    tot = [res.total_latency for _, res, _ in results]
+    imax = [max(res.intervals) for _, res, _ in results]
+    # cheaper model bytes -> the optimal cut moves (weakly) deeper, and
+    # strictly deeper across the full sweep
+    assert all(a <= b for a, b in zip(depth, depth[1:])), depth
+    assert depth[-1] > depth[0], depth
+    # cheaper bytes -> weakly lower optimal round latency / converged time
+    assert all(a >= b - 1e-12 for a, b in zip(rlat, rlat[1:])), rlat
+    assert all(a >= b - 1e-9 for a, b in zip(tot, tot[1:])), tot
+    # cheaper syncs -> aggregate (weakly) more often
+    assert all(a >= b for a, b in zip(imax, imax[1:])), imax
+    return rows
+
+
+# --------------------------------------------------------------------------- #
+# 2. the three schemes at their real (ratio, omega)
+# --------------------------------------------------------------------------- #
+
+
+def scheme_table(quick: bool, seed: int) -> list:
+    from repro.compress import SCHEMES, CompressionSpec
+    from repro.core import solve_bcd
+
+    prob = paper_problem(seed=seed)
+    rows = []
+    schemes = (
+        SCHEMES["identity"](),
+        SCHEMES["int8"](tile=256),
+        SCHEMES["top-k"](0.25),
+    )
+    for scheme in schemes:
+        comp_spec = None
+        if scheme.ratio < 1.0 or scheme.omega > 0.0:
+            comp_spec = CompressionSpec.uniform(
+                prob.M, model_ratio=scheme.ratio, omega=scheme.omega
+            )
+        res = solve_bcd(prob, compression=comp_spec)
+        assert np.isfinite(res.theta), (scheme.name, res)
+        rows.append((scheme.name, scheme.ratio, scheme.omega,
+                     str(res.cuts), str(res.intervals), res.theta))
+    emit(rows, ("scheme", "ratio", "omega", "cuts", "intervals", "theta"))
+    # identity == the uncompressed optimum, exactly
+    base = solve_bcd(prob)
+    assert rows[0][3] == str(base.cuts) and rows[0][5] == base.theta, rows[0]
+    return rows
+
+
+# --------------------------------------------------------------------------- #
+# 3. Theorem 1 with omega vs a real compressed training run
+# --------------------------------------------------------------------------- #
+
+
+def bound_check_compressed(quick: bool, seed: int) -> list:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.compress import Int8Stochastic
+    from repro.configs.vgg16_cifar10 import SPEC as VGG
+    from repro.core import build_train_step_a, init_state_a
+    from repro.core.convergence import theorem1_bound
+    from repro.core.estimator import HyperEstimator
+    from repro.core.tiers import default_plan
+    from repro.data import image_loader, make_cifar10_like, partition_iid
+    from repro.models.vgg import VggModel
+    from repro.optim import sgd
+
+    spec = dataclasses.replace(
+        VGG, conv_channels=(8, 16, 16), pool_after=(0, 1), fc_dims=(32, 10),
+        name="vgg-tiny",
+    )
+    N, gamma = 4, 0.01
+    rounds = 10 if quick else 25
+    codec = Int8Stochastic(tile=256)
+    ds = make_cifar10_like(256, noise=0.4, seed=seed + 11)
+    loader = image_loader(
+        ds, partition_iid(len(ds), N, seed + 11), batch=8, seed=seed + 11
+    )
+    model = VggModel(spec)
+    eval_batch = {"images": jnp.asarray(ds.images[:192]),
+                  "labels": jnp.asarray(ds.labels[:192])}
+    gbar_fn = jax.jit(lambda p, b: jax.grad(model.loss_fn)(p, b))
+
+    plan = default_plan(spec.n_units, N, cuts=(2, 3), intervals=(2, 1, 1),
+                        entities=(N, 2, 1))
+    opt = sgd(gamma)
+    state = init_state_a(model, plan, opt, jax.random.PRNGKey(seed + 11))
+    step = jax.jit(build_train_step_a(model, plan, opt, compressor=codec))
+    grad_fn = jax.jit(
+        lambda p, b: jax.vmap(jax.value_and_grad(model.loss_fn))(p, b)
+    )
+    est = HyperEstimator(plan.n_units, N, gamma)
+    sq_norms = []
+    for _ in range(rounds):
+        batch = {k: jnp.asarray(v) for k, v in loader.next_round().items()}
+        losses, grads = grad_fn(state.params, batch)
+        est.observe(state.params, grads, float(jnp.mean(losses)))
+        wbar = jax.tree.map(lambda x: jnp.mean(x, axis=0), state.params)
+        g = gbar_fn(wbar, eval_batch)
+        sq_norms.append(float(
+            sum(jnp.sum(x * x) for x in jax.tree.leaves(g))
+        ))
+        state, _ = step(state, batch)
+    hp = est.hyperspec()
+    measured = float(np.mean(sq_norms))
+    bound = theorem1_bound(hp, rounds, plan.intervals, plan.cuts,
+                           omega=codec.omega)
+    rows = [(f"int8 I1={plan.intervals[0]}", codec.omega, measured, bound,
+             measured <= bound)]
+    emit(rows, ("run", "omega", "measured_avg_grad_sq", "thm1_bound_omega",
+                "holds"))
+    assert all(r[4] for r in rows), rows
+    return rows
+
+
+# --------------------------------------------------------------------------- #
+# 4. fused q8 kernel vs its oracle, bit for bit
+# --------------------------------------------------------------------------- #
+
+
+def kernel_oracle(quick: bool, seed: int) -> list:
+    from repro.kernels.tiered_aggregate.check import assert_q8_matches_oracle
+
+    shapes = [(16, 4, 2048, 256), (6, 2, 257, 128), (4, 1, 100, 128)]
+    if not quick:
+        shapes += [(20, 20, 1000, 128), (8, 2, 5000, 2048), (12, 3, 333, 128)]
+    rows = []
+    for (N, J, P, tile) in shapes:
+        assert_q8_matches_oracle(N, J, P, tile, seed=seed)
+        rows.append((f"N={N} J={J} P={P} tile={tile}", True))
+    emit(rows, ("shape", "bit_exact"))
+    return rows
+
+
+def main(quick: bool = False, seed: int = 0) -> list:
+    out = []
+    out += ratio_sweep(quick, seed)
+    out += scheme_table(quick, seed)
+    out += kernel_oracle(quick, seed)
+    out += bound_check_compressed(quick, seed)
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    main(args.quick, seed=args.seed)

@@ -14,6 +14,8 @@ Harness -> paper artifact map (details in DESIGN.md §7):
     fig45_benchmarks      Figs. 4-5  HSFL vs the 5 baseline policies
     fig67_resources       Figs. 6-7  resource scaling + tier count
     sim_scale             (ours)     fleet simulator: oracle check + 10^6-client sweep
+    compress_sweep        (ours)     compression ratio/omega priced through BCD,
+                                     Thm 1 + the fused q8 kernel oracle
     ablations             Figs. 8-9  MA / MS ablations (+ real training)
     bound_check           Thm 1      empirical gradient norms vs the bound
     roofline              §g         three-term roofline per (arch x shape)
@@ -27,8 +29,8 @@ import time
 
 def _registry(args):
     from . import (
-        ablations, bound_check, fig2_latency_vs_cut, fig45_benchmarks,
-        fig67_resources, roofline, sim_scale,
+        ablations, bound_check, compress_sweep, fig2_latency_vs_cut,
+        fig45_benchmarks, fig67_resources, roofline, sim_scale,
     )
 
     return [
@@ -45,6 +47,9 @@ def _registry(args):
          lambda: ablations.main(args.quick, seed=args.seed)),
         ("bound_check", "training",
          lambda: bound_check.main(args.quick, seed=args.seed)),
+        # runs a (tiny) real compressed training round for the omega bound
+        ("compress_sweep", "training",
+         lambda: compress_sweep.main(args.quick, seed=args.seed)),
         ("roofline", "extracted", lambda: _roofline(roofline)),
     ]
 

@@ -1,0 +1,20 @@
+"""The no-op codec: full-precision wire, zero error.
+
+Exists so every compression code path (engines, kernel wrapper, sweeps)
+can be exercised with a ``Compressor`` whose output is bit-identical to
+the uncompressed path — the differential anchor of
+``tests/test_engines_equal.py``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Identity:
+    name: str = "identity"
+    ratio: float = 1.0
+    omega: float = 0.0
+
+    def transform(self, x, key=None):
+        return x

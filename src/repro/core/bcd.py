@@ -4,12 +4,19 @@ Alternates P1 (``solve_ma``) and P2 (``solve_ms``) from a feasible starting
 point until |ΔΘ'| ≤ ε_bcd. Each block solve is optimal for its block, so Θ'
 is non-increasing and the iteration terminates; the result is the paper's
 efficient sub-optimal solution to problem (20).
+
+Compression is a first-class knob here: pass ``compression=`` (or attach it
+to the problem via ``HsflProblem.with_compression``) and both block solvers
+re-optimize (I, μ) against the compressed wire — cheaper model bytes pull
+the optimal cut deeper and the optimal intervals down, which
+``benchmarks/compress_sweep.py`` sweeps and asserts.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 from typing import List, Optional, Sequence, Tuple
 
+from ..compress.base import CompressionSpec
 from .ma_solver import solve_ma
 from .ms_solver import solve_ms
 from .problem import INFEASIBLE, HsflProblem
@@ -31,7 +38,10 @@ def solve_bcd(
     init_intervals: Optional[Sequence[int]] = None,
     tol: float = 1e-6,
     max_iters: int = 50,
+    compression: Optional[CompressionSpec] = None,
 ) -> BcdResult:
+    if compression is not None:
+        problem = problem.with_compression(compression)
     M, U = problem.M, problem.n_units
     if init_cuts is None:
         # evenly spread cuts as the feasible starting point

@@ -36,13 +36,24 @@ def tier_G2_sums(G2: np.ndarray, cuts: Sequence[int]) -> np.ndarray:
 
 
 def theorem1_bound(
-    hp: HyperSpec, R: int, intervals: Sequence[int], cuts: Sequence[int]
+    hp: HyperSpec,
+    R: int,
+    intervals: Sequence[int],
+    cuts: Sequence[int],
+    omega: float = 0.0,
 ) -> float:
-    """RHS of Eq. (8): bound on (1/R) Σ_t E||∇f||²."""
+    """RHS of Eq. (8): bound on (1/R) Σ_t E||∇f||².
+
+    ``omega`` is the compression-error second moment ω of a lossy
+    aggregation wire (DESIGN.md §9): an unbiased codec with
+    E‖C(g) − g‖² ≤ ω‖g‖² inflates the stochastic-gradient variance term
+    to (1 + ω)σ², leaving the drift term untouched.  ω = 0 recovers the
+    paper's full-precision bound exactly.
+    """
     g, b = hp.gamma, hp.beta
     d = tier_G2_sums(hp.G2, cuts)
     term1 = 2.0 * hp.theta0 / (g * R)
-    term2 = b * g * hp.sigma2_sum / hp.num_clients
+    term2 = b * g * (1.0 + omega) * hp.sigma2_sum / hp.num_clients
     term3 = 4.0 * b**2 * g**2 * sum(
         (I**2) * dm for I, dm in zip(intervals[:-1], d[:-1]) if I > 1
     )
@@ -50,12 +61,16 @@ def theorem1_bound(
 
 
 def corollary1_rounds(
-    hp: HyperSpec, eps: float, intervals: Sequence[int], cuts: Sequence[int]
+    hp: HyperSpec,
+    eps: float,
+    intervals: Sequence[int],
+    cuts: Sequence[int],
+    omega: float = 0.0,
 ) -> Optional[float]:
     """Eq. (10): rounds to reach target ε; None if the schedule cannot reach ε."""
     g, b = hp.gamma, hp.beta
     d = tier_G2_sums(hp.G2, cuts)
-    denom = eps - b * g * hp.sigma2_sum / hp.num_clients
+    denom = eps - b * g * (1.0 + omega) * hp.sigma2_sum / hp.num_clients
     denom -= 4.0 * b**2 * g**2 * sum(
         (I**2) * dm for I, dm in zip(intervals[:-1], d[:-1]) if I > 1
     )
@@ -64,9 +79,15 @@ def corollary1_rounds(
     return 2.0 * hp.theta0 / (g * denom)
 
 
-def bound_constants(hp: HyperSpec, eps: float) -> Tuple[float, float]:
-    """(c, kappa) with denominator = c - kappa * Σ 1{I>1} I² d_m  (Eq. 22/24)."""
-    c = eps - hp.beta * hp.gamma * hp.sigma2_sum / hp.num_clients
+def bound_constants(
+    hp: HyperSpec, eps: float, omega: float = 0.0
+) -> Tuple[float, float]:
+    """(c, kappa) with denominator = c - kappa * Σ 1{I>1} I² d_m  (Eq. 22/24).
+
+    ω shrinks c (the ε headroom left after the (1+ω)-inflated variance
+    term), which is how compression noise reaches the MA/MS solvers.
+    """
+    c = eps - hp.beta * hp.gamma * (1.0 + omega) * hp.sigma2_sum / hp.num_clients
     kappa = 4.0 * hp.beta**2 * hp.gamma**2
     return c, kappa
 

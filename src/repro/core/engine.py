@@ -74,7 +74,7 @@ def init_state_a(model, plan: TierPlan, opt: Optimizer, key) -> TrainState:
 
 def build_train_step_a(
     model, plan: TierPlan, opt: Optimizer, *, sync_opt_state: bool = False,
-    fed_round=None,
+    fed_round=None, compressor=None,
 ) -> Callable[[TrainState, Params], Tuple[TrainState, jax.Array]]:
     """Engine-A step: vmapped per-client update + hierarchical aggregation.
 
@@ -84,14 +84,35 @@ def build_train_step_a(
     the round counter; False/True compile the specialized local/sync round
     steps (see ``tiers.synchronize``) — the production dispatch is
     ``sync_step if (t+1) % I == 0 else local_step``.
+
+    ``compressor`` (a ``repro.compress.Compressor``) puts the fed-server
+    model exchange on a lossy wire: each client's uploaded replica goes
+    through ``compressor.transform`` before the Eq. 4 mean — the same
+    transform Engine B applies per entity, so the two engines stay equal
+    (``tests/test_engines_equal.py``).  Optimizer moments are synchronized
+    full-precision; only the priced parameter wire is compressed.
+
+    The engines run the codec *key-less*, i.e. deterministic nearest
+    rounding: reproducible and what the equality tests pin, with error
+    second moment still ≤ the codec's ω, but not unbiased — Theorem 1's
+    (1+ω) variance reading is exact only for the keyed stochastic mode,
+    so empirical bound checks over this path are conservative heuristics
+    (see ``benchmarks/compress_sweep.py``).
     """
+    compress_fn = (
+        None if compressor is None
+        else lambda x: jax.vmap(lambda v: compressor.transform(v))(x)
+    )
 
     def step_fn(state: TrainState, batch: Params) -> Tuple[TrainState, jax.Array]:
         losses, grads = jax.vmap(jax.value_and_grad(model.loss_fn))(
             state.params, batch
         )
         new_params, new_opt = opt.update(state.params, grads, state.opt_state)
-        new_params = synchronize(new_params, plan, state.step, fed_round=fed_round)
+        new_params = synchronize(
+            new_params, plan, state.step, fed_round=fed_round,
+            compress_fn=compress_fn,
+        )
         if sync_opt_state and jax.tree.leaves(new_opt):
             new_opt = jax.tree.map(
                 lambda x: x, new_opt
@@ -139,7 +160,7 @@ def init_state_b(model, plan: TierPlan, opt: Optimizer, key) -> TrainState:
 
 
 def build_train_step_b(
-    model, plan: TierPlan, opt: Optimizer
+    model, plan: TierPlan, opt: Optimizer, *, compressor=None
 ) -> Callable[[TrainState, Params], Tuple[TrainState, jax.Array]]:
     """Engine-B step: literal split execution.
 
@@ -147,6 +168,10 @@ def build_train_step_b(
     entity batches; ... up to the single tier-M model over the global batch.
     Backward: one value_and_grad through the composed function; per-tier
     gradients rescaled to implement per-client SGD + Eq. 3 exactly.
+
+    ``compressor`` compresses each entity's model upload before the Eq. 4
+    fed-server mean — the literal wire the latency model prices with
+    ``model_ratio`` (DESIGN.md §9).
     """
     N = plan.num_clients
     M = plan.M
@@ -262,6 +287,14 @@ def build_train_step_b(
                 do = (state.step + 1) % interval == 0
 
                 def agg(t):
+                    if compressor is not None:
+                        # lossy fed-server upload, per entity (axis 0)
+                        t = jax.tree.map(
+                            lambda x: jax.vmap(
+                                lambda v: compressor.transform(v)
+                            )(x),
+                            t,
+                        )
                     return jax.tree.map(
                         lambda x: jnp.broadcast_to(
                             jnp.mean(x, 0, keepdims=True), x.shape

@@ -15,6 +15,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..compress.base import CompressionSpec, act_ratio, model_ratio
 from ..models.spec import ModelSpec
 from ..models.vgg import VggSpec
 
@@ -202,8 +203,16 @@ class Stage:
     work: float
 
 
-def split_stages(profile: LayerProfile, cuts: Sequence[int]) -> Tuple[Stage, ...]:
-    """Canonical per-client stage chain for cut vector μ (Eqs. 11–14)."""
+def split_stages(
+    profile: LayerProfile,
+    cuts: Sequence[int],
+    compression: Optional[CompressionSpec] = None,
+) -> Tuple[Stage, ...]:
+    """Canonical per-client stage chain for cut vector μ (Eqs. 11–14).
+
+    ``compression`` scales boundary-m's activation/gradient bits by
+    ``act_ratio[m]`` (DESIGN.md §9); None prices the full-precision wire.
+    """
     M = len(cuts) + 1
     b = profile.batch
     bnds = [0, *cuts, profile.n_units]
@@ -211,7 +220,7 @@ def split_stages(profile: LayerProfile, cuts: Sequence[int]) -> Tuple[Stage, ...
     def boundary_bits(m: int) -> float:
         cut = bnds[m + 1]
         act = 0.0 if cut == 0 else float(profile.act_bytes[cut - 1])
-        return b * act * BITS
+        return b * act * BITS * act_ratio(compression, m)
 
     stages: List[Stage] = []
     for m in range(M):  # forward sweep: Eq. (11) interleaved with Eq. (12)
@@ -235,7 +244,10 @@ def stage_rate(system: SystemSpec, stage: Stage) -> np.ndarray:
 
 
 def per_client_split_latency(
-    profile: LayerProfile, system: SystemSpec, cuts: Sequence[int]
+    profile: LayerProfile,
+    system: SystemSpec,
+    cuts: Sequence[int],
+    compression: Optional[CompressionSpec] = None,
 ) -> np.ndarray:
     """Per-client round latency [N], accumulated in canonical chain order.
 
@@ -244,16 +256,21 @@ def per_client_split_latency(
     order — the homogeneous golden test in ``tests/test_sim.py`` pins the
     two paths to exact floating-point equality.
     """
-    stages = split_stages(profile, cuts)
+    stages = split_stages(profile, cuts, compression)
     t = np.zeros(system.num_clients)
     for s in stages:
         t = t + s.work / stage_rate(system, s)
     return t
 
 
-def split_latency(profile: LayerProfile, system: SystemSpec, cuts: Sequence[int]) -> float:
+def split_latency(
+    profile: LayerProfile,
+    system: SystemSpec,
+    cuts: Sequence[int],
+    compression: Optional[CompressionSpec] = None,
+) -> float:
     """T_S(μ): per-round split-training latency, Eq. (17)."""
-    return float(np.max(per_client_split_latency(profile, system, cuts)))
+    return float(np.max(per_client_split_latency(profile, system, cuts, compression)))
 
 
 def aggregation_phases(
@@ -263,21 +280,30 @@ def aggregation_phases(
     m: int,
     up_rate: Optional[np.ndarray] = None,
     down_rate: Optional[np.ndarray] = None,
+    compression: Optional[CompressionSpec] = None,
 ) -> Tuple[np.ndarray, np.ndarray]:
-    """Per-entity (upload, download) times [J_m] of a tier-m sync, Eq. (18)."""
-    lam = profile.tier_param_bytes(cuts, m) * BITS
+    """Per-entity (upload, download) times [J_m] of a tier-m sync, Eq. (18).
+
+    ``compression`` scales the model bits λ_m by ``model_ratio[m]`` — the
+    wire the quantized aggregation kernel actually carries (DESIGN.md §9).
+    """
+    lam = profile.tier_param_bytes(cuts, m) * BITS * model_ratio(compression, m)
     up = lam / (system.model_up[m] if up_rate is None else up_rate)
     down = lam / (system.model_down[m] if down_rate is None else down_rate)
     return up, down
 
 
 def aggregation_latency(
-    profile: LayerProfile, system: SystemSpec, cuts: Sequence[int], m: int
+    profile: LayerProfile,
+    system: SystemSpec,
+    cuts: Sequence[int],
+    m: int,
+    compression: Optional[CompressionSpec] = None,
 ) -> float:
     """T_{m,A}(μ): fed-server aggregation latency of tier m, Eq. (18)."""
     if system.entities[m] <= 1:
         return 0.0  # Eq. (15)/(16) indicator
-    up, down = aggregation_phases(profile, system, cuts, m)
+    up, down = aggregation_phases(profile, system, cuts, m, compression=compression)
     return float(np.max(up)) + float(np.max(down))
 
 
@@ -287,13 +313,14 @@ def total_latency(
     cuts: Sequence[int],
     intervals: Sequence[int],
     R: float,
+    compression: Optional[CompressionSpec] = None,
 ) -> float:
     """T(I, μ), Eq. (19)."""
-    ts = split_latency(profile, system, cuts)
+    ts = split_latency(profile, system, cuts, compression)
     tot = R * ts
     for m in range(system.M - 1):
         tot += np.floor(R / intervals[m]) * aggregation_latency(
-            profile, system, cuts, m
+            profile, system, cuts, m, compression
         )
     return float(tot)
 

@@ -21,15 +21,24 @@ Eqs. (17)–(18); an optional ``latency_model`` (any object with
 ``split_T(cuts)`` / ``agg_T(cuts, m)`` — see ``repro.sim.robust``) swaps in
 empirical per-round quantiles from a fleet-simulation trace, so the same
 solvers optimize against heterogeneous / straggler / churn regimes.
+
+An optional ``compression`` (``repro.compress.CompressionSpec``) prices a
+lossy wire on both sides of the fraction: per-link byte ratios shrink the
+latency numerator (Eqs. 12–16), ω shrinks the denominator headroom c
+(Theorem 1's σ² → (1+ω)σ²).  When a trace-based ``latency_model`` is
+attached it must price the same ratios itself (``robust_problem`` wires
+this up); ω always enters through ``constants()`` here.
 """
 from __future__ import annotations
 
+import dataclasses
 import itertools
 from dataclasses import dataclass
 from typing import Iterator, List, Optional, Protocol, Sequence, Tuple
 
 import numpy as np
 
+from ..compress.base import CompressionSpec
 from .convergence import HyperSpec, bound_constants, tier_G2_sums
 from .latency import (
     LayerProfile,
@@ -57,6 +66,7 @@ class HsflProblem:
     hyper: HyperSpec
     eps: float
     latency_model: Optional[LatencyModel] = None
+    compression: Optional[CompressionSpec] = None
 
     @property
     def M(self) -> int:
@@ -66,12 +76,37 @@ class HsflProblem:
     def n_units(self) -> int:
         return self.profile.n_units
 
+    @property
+    def omega(self) -> float:
+        """Compression-error second moment ω (0 for the f32 wire)."""
+        return 0.0 if self.compression is None else self.compression.omega
+
+    def with_compression(self, compression: Optional[CompressionSpec]) -> "HsflProblem":
+        """The same problem priced over a compressed wire: byte ratios enter
+        the latency terms (Eqs. 12–16), ω enters the bound denominator —
+        the solvers then re-optimize (I, μ) under both, unchanged.
+
+        Refuses to change the wire under an attached ``latency_model``: the
+        model's cached quantiles price the *old* wire, so ω and the latency
+        terms would describe two different codecs.  Attach compression
+        first, then re-price (``robust_problem`` threads it to the trace).
+        """
+        if compression is not None:
+            compression.validate_for(self.M)
+        if self.latency_model is not None and compression != self.compression:
+            raise ValueError(
+                "cannot change compression under an attached latency_model "
+                "(its quantiles price the old wire); set compression on the "
+                "base problem and re-attach via robust_problem"
+            )
+        return dataclasses.replace(self, compression=compression)
+
     # ------------------------------------------------------------------ #
     # objective pieces
     # ------------------------------------------------------------------ #
     def constants(self) -> Tuple[float, float]:
-        """(c, κ) of the bound denominator."""
-        return bound_constants(self.hyper, self.eps)
+        """(c, κ) of the bound denominator (ω-inflated under compression)."""
+        return bound_constants(self.hyper, self.eps, omega=self.omega)
 
     def tier_d(self, cuts: Sequence[int]) -> np.ndarray:
         """d_m(μ) = Σ_{l ∈ tier m} G_l² for all tiers."""
@@ -80,7 +115,7 @@ class HsflProblem:
     def split_T(self, cuts: Sequence[int]) -> float:
         if self.latency_model is not None:
             return self.latency_model.split_T(cuts)
-        return split_latency(self.profile, self.system, cuts)
+        return split_latency(self.profile, self.system, cuts, self.compression)
 
     def agg_T(self, cuts: Sequence[int]) -> np.ndarray:
         """b_m = T_{m,A} for tiers m < M."""
@@ -90,7 +125,9 @@ class HsflProblem:
             )
         return np.array(
             [
-                aggregation_latency(self.profile, self.system, cuts, m)
+                aggregation_latency(
+                    self.profile, self.system, cuts, m, self.compression
+                )
                 for m in range(self.M - 1)
             ]
         )

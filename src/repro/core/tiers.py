@@ -158,7 +158,12 @@ def _group_mean(tree: Params, groups: int) -> Params:
 
 
 def synchronize(
-    params: Params, plan: TierPlan, step: jax.Array, *, fed_round=None
+    params: Params,
+    plan: TierPlan,
+    step: jax.Array,
+    *,
+    fed_round=None,
+    compress_fn=None,
 ) -> Params:
     """Apply the per-tier aggregation schedule at round ``step`` (post-update).
 
@@ -176,22 +181,42 @@ def synchronize(
         optimal intervals nest (paper's Insight after Eq. 37).
     Specializing step functions instead of branching in-graph is the
     production path (see EXPERIMENTS.md sect. Perf).
+
+    ``compress_fn`` (leaf → leaf, e.g. a vmapped ``Compressor.transform``)
+    models the lossy fed-server wire of DESIGN.md §9: it is applied to the
+    uploaded replicas immediately before the *fed-server* mean of tiers
+    m < M−1 with more than one entity — exactly the exchanges the latency
+    model prices with ``model_ratio`` — and never to the unpriced local
+    entity syncs (Eq. 3) or the single-entity top tier.
     """
     parts = tier_subtrees(params, plan)
     if fed_round is not None and not isinstance(fed_round, (tuple, list)):
         fed_round = (bool(fed_round),) * plan.M
     out_parts: List[Params] = []
     for m, part in enumerate(parts):
-        for groups, interval in plan.levels(m):
+        levels = plan.levels(m)
+        for li, (groups, interval) in enumerate(levels):
+            # the fed-server level is the last one of a non-top tier; it is
+            # a priced wire only when several entities actually exchange.
+            fed = (
+                compress_fn is not None
+                and m < plan.M - 1
+                and li == len(levels) - 1
+                and plan.entities[m] > 1
+            )
+
+            def level_mean(p, groups=groups, fed=fed):
+                if fed:
+                    p = jax.tree.map(compress_fn, p)
+                return _group_mean(p, groups)
+
             if interval <= 1:
-                part = _group_mean(part, groups)
+                part = level_mean(part)
             elif fed_round is None:
                 do = (step + 1) % interval == 0
-                part = lax.cond(
-                    do, lambda p: _group_mean(p, groups), lambda p: p, part
-                )
+                part = lax.cond(do, level_mean, lambda p: p, part)
             elif fed_round[m]:
-                part = _group_mean(part, groups)
+                part = level_mean(part)
             # fed_round[m] is False -> skip tier m's fed-server level
         out_parts.append(part)
     return combine_tiers(out_parts, params)

@@ -1,2 +1,2 @@
-from .ops import tiered_aggregate
-from .ref import tiered_aggregate_ref
+from .ops import aggregate_tree, tiered_aggregate, tiered_aggregate_q8
+from .ref import quantized_tiered_aggregate_ref, tiered_aggregate_ref

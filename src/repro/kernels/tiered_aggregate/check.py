@@ -1,0 +1,53 @@
+"""Shared bit-exactness check for the fused q8 aggregation path.
+
+One definition of "the Pallas path matches its oracle", consumed by both
+``tests/test_kernels_tiered.py`` and ``benchmarks/compress_sweep.py`` so a
+wire-format or tolerance change can never leave one of them stale.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...compress.quantize import q8_quantize
+from .ops import tiered_aggregate_q8
+from .ref import quantized_tiered_aggregate_ref
+from .tiered_aggregate import quantized_tiered_aggregate_pallas
+
+
+def assert_q8_matches_oracle(
+    N: int, J: int, P: int, tile: int, seed: int = 0
+) -> None:
+    """Raise AssertionError unless, at this (N, J, P, tile) and every flag
+    combination, (a) the interpret-mode Pallas kernel equals the
+    tile-mirroring ref oracle bit-for-bit on one shared wire payload, and
+    (b) the jit'd end-to-end entry's pallas and fallback branches agree
+    bit-for-bit."""
+    key = jax.random.PRNGKey(seed * 7919 + N * P)
+    x = jax.random.normal(key, (N, P))
+    w = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 1), (N,)))
+    q, s = q8_quantize(x, tile)  # one shared wire payload for both paths
+    for de in (0, 1):
+        for dg in (0, 1):
+            out = quantized_tiered_aggregate_pallas(
+                q, s, w, jnp.array(de), jnp.array(dg), J,
+                tile_p=tile, interpret=True,
+            )
+            ref = quantized_tiered_aggregate_ref(
+                q, s, w, jnp.array(de), jnp.array(dg), J, tile
+            )
+            assert np.array_equal(np.asarray(out), np.asarray(ref)), (
+                "pallas vs oracle", N, J, P, tile, de, dg,
+            )
+            a = tiered_aggregate_q8(
+                x, w, jnp.array(de), jnp.array(dg), J, tile_p=tile,
+                use_pallas=True, interpret=True,
+            )
+            b = tiered_aggregate_q8(
+                x, w, jnp.array(de), jnp.array(dg), J, tile_p=tile,
+                use_pallas=False,
+            )
+            assert np.array_equal(np.asarray(a), np.asarray(b)), (
+                "entry branches", N, J, P, tile, de, dg,
+            )

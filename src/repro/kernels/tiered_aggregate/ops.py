@@ -1,30 +1,44 @@
-"""jit'd public wrapper: apply the fused aggregation to whole pytrees.
+"""jit'd public wrappers: apply the fused aggregation to whole pytrees.
 
 ``aggregate_tree`` flattens a client-stacked pytree (leaves [N, ...]) into
 one [N, P] buffer view per leaf, runs the kernel, and reassembles —
 exactly what ``tiers.synchronize`` does per (tier, level), but in one fused
 HBM pass per leaf. On CPU (tests / this container) ``interpret=True`` runs
 the same kernel body in Python; on TPU set ``interpret=False``.
+
+``tiered_aggregate_q8`` is the compressed-wire entry (DESIGN.md §9): it
+takes the raw [N, P] shard, produces the int8-plus-per-tile-scale wire
+payload via the shared ``compress.quantize`` codec, and runs the fused
+dequantize→aggregate kernel over it — the HBM-heavy read is the int8
+payload, ~4× less traffic than the f32 path.
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
+from ...compress.quantize import q8_dequantize, q8_quantize
 from .ref import tiered_aggregate_ref
-from .tiered_aggregate import tiered_aggregate_pallas
+from .tiered_aggregate import (
+    TILE_P,
+    quantized_tiered_aggregate_pallas,
+    tiered_aggregate_pallas,
+)
 
 
-@partial(jax.jit, static_argnames=("num_entities", "use_pallas", "interpret"))
+@partial(
+    jax.jit, static_argnames=("num_entities", "tile_p", "use_pallas", "interpret")
+)
 def tiered_aggregate(
     x: jax.Array,
     weights: jax.Array,
     do_entity: jax.Array,
     do_global: jax.Array,
     num_entities: int,
+    tile_p: int = TILE_P,
     use_pallas: bool = True,
     interpret: bool = True,
 ) -> jax.Array:
@@ -33,9 +47,51 @@ def tiered_aggregate(
     do_global = jnp.asarray(do_global)
     if use_pallas:
         return tiered_aggregate_pallas(
-            x, weights, do_entity, do_global, num_entities, interpret=interpret
+            x, weights, do_entity, do_global, num_entities,
+            tile_p=tile_p, interpret=interpret,
         )
     return tiered_aggregate_ref(x, weights, do_entity, do_global, num_entities)
+
+
+@partial(
+    jax.jit, static_argnames=("num_entities", "tile_p", "use_pallas", "interpret")
+)
+def tiered_aggregate_q8(
+    x: jax.Array,
+    weights: jax.Array,
+    do_entity: jax.Array,
+    do_global: jax.Array,
+    num_entities: int,
+    tile_p: int = TILE_P,
+    key: Optional[jax.Array] = None,
+    use_pallas: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    """Quantize [N, P] to the q8 wire format, aggregate fused, return f32.
+
+    ``key`` switches the codec to stochastic (unbiased) rounding; without
+    it the path is deterministic, which is what the bit-for-bit oracle
+    tests and the engine-equality tests pin.
+
+    The ``use_pallas=False`` fallback dequantizes vectorized and reuses the
+    f32 reference reduction (the per-tile ``ref.py`` loop is the *test
+    oracle* — tracing it inside jit would unroll O(P/tile_p) subgraphs).
+    """
+    N, P = x.shape
+    do_entity = jnp.asarray(do_entity)
+    do_global = jnp.asarray(do_global)
+    q, scales = q8_quantize(x.astype(jnp.float32), tile_p, key=key)
+    if use_pallas:
+        out = quantized_tiered_aggregate_pallas(
+            q, scales, weights, do_entity, do_global, num_entities,
+            tile_p=tile_p, interpret=interpret,
+        )
+    else:
+        deq = q8_dequantize(q, scales, tile_p)
+        out = tiered_aggregate_ref(
+            deq, weights, do_entity, do_global, num_entities
+        )
+    return out[:, :P]
 
 
 def aggregate_tree(
@@ -44,18 +100,33 @@ def aggregate_tree(
     do_entity: jax.Array,
     do_global: jax.Array,
     num_entities: int,
+    tile_p: int = TILE_P,
     use_pallas: bool = True,
     interpret: bool = True,
+    quantized: bool = False,
 ) -> Any:
-    """Apply the fused aggregation leaf-wise to a client-stacked pytree."""
+    """Apply the fused aggregation leaf-wise to a client-stacked pytree.
+
+    ``quantized=True`` routes every leaf through the q8 wire (the MA
+    hot-spot at ~4× lower HBM traffic); outputs are cast back to the leaf
+    dtype.  ``tile_p`` is both the kernel tile AND the codec's scale-tile —
+    pass the same value the analytic layer priced (``Int8Stochastic.tile``)
+    so the executed ω matches the Theorem-1 inflation.
+    """
 
     def f(x):
         n = x.shape[0]
         flat = x.reshape(n, -1)
-        out = tiered_aggregate(
-            flat, weights, do_entity, do_global, num_entities,
-            use_pallas=use_pallas, interpret=interpret,
-        )
+        if quantized:
+            out = tiered_aggregate_q8(
+                flat, weights, do_entity, do_global, num_entities,
+                tile_p=tile_p, use_pallas=use_pallas, interpret=interpret,
+            ).astype(x.dtype)
+        else:
+            out = tiered_aggregate(
+                flat, weights, do_entity, do_global, num_entities,
+                tile_p=tile_p, use_pallas=use_pallas, interpret=interpret,
+            )
         return out.reshape(x.shape)
 
     return jax.tree.map(f, tree)

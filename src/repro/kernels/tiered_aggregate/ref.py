@@ -30,3 +30,31 @@ def tiered_aggregate_ref(x, weights, do_entity, do_global, num_entities: int):
     gmean = jnp.sum(y1 * w, axis=0, keepdims=True)
     y2 = jnp.where(do_global, jnp.broadcast_to(gmean, y1.shape), y1)
     return y2.astype(x.dtype)
+
+
+def quantized_tiered_aggregate_ref(
+    q, scales, weights, do_entity, do_global, num_entities: int, tile_p: int
+):
+    """Oracle for the fused q8 path: dequantize each ``tile_p`` chunk
+    against its scale, then the Eq. 3/4 reduction — per tile, in exactly
+    the op order of ``_q8_kernel``, so interpret mode is bit-identical.
+
+    q       [N, Pp] int8 wire payload (Pp a multiple of ``tile_p``)
+    scales  [N, Pp // tile_p] f32 per-tile scales
+    """
+    N, Pp = q.shape
+    assert Pp % tile_p == 0, (Pp, tile_p)
+    J = num_entities
+    per = N // J
+    w = weights.astype(jnp.float32)[:, None]
+    outs = []
+    for t in range(Pp // tile_p):
+        s = scales[:, t].astype(jnp.float32)[:, None]
+        x = q[:, t * tile_p : (t + 1) * tile_p].astype(jnp.float32) * s
+        grouped = x.reshape(J, per, tile_p)
+        emean = jnp.mean(grouped, axis=1, keepdims=True)
+        emean = jnp.broadcast_to(emean, grouped.shape).reshape(x.shape)
+        y1 = jnp.where(do_entity, emean, x)
+        gmean = jnp.sum(y1 * w, axis=0, keepdims=True)
+        outs.append(jnp.where(do_global, jnp.broadcast_to(gmean, y1.shape), y1))
+    return jnp.concatenate(outs, axis=1)

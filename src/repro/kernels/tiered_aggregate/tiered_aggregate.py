@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fused client→entity→global parameter aggregation.
+"""Pallas TPU kernels: fused client→entity→global parameter aggregation.
 
 The MA hot-spot of HSFL. The naive schedule reads the [N, P] client-stacked
 shard from HBM twice (once for the Eq. 3 entity mean, once for the Eq. 4
@@ -10,6 +10,15 @@ comfortably inside the ~16 MiB v5e VMEM with double buffering).
 Grid: one program per P tile. The round flags (do_entity / do_global) and
 the fed-server weights ride in SMEM via scalar prefetch so one compiled
 kernel serves every round of the schedule.
+
+``quantized_tiered_aggregate_pallas`` is the compressed-wire variant
+(DESIGN.md §9): clients upload int8 payloads with one f32 scale per
+``tile_p`` chunk (the ``compress.quantize`` wire format), and the kernel
+fuses dequantize → entity mean → fed-server weighted mean in VMEM, so the
+single HBM read is ~4× cheaper than the f32 path.  Each grid step's scale
+column is a blocked VMEM input next to its int8 tile (the full scale array
+is O(P) — too big for SMEM); ``ref.py`` carries the tile-mirroring oracle
+the interpret-mode tests pin bit-for-bit.
 """
 from __future__ import annotations
 
@@ -74,3 +83,74 @@ def tiered_aggregate_pallas(
         interpret=interpret,
     )(flags, weights.astype(jnp.float32), xp)
     return out[:, :P] if pad else out
+
+
+def _q8_kernel(flags_ref, w_ref, q_ref, s_ref, o_ref, *, num_entities: int):
+    """flags/w in SMEM ([2] i32, [N] f32); q [N, TP] i8 and this tile's
+    scale column s [N, 1] f32 in VMEM; o VMEM [N, TP] f32.
+
+    One fused pass per tile: int8 → f32 dequant against the tile's scale
+    column, then the same two-level (Eq. 3 + Eq. 4) reduction as
+    ``_kernel``.  Scales are a *blocked* input, not scalar prefetch — the
+    full [N, P/tile_p] scale array is O(P) and would blow SMEM on real
+    leaves; only the O(N) flags/weights ride the prefetch path.  The op
+    sequence is mirrored verbatim by ``ref.quantized_tiered_aggregate_ref``
+    so interpret mode matches the oracle bit-for-bit.
+    """
+    s = s_ref[...].astype(jnp.float32)            # [N, 1]
+    x = q_ref[...].astype(jnp.float32) * s        # dequantized [N, TP]
+    N = x.shape[0]
+    J = num_entities
+    per = N // J
+    do_entity = flags_ref[0] > 0
+    do_global = flags_ref[1] > 0
+
+    grouped = x.reshape(J, per, x.shape[1])
+    emean = jnp.mean(grouped, axis=1, keepdims=True)
+    emean = jnp.broadcast_to(emean, grouped.shape).reshape(x.shape)
+    y1 = jnp.where(do_entity, emean, x)
+
+    w = w_ref[...].astype(jnp.float32)[:, None]  # [N, 1]
+    gmean = jnp.sum(y1 * w, axis=0, keepdims=True)
+    y2 = jnp.where(do_global, jnp.broadcast_to(gmean, y1.shape), y1)
+    o_ref[...] = y2
+
+
+def quantized_tiered_aggregate_pallas(
+    q: jax.Array,          # [N, Pp] int8, Pp % tile_p == 0 (wire payload)
+    scales: jax.Array,     # [N, Pp // tile_p] f32 per-tile scales
+    weights: jax.Array,    # [N] f32, sums to 1
+    do_entity: jax.Array,  # scalar bool/int
+    do_global: jax.Array,  # scalar bool/int
+    num_entities: int,
+    tile_p: int = TILE_P,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused dequantize → two-level aggregate over the q8 wire format.
+
+    Returns the aggregated model in f32 [N, Pp]; the padded tail (zeros on
+    the wire) is the caller's to slice off.
+    """
+    N, Pp = q.shape
+    assert N % num_entities == 0, (N, num_entities)
+    assert Pp % tile_p == 0, (Pp, tile_p)
+    assert scales.shape == (N, Pp // tile_p), (scales.shape, q.shape, tile_p)
+    flags = jnp.stack(
+        [do_entity.astype(jnp.int32), do_global.astype(jnp.int32)]
+    )
+
+    grid = (Pp // tile_p,)
+    return pl.pallas_call(
+        functools.partial(_q8_kernel, num_entities=num_entities),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,  # flags, weights (O(N) only)
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((N, tile_p), lambda i, *_: (0, i)),
+                pl.BlockSpec((N, 1), lambda i, *_: (0, i)),  # scale column
+            ],
+            out_specs=pl.BlockSpec((N, tile_p), lambda i, *_: (0, i)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((N, Pp), jnp.float32),
+        interpret=interpret,
+    )(flags, weights.astype(jnp.float32), q, scales.astype(jnp.float32))

@@ -97,9 +97,14 @@ def _stage_mult(state, stage: Stage) -> np.ndarray:
 def round_stage_durations(
     trace: SystemTrace, r: int, cuts: Sequence[int]
 ) -> Tuple[Tuple[Stage, ...], List[np.ndarray]]:
-    """Per-stage per-client durations [N] for round r, canonical chain order."""
+    """Per-stage per-client durations [N] for round r, canonical chain order.
+
+    The trace's ``compression`` spec (if any) already scaled the boundary
+    bits inside ``split_stages``, so both consumers (event oracle + fleet
+    fast path) price the compressed wire identically.
+    """
     state = trace.round_state(r)
-    stages = split_stages(trace.profile, cuts)
+    stages = split_stages(trace.profile, cuts, trace.compression)
     durs = [
         s.work / (stage_rate(trace.system, s) * _stage_mult(state, s))
         for s in stages
@@ -124,7 +129,8 @@ def round_agg_phases(
     up_rate = system.model_up[m] * state.fed_up_mult[m]
     down_rate = system.model_down[m] * state.fed_down_mult[m]
     up, down = aggregation_phases(
-        trace.profile, system, cuts, m, up_rate=up_rate, down_rate=down_rate
+        trace.profile, system, cuts, m, up_rate=up_rate, down_rate=down_rate,
+        compression=trace.compression,
     )
     if len(up) == system.num_clients:
         up, down = up[state.available], down[state.available]

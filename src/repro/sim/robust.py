@@ -73,6 +73,23 @@ def robust_problem(
     rounds: int = None,
     backend: str = "numpy",
 ) -> HsflProblem:
-    """The same MA+MS problem, priced at the trace's q-quantile latencies."""
+    """The same MA+MS problem, priced at the trace's q-quantile latencies.
+
+    A compressed problem stays compressed: when the problem carries a
+    ``CompressionSpec`` and the trace does not, the trace is re-priced over
+    the same wire, so the quantiles the solvers consume reflect the ratio
+    (ω keeps entering through ``problem.constants()`` as always).  A trace
+    already priced over a *different* wire is a configuration error —
+    quantiles and ω would describe two different codecs — and raises.
+    """
+    if problem.compression is not None and trace.compression is None:
+        trace = trace.with_compression(problem.compression)
+    elif trace.compression != problem.compression:
+        raise ValueError(
+            "trace and problem carry different CompressionSpecs "
+            f"({trace.compression} vs {problem.compression}); price both "
+            "over one wire (build the trace uncompressed, or attach the "
+            "same spec to both)"
+        )
     model = TraceLatency(trace, quantile=quantile, rounds=rounds, backend=backend)
     return dataclasses.replace(problem, latency_model=model)

@@ -26,10 +26,11 @@ The five regimes (motivated by AdaptSFL / HASFL's system models):
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
 
+from ..compress.base import CompressionSpec
 from ..core.latency import LayerProfile, SystemSpec
 
 
@@ -53,7 +54,14 @@ class RoundState:
 
 
 class SystemTrace:
-    """Lazily generated, seeded sequence of ``RoundState`` for one scenario."""
+    """Lazily generated, seeded sequence of ``RoundState`` for one scenario.
+
+    ``compression`` (a ``repro.compress.CompressionSpec``) puts the trace's
+    links on a compressed wire: both the discrete-event oracle and the
+    vectorized fast path price boundary bits × ``act_ratio`` and model
+    bits × ``model_ratio`` — per-round multipliers stay untouched, so the
+    bit-exactness contract between the two paths is preserved.
+    """
 
     def __init__(
         self,
@@ -63,12 +71,14 @@ class SystemTrace:
         rounds: int,
         seed: int,
         gen: Callable[[int], RoundState],
+        compression: Optional[CompressionSpec] = None,
     ):
         self.name = name
         self.profile = profile
         self.system = system
         self.rounds = rounds
         self.seed = seed
+        self.compression = compression
         self._gen = gen
         self._cache: Dict[int, RoundState] = {}
 
@@ -79,6 +89,17 @@ class SystemTrace:
         if st is None:
             st = self._cache[r] = self._gen(r)
         return st
+
+    def with_compression(
+        self, compression: Optional[CompressionSpec]
+    ) -> "SystemTrace":
+        """The same seeded trace priced over a compressed wire."""
+        if compression is not None:
+            compression.validate_for(self.system.M)
+        return SystemTrace(
+            self.name, self.profile, self.system, self.rounds, self.seed,
+            self._gen, compression,
+        )
 
 
 # --------------------------------------------------------------------------- #
@@ -273,6 +294,7 @@ def make_trace(
     system: SystemSpec,
     rounds: int,
     seed: int = 0,
+    compression: Optional[CompressionSpec] = None,
     **kwargs,
 ) -> SystemTrace:
     """Build a named scenario's trace (see ``SCENARIOS`` for the registry)."""
@@ -282,4 +304,5 @@ def make_trace(
         raise KeyError(
             f"unknown scenario {name!r}; available: {sorted(SCENARIOS)}"
         ) from None
-    return factory(profile, system, rounds, seed=seed, **kwargs)
+    trace = factory(profile, system, rounds, seed=seed, **kwargs)
+    return trace if compression is None else trace.with_compression(compression)

@@ -1,0 +1,179 @@
+"""Compression subsystem: codec invariants, error feedback, CompressionSpec."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compress import (
+    CompressionSpec, ErrorFeedback, Identity, Int8Stochastic, TopK,
+    measure_omega, q8_dequantize, q8_quantize,
+)
+
+
+# --------------------------------------------------------------------------- #
+# codecs
+# --------------------------------------------------------------------------- #
+
+
+def test_identity_is_exact():
+    x = jax.random.normal(jax.random.PRNGKey(0), (257,))
+    assert np.array_equal(np.asarray(Identity().transform(x)), np.asarray(x))
+
+
+def test_q8_wire_roundtrip_shapes():
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 300))
+    q, s = q8_quantize(x, tile=128)
+    assert q.shape == (4, 384) and q.dtype == jnp.int8
+    assert s.shape == (4, 3)
+    deq = q8_dequantize(q, s, 128)
+    # padding dequantizes to exactly zero, payload to within half an LSB
+    assert np.all(np.asarray(deq[:, 300:]) == 0.0)
+    lsb = np.asarray(s).max() / 1.0
+    np.testing.assert_allclose(
+        np.asarray(deq[:, :300]), np.asarray(x), atol=0.5 * lsb + 1e-7
+    )
+
+
+def test_q8_zero_tile_is_stable():
+    x = jnp.zeros((2, 256))
+    out = Int8Stochastic(tile=128).transform(x)
+    assert np.all(np.isfinite(np.asarray(out)))
+    assert np.array_equal(np.asarray(out), np.zeros((2, 256)))
+
+
+def test_int8_deterministic_vs_stochastic():
+    c = Int8Stochastic(tile=128)
+    x = jax.random.normal(jax.random.PRNGKey(2), (1000,))
+    det = c.transform(x)
+    assert np.array_equal(np.asarray(det), np.asarray(c.transform(x)))
+    sto = c.transform(x, key=jax.random.PRNGKey(3))
+    assert not np.array_equal(np.asarray(det), np.asarray(sto))
+
+
+def test_int8_stochastic_is_unbiased():
+    """E[Q(x)] = x: the empirical mean over keys approaches x at ~1/sqrt(K)."""
+    c = Int8Stochastic(tile=256)
+    x = jax.random.normal(jax.random.PRNGKey(0), (512,))
+    K = 400
+    acc = np.zeros(512)
+    for i in range(K):
+        acc += np.asarray(c.transform(x, key=jax.random.PRNGKey(i + 1)))
+    lsb = float(jnp.max(jnp.abs(x))) / 127.0
+    # stochastic-rounding std per draw is <= lsb/2 -> mean err ~ lsb/(2*sqrt(K))
+    assert np.abs(acc / K - np.asarray(x)).max() < 5.0 * lsb / np.sqrt(K)
+
+
+def test_declared_omega_bounds_measured():
+    for codec in (Int8Stochastic(tile=256), TopK(0.25), TopK(0.05)):
+        measured = measure_omega(codec, shape=(4096,), samples=4)
+        assert measured <= codec.omega, (codec.name, measured, codec.omega)
+    assert measure_omega(Identity(), shape=(256,), samples=2) == 0.0
+
+
+def test_topk_keeps_the_k_largest():
+    t = TopK(0.25)
+    x = jax.random.normal(jax.random.PRNGKey(5), (512,))
+    xh = np.asarray(t.transform(x))
+    kept = np.nonzero(xh)[0]
+    assert len(kept) == t.k_for(512) == 128
+    xs = np.abs(np.asarray(x))
+    assert xs[kept].min() >= np.sort(xs)[-128]  # kept are the largest |x|
+    np.testing.assert_array_equal(xh[kept], np.asarray(x)[kept])
+
+
+def test_ratios_are_sane():
+    assert Identity().ratio == 1.0
+    assert 0.25 < Int8Stochastic(tile=256).ratio < 0.27
+    assert TopK(0.25).ratio == 0.5
+    assert TopK(0.9).ratio == 1.0  # value+index never beats raw past 1/2
+
+
+# --------------------------------------------------------------------------- #
+# error feedback
+# --------------------------------------------------------------------------- #
+
+
+def test_error_feedback_accounts_for_every_bit():
+    """Residual == cumulative input − cumulative emitted, exactly the EF
+    invariant; and it stays bounded instead of growing with the horizon."""
+    ef = ErrorFeedback(TopK(0.1))
+    d = 256
+    r = ef.init(jnp.zeros(d))
+    tot_in = np.zeros(d)
+    tot_out = np.zeros(d)
+    norms = []
+    for i in range(60):
+        x = jax.random.normal(jax.random.PRNGKey(100 + i), (d,))
+        xh, r = ef.step(r, x)
+        tot_in += np.asarray(x)
+        tot_out += np.asarray(xh)
+        norms.append(float(np.linalg.norm(np.asarray(r))))
+    np.testing.assert_allclose(tot_in - tot_out, np.asarray(r), atol=1e-4)
+    # bounded residual: the second half never exceeds 3x the first-half max
+    assert max(norms[30:]) <= 3.0 * max(norms[:30])
+
+
+def test_error_feedback_recovers_constant_signal():
+    """With a constant input, plain top-k forever drops the small coords;
+    EF's cumulative output still converges to the cumulative input."""
+    t = TopK(0.1)
+    x = jax.random.normal(jax.random.PRNGKey(7), (200,))
+    ef = ErrorFeedback(t)
+    r = ef.init(x)
+    out = np.zeros(200)
+    T = 50
+    for _ in range(T):
+        xh, r = ef.step(r, x)
+        out += np.asarray(xh)
+    plain = T * np.asarray(t.transform(x))
+    ef_err = np.linalg.norm(out - T * np.asarray(x))
+    plain_err = np.linalg.norm(plain - T * np.asarray(x))
+    # plain top-k error grows like T; EF's equals ||residual|| = O(1),
+    # within a small constant of a single round's error
+    assert ef_err < 10.0 * plain_err / T
+    assert ef_err < 0.2 * plain_err
+
+
+# --------------------------------------------------------------------------- #
+# CompressionSpec
+# --------------------------------------------------------------------------- #
+
+
+def test_compression_spec_validation():
+    assert CompressionSpec.identity(3).omega == 0.0
+    s = CompressionSpec.uniform(3, model_ratio=0.25, act_ratio=0.5, omega=0.1)
+    assert s.model_ratio == (0.25, 0.25) and s.act_ratio == (0.5, 0.5)
+    with pytest.raises(ValueError):
+        CompressionSpec.uniform(3, model_ratio=0.0)
+    with pytest.raises(ValueError):
+        CompressionSpec.uniform(3, model_ratio=1.5)
+    with pytest.raises(ValueError):
+        CompressionSpec((1.0, 1.0), (1.0, 1.0), omega=-0.1)
+
+
+def test_schemes_registry_covers_codecs():
+    from repro.compress import SCHEMES
+
+    assert set(SCHEMES) == {"identity", "int8", "top-k"}
+    for name, cls in SCHEMES.items():
+        codec = cls()
+        assert codec.name == name
+        assert callable(codec.transform)
+        assert 0.0 < codec.ratio <= 1.0 and codec.omega >= 0.0
+
+
+def test_compression_spec_arity_checked_at_attachment():
+    from repro.core import HsflProblem, SystemSpec, build_profile, synthetic_hyperspec
+    from repro.configs.vgg16_cifar10 import SPEC as VGG
+
+    prob = HsflProblem(
+        build_profile(VGG, batch=2),
+        SystemSpec.paper_three_tier(num_clients=4, num_edges=2),
+        synthetic_hyperspec(VGG.n_units, 4),
+        eps=1.0,
+    )
+    spec2 = CompressionSpec.uniform(3, 0.5)
+    assert spec2.validate_for(3) is spec2
+    assert prob.with_compression(spec2).compression is spec2
+    with pytest.raises(ValueError):
+        prob.with_compression(CompressionSpec((0.5,), (0.5,)))  # M=2 spec

@@ -1,10 +1,12 @@
-"""Latency model Eqs. (11)-(19) against hand-computed values."""
+"""Latency model Eqs. (11)-(19): hand-computed values + property tests."""
 import numpy as np
 import pytest
 
+from repro.compress import CompressionSpec
 from repro.configs.vgg16_cifar10 import SPEC as VGG
 from repro.core.latency import (
-    SystemSpec, aggregation_latency, build_profile, memory_ok, split_latency,
+    SystemSpec, aggregation_latency, build_profile, memory_ok,
+    per_client_split_latency, split_latency, split_stages, stage_rate,
     total_latency,
 )
 
@@ -65,3 +67,126 @@ def test_deeper_cut_moves_compute_to_lower_tier():
     shallow = split_latency(prof, slow_devices, (1, 8))
     deep = split_latency(prof, slow_devices, (10, 12))
     assert deep > shallow  # slow clients hurt more with deeper tier-1 cuts
+
+
+# --------------------------------------------------------------------------- #
+# property tests (random cuts, compression ratios)
+# --------------------------------------------------------------------------- #
+
+
+def _random_cut_vectors(n_units, M, count, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    while len(out) < count:
+        cuts = tuple(sorted(int(c) for c in rng.integers(1, n_units, M - 1)))
+        out.append(cuts)
+    return out
+
+
+@pytest.mark.parametrize("ratio", [None, 1.0, 0.5, 0.1])
+def test_stage_durations_sum_to_split_latency(ratio):
+    """The canonical stage chain IS the latency decomposition: per-client
+    work/rate durations accumulate to T_S for every random cut vector."""
+    prof = build_profile(VGG, batch=2)
+    system = SystemSpec.paper_three_tier(num_clients=8, num_edges=2, seed=1)
+    comp = None if ratio is None else CompressionSpec.uniform(
+        3, model_ratio=ratio, act_ratio=ratio
+    )
+    for cuts in _random_cut_vectors(prof.n_units, 3, 12, seed=3):
+        stages = split_stages(prof, cuts, comp)
+        t = np.zeros(system.num_clients)
+        for s in stages:
+            t = t + s.work / stage_rate(system, s)
+        np.testing.assert_array_equal(
+            t, per_client_split_latency(prof, system, cuts, comp)
+        )
+        assert float(np.max(t)) == split_latency(prof, system, cuts, comp)
+
+
+def test_latency_monotone_in_every_compression_ratio():
+    """Fewer bits can never cost time: T_S and every T_{m,A} are monotone
+    non-increasing in each act/model ratio separately."""
+    prof = build_profile(VGG, batch=4)
+    system = SystemSpec.paper_three_tier(seed=0)
+    cuts = (3, 8)
+    ratios = [1.0, 0.7, 0.4, 0.2, 0.05]
+    # joint sweep
+    joint = [
+        (
+            split_latency(prof, system, cuts,
+                          CompressionSpec.uniform(3, r, act_ratio=r)),
+            total_latency(prof, system, cuts, [2, 3, 1], 10,
+                          CompressionSpec.uniform(3, r, act_ratio=r)),
+        )
+        for r in ratios
+    ]
+    for (s0, t0), (s1, t1) in zip(joint, joint[1:]):
+        assert s1 <= s0 and t1 <= t0
+    # each boundary's act ratio alone
+    for m in range(2):
+        prev = np.inf
+        for r in ratios:
+            ar = [1.0, 1.0]
+            ar[m] = r
+            comp = CompressionSpec(tuple(ar), (1.0, 1.0))
+            cur = split_latency(prof, system, cuts, comp)
+            assert cur <= prev
+            prev = cur
+    # each tier's model ratio alone
+    for m in range(2):
+        prev = np.inf
+        for r in ratios:
+            mr = [1.0, 1.0]
+            mr[m] = r
+            comp = CompressionSpec((1.0, 1.0), tuple(mr))
+            cur = aggregation_latency(prof, system, cuts, m, comp)
+            assert cur <= prev
+            prev = cur
+
+
+def test_compression_scales_exactly():
+    """A uniform ratio r scales each client's communication time exactly
+    linearly: t_n(r) == compute_n + r * (t_n(1) - compute_n).  (The max
+    over clients is only piecewise linear — the argmax client can switch —
+    so the identity is asserted per client.)"""
+    prof = build_profile(VGG, batch=2)
+    system = SystemSpec.paper_three_tier(seed=2)
+    cuts = (3, 8)
+    base = per_client_split_latency(prof, system, cuts)
+    compute_only = per_client_split_latency(
+        prof, system, cuts,
+        CompressionSpec((1e-12, 1e-12), (1.0, 1.0)),
+    )
+    for r in (0.5, 0.25, 0.125):
+        comp = CompressionSpec.uniform(3, 1.0, act_ratio=r)
+        got = per_client_split_latency(prof, system, cuts, comp)
+        np.testing.assert_allclose(
+            got, compute_only + r * (base - compute_only), rtol=1e-9
+        )
+        agg = aggregation_latency(
+            prof, system, cuts, 0, CompressionSpec.uniform(3, r)
+        )
+        np.testing.assert_allclose(
+            agg, r * aggregation_latency(prof, system, cuts, 0), rtol=1e-12
+        )
+
+
+@pytest.mark.parametrize("ratio", [1.0, 0.5, 0.25, 0.1])
+def test_trace_quantiles_collapse_to_paper_eqs_under_compression(ratio):
+    """On the homogeneous-paper trace the TraceLatency quantiles equal
+    Eqs. (17)/(18) exactly for every compression ratio."""
+    from repro.sim import TraceLatency, make_trace
+
+    prof = build_profile(VGG, batch=2)
+    system = SystemSpec.paper_three_tier(num_clients=8, num_edges=2, seed=0)
+    comp = CompressionSpec.uniform(3, model_ratio=ratio, act_ratio=ratio)
+    trace = make_trace(
+        "homogeneous-paper", prof, system, rounds=6, seed=0, compression=comp
+    )
+    lat = TraceLatency(trace, quantile=0.95)
+    for cuts in [(3, 8), (2, 11), (5, 5)]:
+        assert lat.split_T(cuts) == split_latency(prof, system, cuts, comp)
+        for m in range(2):
+            assert lat.agg_T(cuts, m) == aggregation_latency(
+                prof, system, cuts, m, comp
+            )

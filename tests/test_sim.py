@@ -175,6 +175,25 @@ def test_bcd_solves_straggler_tail_and_moves_the_cut():
     assert res.theta >= nominal.theta
 
 
+def test_robust_problem_rejects_mismatched_compression():
+    from repro.compress import CompressionSpec
+
+    prob = paper_problem()
+    int8 = CompressionSpec.uniform(3, 0.25, omega=0.004)
+    topk = CompressionSpec.uniform(3, 0.5, omega=0.75)
+    trace = make_trace(
+        "homogeneous-paper", prob.profile, prob.system, rounds=4, seed=0,
+        compression=topk,
+    )
+    with pytest.raises(ValueError):
+        robust_problem(prob.with_compression(int8), trace)
+    # same spec on both sides is fine; problem-only gets threaded through
+    rp = robust_problem(prob.with_compression(topk), trace)
+    assert rp.latency_model.trace.compression == topk
+    rp2 = robust_problem(prob.with_compression(int8), trace.with_compression(None))
+    assert rp2.latency_model.trace.compression == int8
+
+
 def test_trace_latency_p95_dominates_p50():
     prob = paper_problem()
     trace = make_trace(
