@@ -13,11 +13,12 @@ import dataclasses
 
 import numpy as np
 
+from repro.api import build, paper_spec
 from repro.configs.vgg16_cifar10 import SPEC as VGG
 from repro.core.convergence import theorem1_bound
 from repro.core.latency import aggregation_latency
 
-from .common import emit, paper_problem
+from .common import emit
 
 
 def analytic_rows(prob) -> list:
@@ -86,7 +87,7 @@ def training_rows(rounds: int = 50, seed: int = 0) -> list:
 
 
 def main(quick: bool = False, seed: int = 0) -> list:
-    prob = paper_problem(seed=seed)
+    prob = build(paper_spec(seed=seed)).problem
     rows = analytic_rows(prob)
     rows += training_rows(rounds=30 if quick else 50, seed=seed)
     emit(rows, ("ablation", "a", "b", "bound_or_acc", "comm_s_per_round"))

@@ -1,6 +1,11 @@
 """Shared benchmark scaffolding: the paper's experimental system (Sec. VII),
 the six policies of Sec. VIII, and the converged-time metric.
 
+Problems are built through ``repro.api`` (``paper_spec`` + ``build``) —
+harnesses hold no hand-wired constructor chains.  ``record`` collects the
+``ExperimentResult`` artifacts a harness produces so ``benchmarks/run.py
+--json`` can emit one machine-readable file per run.
+
 All Fig. 4–9 comparisons are *analytic* reproductions: policies choose
 (I, μ), the metric is total time-to-ε  T(I, μ) = R(I, μ)·T_S + Σ ⌊R/I_m⌋·T_{m,A}
 with R from Corollary 1 — the same objective the paper optimizes. The
@@ -9,18 +14,23 @@ stand-in (see ablations.py) to show the trends hold off-paper.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Tuple
+import warnings
+from typing import Callable, Dict, List, Tuple
 
 import numpy as np
 
-from repro.configs.vgg16_cifar10 import SPEC as VGG
-from repro.core import (
-    HsflProblem, SystemSpec, build_profile, solve_bcd, solve_ma, solve_ms,
-    synthetic_hyperspec,
-)
-from repro.core.convergence import theorem1_bound
+from repro.api import ExperimentResult, build, paper_spec
+from repro.core import HsflProblem, solve_bcd, solve_ma, solve_ms
 from repro.core.latency import split_latency, total_latency
+
+# ExperimentResults recorded by API-driven harnesses this process; the
+# --json artifact of benchmarks/run.py serializes them via to_dict().
+RESULTS: List[ExperimentResult] = []
+
+
+def record(res: ExperimentResult) -> ExperimentResult:
+    RESULTS.append(res)
+    return res
 
 
 def paper_problem(
@@ -30,13 +40,26 @@ def paper_problem(
     comm_scale: float = 1.0,
     batch: int = 16,
 ) -> HsflProblem:
-    prof = build_profile(VGG, batch=batch)
-    system = SystemSpec.paper_three_tier(
-        seed=seed, compute_scale=compute_scale, comm_scale=comm_scale
+    """Deprecated shim: the Sec. VII problem, now built through repro.api.
+
+    Out-of-tree scripts keep working for one release; in-tree code uses
+    ``build(paper_spec(...)).problem`` (or ``run(spec)``) directly.
+    """
+    warnings.warn(
+        "benchmarks.common.paper_problem is deprecated; build the problem "
+        "through repro.api: build(paper_spec(...)).problem",
+        DeprecationWarning,
+        stacklevel=2,
     )
-    hp = synthetic_hyperspec(VGG.n_units, 20, beta=3.0, seed=seed)
-    floor = theorem1_bound(hp, 10**9, [1, 1, 1], (3, 8))
-    return HsflProblem(prof, system, hp, eps=eps_scale * floor)
+    return build(
+        paper_spec(
+            seed=seed,
+            eps_scale=eps_scale,
+            compute_scale=compute_scale,
+            comm_scale=comm_scale,
+            batch=batch,
+        )
+    ).problem
 
 
 def converged_time(prob: HsflProblem, intervals, cuts) -> float:

@@ -27,7 +27,7 @@ import dataclasses
 
 import numpy as np
 
-from .common import emit, paper_problem
+from .common import emit, record
 
 
 # --------------------------------------------------------------------------- #
@@ -36,18 +36,22 @@ from .common import emit, paper_problem
 
 
 def ratio_sweep(quick: bool, seed: int) -> list:
-    from repro.compress import CompressionSpec
-    from repro.core import solve_bcd
+    from repro.api import CompressionCfg, paper_spec, run
 
-    prob = paper_problem(seed=seed)
+    base = paper_spec(seed=seed)
     ratios = (1.0, 0.25, 0.05) if quick else (1.0, 0.5, 0.25, 0.1, 0.05)
     results = []
     for r in ratios:
-        comp = CompressionSpec.uniform(prob.M, model_ratio=r)
-        res = solve_bcd(prob, compression=comp)
-        num = prob.with_compression(comp).numerator(res.intervals, res.cuts)
+        spec = base.replace(
+            name=f"ratio-{r}",
+            compression=CompressionCfg(codec="identity", model_ratio=r),
+        )
+        res = record(run(spec))
+        num = res.latency["split_T"] + sum(
+            b / I for b, I in zip(res.latency["agg_T"], res.intervals)
+        )
         results.append((r, res, num))
-    rows = [(r, res.cuts[0], str(res.cuts), str(res.intervals),
+    rows = [(r, res.cuts[0], str(res.cuts), str(tuple(res.intervals)),
              num, res.total_latency) for r, res, num in results]
     emit(rows, ("model_ratio", "tier1_depth", "cuts", "intervals",
                 "round_latency", "converged_T"))
@@ -74,29 +78,28 @@ def ratio_sweep(quick: bool, seed: int) -> list:
 
 
 def scheme_table(quick: bool, seed: int) -> list:
-    from repro.compress import SCHEMES, CompressionSpec
-    from repro.core import solve_bcd
+    from repro.api import CompressionCfg, build, paper_spec, run
 
-    prob = paper_problem(seed=seed)
+    base_spec = paper_spec(seed=seed)
     rows = []
     schemes = (
-        SCHEMES["identity"](),
-        SCHEMES["int8"](tile=256),
-        SCHEMES["top-k"](0.25),
+        ("identity", {}),
+        ("int8", {"tile": 256}),
+        ("top-k", {"frac": 0.25}),
     )
-    for scheme in schemes:
-        comp_spec = None
-        if scheme.ratio < 1.0 or scheme.omega > 0.0:
-            comp_spec = CompressionSpec.uniform(
-                prob.M, model_ratio=scheme.ratio, omega=scheme.omega
-            )
-        res = solve_bcd(prob, compression=comp_spec)
-        assert np.isfinite(res.theta), (scheme.name, res)
-        rows.append((scheme.name, scheme.ratio, scheme.omega,
-                     str(res.cuts), str(res.intervals), res.theta))
+    for codec, params in schemes:
+        spec = base_spec.replace(
+            name=f"scheme-{codec}",
+            compression=CompressionCfg(codec=codec, params=params),
+        )
+        built = build(spec)
+        res = record(run(spec, built=built))
+        assert np.isfinite(res.theta), (codec, res)
+        rows.append((codec, built.compressor.ratio, built.compressor.omega,
+                     str(res.cuts), str(tuple(res.intervals)), res.theta))
     emit(rows, ("scheme", "ratio", "omega", "cuts", "intervals", "theta"))
     # identity == the uncompressed optimum, exactly
-    base = solve_bcd(prob)
+    base = run(base_spec)
     assert rows[0][3] == str(base.cuts) and rows[0][5] == base.theta, rows[0]
     return rows
 

@@ -1,49 +1,18 @@
 """Figs. 6–7: robustness to network resources and tier count.
 
 Fig. 6: converged time vs compute/communication scaling coefficients.
-Fig. 7: three-tier HSFL vs two-tier client-edge and client-cloud SFL.
+Fig. 7: three-tier HSFL vs two-tier client-edge and client-cloud SFL —
+the two-tier baselines are the ``two-tier-*`` system presets of
+``repro.api.registry``.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.configs.vgg16_cifar10 import SPEC as VGG
-from repro.core import HsflProblem, SystemSpec, build_profile, solve_bcd, synthetic_hyperspec
-from repro.core.convergence import theorem1_bound
+from repro.api import build, evaluate_schedule, paper_spec, two_tier_spec
+from repro.core import solve_bcd
 
-from .common import POLICIES, converged_time, emit, expected_converged_time, paper_problem
-
-
-def two_tier_system(kind: str, seed: int = 0, compute_scale=1.0, comm_scale=1.0):
-    """Client-edge (5 edge servers) or client-cloud (one far server)."""
-    rng = np.random.default_rng(seed)
-    N = 20
-    dev = rng.uniform(0.4e12, 0.6e12, N) * compute_scale
-    if kind == "client-edge":
-        J2, f2 = 5, 5e12
-        up = rng.uniform(75e6, 80e6, N) * comm_scale
-        down = np.full(N, 370e6) * comm_scale
-    else:  # client-cloud: more compute, slower WAN link (15 Mbps, Fig. 2)
-        J2, f2 = 1, 50e12
-        up = np.full(N, 15e6) * comm_scale
-        down = np.full(N, 15e6) * comm_scale
-    per = N // J2
-    return SystemSpec(
-        M=2, num_clients=N, entities=(N, J2),
-        compute=(dev, np.full(N, f2 / per) * compute_scale),
-        act_up=(up,), act_down=(down,),
-        model_up=(rng.uniform(75e6, 80e6, N) * comm_scale,),
-        model_down=(np.full(N, 370e6) * comm_scale,),
-        memory=(np.full(N, 8e9), np.full(J2, 64e9)),
-    )
-
-
-def two_tier_problem(kind, seed=0, eps_scale=6.0, **scales):
-    prof = build_profile(VGG, batch=16)
-    system = two_tier_system(kind, seed, **scales)
-    hp = synthetic_hyperspec(VGG.n_units, 20, beta=3.0, seed=seed)
-    floor = theorem1_bound(hp, 10**9, [1, 1], (8,))
-    return HsflProblem(prof, system, hp, eps=eps_scale * floor)
+from .common import POLICIES, emit, expected_converged_time, record
 
 
 def main(quick: bool = False, seed: int = 0) -> list:
@@ -54,7 +23,7 @@ def main(quick: bool = False, seed: int = 0) -> list:
     for axis in ("compute", "comm"):
         for s in scales:
             kw = {f"{axis}_scale": s}
-            prob = paper_problem(seed=seed, **kw)
+            prob = build(paper_spec(seed=seed, **kw)).problem
             for name in ("HSFL(ours)", "RMA+MS", "RMA+RMS"):
                 t, _ = expected_converged_time(
                     prob, POLICIES[name], draws=draws, seed=seed
@@ -62,12 +31,13 @@ def main(quick: bool = False, seed: int = 0) -> list:
                 rows.append((f"fig6_{axis}", s, name, t))
     # Fig. 7: tier count under shrinking resources
     for s in scales:
-        p3 = paper_problem(seed=seed, compute_scale=s)
-        r3 = solve_bcd(p3)
+        b3 = build(paper_spec(seed=seed, compute_scale=s))
+        r3 = solve_bcd(b3.problem)
+        record(evaluate_schedule(b3, r3.cuts, r3.intervals))
         rows.append(("fig7_compute", s, "three-tier", r3.total_latency))
         for kind in ("client-edge", "client-cloud"):
-            p2 = two_tier_problem(kind, seed=seed, compute_scale=s)
-            r2 = solve_bcd(p2)
+            b2 = build(two_tier_spec(kind, seed=seed, compute_scale=s))
+            r2 = solve_bcd(b2.problem)
             rows.append(("fig7_compute", s, kind, r2.total_latency))
     emit(rows, ("figure", "scale", "policy", "converged_time_s"))
     if quick:  # the claims below need the full scale grid + draw count

@@ -3,11 +3,17 @@ extraction over the dry-run artifacts, and the fleet-simulator scale sweep.
 
     PYTHONPATH=src python -m benchmarks.run [names...] [--quick] [--seed S]
                                             [--skip-training] [--list]
+                                            [--json PATH]
 
 Every harness is registered in ``HARNESSES`` with a group tag; ``--list``
 prints the registry, positional names (or ``--only``) select a subset, and
 ``--seed`` is threaded through every harness that derives randomness
 (system draws, policy draws, synthetic data, model init).
+
+``--json PATH`` writes one machine-readable artifact for the whole run:
+per-harness row tables plus every ``repro.api.ExperimentResult`` the
+harnesses recorded (serialized via ``to_dict()``, provenance = the resolved
+spec) — the BENCH_*.json perf-trajectory seed.
 
 Harness -> paper artifact map (details in DESIGN.md §7):
     fig2_latency_vs_cut   Fig. 2(c)  per-round latency vs cut layer
@@ -78,6 +84,9 @@ def main(argv=None) -> int:
                     help="run a single harness (same as one positional name)")
     ap.add_argument("--list", action="store_true", dest="list_harnesses",
                     help="print the registered harnesses and exit")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write a machine-readable result artifact (rows per "
+                         "harness + recorded ExperimentResults) to PATH")
     args = ap.parse_args(argv)
 
     registry = _registry(args)
@@ -101,20 +110,52 @@ def main(argv=None) -> int:
                 if not (args.skip_training and group == "training")]
 
     failures = []
+    report = {}
     for name, fn in jobs:
         print(f"\n{'='*70}\n== {name}\n{'='*70}")
         t0 = time.time()
         try:
-            fn()
-            print(f"-- {name} ok ({time.time()-t0:.1f}s)")
+            rows = fn()
+            dt = time.time() - t0
+            report[name] = {"ok": True, "seconds": dt, "rows": rows}
+            print(f"-- {name} ok ({dt:.1f}s)")
         except Exception as e:  # keep going; report at the end
             failures.append((name, repr(e)))
+            report[name] = {"ok": False, "seconds": time.time() - t0,
+                            "error": repr(e)}
             print(f"-- {name} FAILED: {e!r}", file=sys.stderr)
+    if args.json:
+        _write_json(args.json, args, report)
     if failures:
         print(f"\n{len(failures)} harness(es) failed: {failures}", file=sys.stderr)
         return 1
     print(f"\nall {len(jobs)} harnesses passed")
     return 0
+
+
+def _write_json(path: str, args, report: dict) -> None:
+    """One artifact per run: harness row tables + recorded ExperimentResults."""
+    import json
+
+    from repro.api import jsonify
+
+    from . import common
+
+    doc = {
+        "meta": {
+            "seed": args.seed,
+            "quick": bool(args.quick),
+            "skip_training": bool(args.skip_training),
+            "harnesses": sorted(report),
+            "failed": sorted(n for n, r in report.items() if not r["ok"]),
+        },
+        "harnesses": jsonify(report),
+        "experiments": [r.to_dict() for r in common.RESULTS],
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True, default=str)
+    print(f"\nwrote JSON artifact -> {path} "
+          f"({len(common.RESULTS)} experiment result(s))")
 
 
 if __name__ == "__main__":

@@ -16,7 +16,7 @@ import time
 
 import numpy as np
 
-from repro.configs.vgg16_cifar10 import SPEC as VGG
+from repro.api import ModelCfg, SystemCfg, resolve_model, resolve_system
 from repro.core import SystemSpec, build_profile
 from repro.sim import SCENARIOS, make_trace, simulate, simulate_rounds
 
@@ -27,13 +27,18 @@ INTERVALS = (2, 4, 1)
 
 
 def big_system(n: int, seed: int) -> SystemSpec:
-    return SystemSpec.paper_three_tier(
-        num_clients=n, num_edges=max(1, n // 200), seed=seed
+    return resolve_system(
+        SystemCfg(
+            preset="paper-three-tier",
+            num_clients=n,
+            num_edges=max(1, n // 200),
+            seed=seed,
+        )
     )
 
 
 def main(quick: bool = False, seed: int = 0) -> list:
-    prof = build_profile(VGG, batch=16)
+    prof = build_profile(resolve_model(ModelCfg(arch="vgg16-cifar10")), batch=16)
     rows = []
 
     # --- event-core oracle vs vectorized path, all scenarios, N <= 256 ----

@@ -1,28 +1,31 @@
 """System optimization demo: the paper's Sec. V-VI pipeline end to end.
 
-Builds the exact Sec. VII client(20)-edge(5)-cloud(1) system with VGG-16,
-solves the joint MA+MS problem with the BCD algorithm (Algorithm 2:
-Proposition-1 Newton-Jacobi MA solver + Dinkelbach MILFP MS solver), and
-compares the optimized schedule against the paper's random baselines.
+Builds the exact Sec. VII client(20)-edge(5)-cloud(1) system with VGG-16
+through the declarative API, solves the joint MA+MS problem with the BCD
+algorithm (Algorithm 2: Proposition-1 Newton-Jacobi MA solver + Dinkelbach
+MILFP MS solver), and compares the optimized schedule against the paper's
+random baselines.
 
 Also prices the same model on the TPU-pod mapping (DESIGN.md sect. 2) to
 show the optimizer adapts (I, mu) to a completely different link hierarchy.
 
-    PYTHONPATH=src python examples/optimize_system.py
+    PYTHONPATH=src python examples/optimize_system.py [--quick]
 """
+import argparse
+
 import numpy as np
 
-from repro.configs.vgg16_cifar10 import SPEC as VGG
-from repro.core import (
-    HsflProblem, SystemSpec, build_profile, solve_bcd, solve_ma,
-    synthetic_hyperspec,
+from repro.api import (
+    ExperimentSpec, HyperCfg, ModelCfg, RunCfg, SolverCfg, SystemCfg,
+    build, run, tpu_pod_spec,
 )
+from repro.core import solve_ma
 
 
-def describe(tag, prob, res):
-    R = prob.rounds(res.intervals, res.cuts)
-    print(f"{tag:>14s}: cuts={res.cuts} I={tuple(res.intervals)} "
-          f"Theta'={res.theta:.4g}  R_to_eps={R:.0f}  T={res.total_latency:.1f}s")
+def describe(tag, res):
+    print(f"{tag:>14s}: cuts={res.cuts} I={res.intervals} "
+          f"Theta'={res.theta:.4g}  R_to_eps={res.rounds_to_eps:.0f}  "
+          f"T={res.total_latency:.1f}s")
 
 
 def random_schedule_theta(prob, rng, n=200):
@@ -37,28 +40,32 @@ def random_schedule_theta(prob, rng, n=200):
     return float(np.median(thetas))
 
 
-def main():
-    # per-unit FLOPs / activation / parameter profile of VGG-16 at b=16
-    prof = build_profile(VGG, batch=16)
-    hp = synthetic_hyperspec(VGG.n_units, num_clients=20, seed=0)
+def paper_wan_spec(seed: int = 0) -> ExperimentSpec:
+    """Sec. VII WAN system, default Theorem-1 constants, eps pinned to 2.0."""
+    return ExperimentSpec(
+        model=ModelCfg(arch="vgg16-cifar10", batch=16),
+        system=SystemCfg(preset="paper-three-tier", num_clients=20,
+                         num_edges=5, seed=seed),
+        hyper=HyperCfg(seed=seed, eps=2.0),
+        solver=SolverCfg(kind="bcd"),
+        run=RunCfg(mode="solve", seed=seed),
+    )
 
+
+def main(quick: bool = False, seed: int = 0):
     # --- the paper's WAN system (Sec. VII numbers) ----------------------
-    system = SystemSpec.paper_three_tier(num_clients=20, num_edges=5, seed=0)
-    prob = HsflProblem(prof, system, hp, eps=2.0)
-    res = solve_bcd(prob)
-    describe("BCD (paper)", prob, res)
-    rng = np.random.default_rng(0)
-    rand = random_schedule_theta(prob, rng)
+    spec = paper_wan_spec(seed)
+    built = build(spec)
+    res = run(spec, built=built)
+    describe("BCD (paper)", res)
+    rng = np.random.default_rng(seed)
+    rand = random_schedule_theta(built.problem, rng, n=40 if quick else 200)
     print(f"{'RMA+RMS':>14s}: median Theta' {rand:.4g}  "
           f"-> BCD speedup {rand / res.theta:.1f}x")
 
     # --- the TPU-pod mapping: same model, ICI/DCN link prices -----------
-    tpu = SystemSpec.tpu_pod_mapping(num_clients=16, num_edges=4)
-    prof16 = build_profile(VGG, batch=16)
-    hp16 = synthetic_hyperspec(VGG.n_units, num_clients=16, seed=0)
-    prob_tpu = HsflProblem(prof16, tpu, hp16, eps=2.0)
-    res_tpu = solve_bcd(prob_tpu)
-    describe("BCD (TPU pod)", prob_tpu, res_tpu)
+    res_tpu = run(tpu_pod_spec(seed=seed, eps=2.0))
+    describe("BCD (TPU pod)", res_tpu)
     print("note: faster links -> the optimizer picks smaller I_m "
           "(aggregate more often) and moves the cut shallower")
 
@@ -67,19 +74,28 @@ def main():
     # -> the optimal I_m grows exactly as the paper's Insight predicts
     print("\nProposition-1 MA solver, fixed cuts (Insight after Eq. 37):")
     for cuts in [(2, 4), (5, 10), (8, 13)]:
-        sol = solve_ma(prob, cuts)
-        print(f"  cuts={cuts}: agg T_m,A={prob.agg_T(cuts).round(2)}s "
+        sol = solve_ma(built.problem, cuts)
+        print(f"  cuts={cuts}: agg T_m,A={built.problem.agg_T(cuts).round(2)}s "
               f"-> I*={tuple(sol.intervals)}")
 
     # --- resource-scaling robustness (paper Fig. 6 trend) ---------------
     print("\ncomm-scaling sweep (paper Fig. 6):")
-    for scale in (1.0, 0.5, 0.25):
-        s = SystemSpec.paper_three_tier(20, 5, seed=0, comm_scale=scale)
-        p = HsflProblem(prof, s, hp, eps=2.0)
-        r = solve_bcd(p)
-        print(f"  comm x{scale:>4}: Theta'={r.theta:.4g} I={tuple(r.intervals)} "
+    scales = (1.0, 0.25) if quick else (1.0, 0.5, 0.25)
+    for scale in scales:
+        s = spec.replace(
+            system=SystemCfg(preset="paper-three-tier", num_clients=20,
+                             num_edges=5, seed=seed, comm_scale=scale)
+        )
+        r = run(s)
+        print(f"  comm x{scale:>4}: Theta'={r.theta:.4g} I={r.intervals} "
               f"cuts={r.cuts}")
+    return res
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller baseline draw count / scale grid")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    main(args.quick, seed=args.seed)

@@ -1,61 +1,52 @@
-"""Quickstart: HSFL in ~60 lines.
+"""Quickstart: HSFL through the declarative API.
 
-Trains a reduced smollm-135m-family LM across a 3-tier hierarchy
-(8 clients -> 4 edge entities -> 1 cloud) with the paper's multi-timescale
-aggregation schedule, then shows Theorem 1's bound for the schedule used.
+One serializable ``ExperimentSpec`` names the model, the tier topology,
+and the (μ, I) schedule; ``run(spec)`` trains a reduced smollm-135m-family
+LM across the 3-tier hierarchy (8 clients -> 4 edge entities -> 1 cloud)
+with the paper's multi-timescale aggregation schedule, then we show
+Theorem 1's bound for the schedule used.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--quick]
 """
-import dataclasses
+import argparse
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import get_reduced
-from repro.core import (
-    build_train_step_a, init_state_a, synthetic_hyperspec, theorem1_bound,
+from repro.api import (
+    ExperimentSpec, HyperCfg, ModelCfg, RunCfg, SolverCfg, SystemCfg, run,
 )
-from repro.core.tiers import default_plan
-from repro.data import lm_loader, make_lm_stream, partition_iid
-from repro.models.model import SplittableModel
-from repro.optim import sgd
 
 
-def main():
-    # 1. model: any of the 10 assigned archs; reduced variant runs on CPU
-    #    (bumped to 4 layers so all three tiers hold at least one unit)
-    spec = dataclasses.replace(get_reduced("smollm-135m"), num_layers=4)
-    model = SplittableModel(spec)
+def main(quick: bool = False, seed: int = 0):
+    # the whole experiment as one declarative value (JSON-serializable)
+    spec = ExperimentSpec(
+        model=ModelCfg(arch="smollm-135m", variant="reduced", num_layers=4,
+                       batch=4, seq=32),
+        system=SystemCfg(preset="paper-three-tier", num_clients=8, num_edges=4),
+        solver=SolverCfg(kind="fixed", cuts=(1, 3), intervals=(4, 2, 1)),
+        run=RunCfg(mode="train", rounds=5 if quick else 30, lr=0.1,
+                   seed=seed, log_every=10),
+        hyper=HyperCfg(seed=seed),
+    )
+    from repro.api import build
+    from repro.core import theorem1_bound
 
-    # 2. federated data: synthetic LM stream, IID split over 8 clients
-    ds = make_lm_stream(512, 32, spec.vocab_size, seed=0)
-    parts = partition_iid(len(ds), 8)
-    loader = lm_loader(ds, parts, batch=4, seed=0)
+    built = build(spec)
+    res = run(spec, built=built)
+    print(f"plan: cuts={res.cuts} I={res.intervals}")
+    print(f"loss: {res.train['first_loss']:.4f} -> {res.train['final_loss']:.4f} "
+          f"over {res.train['rounds']} rounds (engine {res.train['engine']})")
 
-    # 3. tier plan: cuts (model splitting mu) + intervals (aggregation I_m)
-    #    tier 3 (cloud, J=1) always syncs every round -> interval 1
-    plan = default_plan(spec.n_units, num_clients=8, cuts=(1, 3),
-                        intervals=(4, 2, 1), entities=(8, 4, 1))
-    print(f"plan: units={spec.n_units} cuts={plan.cuts} I={plan.intervals}")
-
-    # 4. train with engine A (sync-groups): Eq. 3 entity sync every round,
-    #    Eq. 4 fed-server aggregation every I_m rounds
-    opt = sgd(0.1)
-    state = init_state_a(model, plan, opt, jax.random.PRNGKey(0))
-    step = jax.jit(build_train_step_a(model, plan, opt))
-    for r in range(30):
-        batch = {k: jnp.asarray(v) for k, v in loader.next_round().items()}
-        state, loss = step(state, batch)
-        if (r + 1) % 10 == 0:
-            print(f"round {r+1:3d}  loss {float(loss):.4f}")
-
-    # 5. Theorem 1: the convergence bound this schedule guarantees
-    hp = synthetic_hyperspec(spec.n_units, num_clients=8)
+    # Theorem 1: the convergence bound different schedules guarantee
     for I in [(1, 1, 1), (4, 2, 1), (64, 16, 1)]:
-        b = theorem1_bound(hp, R=500, intervals=I, cuts=plan.cuts)
+        b = theorem1_bound(built.hyper, R=500, intervals=I, cuts=res.cuts)
         print(f"Theorem-1 bound @R=500, I={I}: {b:.4f}")
     print("smaller I_m -> tighter bound (paper Insight 1)")
+    return res
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="few rounds (CI smoke mode)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    main(args.quick, seed=args.seed)

@@ -1,0 +1,41 @@
+# repro.api — the declarative driver layer (DESIGN.md §10).
+#
+# One serializable ExperimentSpec describes model / system / scenario /
+# compression / solver / run; build() composes the underlying repro.core
+# objects in the one valid order; run() dispatches to the BCD/MA/MS
+# solvers, the fleet simulator, or Engine A/B training and returns a
+# uniform ExperimentResult whose provenance is the resolved spec.
+from .spec import (
+    CompressionCfg,
+    ExperimentSpec,
+    HyperCfg,
+    ModelCfg,
+    RunCfg,
+    ScenarioCfg,
+    SolverCfg,
+    SystemCfg,
+)
+from .registry import (
+    CODECS,
+    MODEL_IDS,
+    SYSTEMS,
+    register_codec,
+    register_system,
+    resolve_model,
+    resolve_system,
+    scenario_names,
+)
+from .build import BuiltExperiment, build, resolve_compression
+from .result import ExperimentResult, jsonify
+from .run import evaluate_schedule, run
+from .presets import (
+    EXPERIMENTS,
+    compressed_spec,
+    get_experiment,
+    paper_spec,
+    quickstart_spec,
+    register_experiment,
+    robust_spec,
+    tpu_pod_spec,
+    two_tier_spec,
+)

@@ -1,0 +1,154 @@
+"""``build(spec)`` — the one owner of the composition order.
+
+The paper's pipeline composes in exactly one valid order:
+
+    profile (Eqs. 11–16)
+      → compression attached to the *base* problem (ratios + ω)
+        → scenario trace priced over the same wire
+          → robust problem (trace-quantile LatencyModel)
+            → solver / simulator / engine
+
+Historically every example and benchmark re-assembled this chain by hand,
+and the one illegal order — ``with_compression`` *after* a trace-based
+``latency_model`` is attached — was only caught by a runtime raise in
+``repro.core.problem``.  ``build`` makes that ordering unrepresentable:
+compression always lands on the base problem first, and ``robust_problem``
+re-prices the trace over the same wire.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+from ..compress.base import CompressionSpec
+from ..core.convergence import HyperSpec, synthetic_hyperspec, theorem1_bound
+from ..core.latency import LayerProfile, SystemSpec, build_profile
+from ..core.problem import HsflProblem
+from .registry import resolve_codec, resolve_model, resolve_system
+from .spec import CompressionCfg, ExperimentSpec
+
+
+@dataclass
+class BuiltExperiment:
+    """Everything ``build`` resolved, with the composed problem ready to use.
+
+    ``problem`` carries compression and (when a scenario is configured) the
+    trace-quantile latency model; ``base_problem`` is the same problem
+    before trace pricing — the nominal Eq. 17/18 view.
+    """
+
+    spec: ExperimentSpec
+    model_spec: object                      # ModelSpec | VggSpec
+    profile: LayerProfile
+    system: SystemSpec
+    hyper: HyperSpec
+    eps: float
+    compression: Optional[CompressionSpec]
+    compressor: Optional[object]            # executable Compressor (engines)
+    trace: Optional[object]                 # sim.SystemTrace
+    base_problem: HsflProblem
+    problem: HsflProblem
+
+
+def resolve_compression(
+    cfg: Optional[CompressionCfg], M: int
+) -> Tuple[Optional[object], Optional[CompressionSpec]]:
+    """``CompressionCfg`` → (executable codec, analytic CompressionSpec).
+
+    Ratios/ω default to the codec's declared values; scalar ratios broadcast
+    uniformly across the M-1 links, sequences are taken per link.
+    """
+    if cfg is None:
+        return None, None
+    codec = resolve_codec(cfg.codec, cfg.params)
+
+    def links(value, default: float) -> Tuple[float, ...]:
+        if value is None:
+            value = default
+        if isinstance(value, tuple):
+            return tuple(float(v) for v in value)
+        return (float(value),) * (M - 1)
+
+    spec = CompressionSpec(
+        act_ratio=links(cfg.act_ratio, 1.0),
+        model_ratio=links(cfg.model_ratio, codec.ratio),
+        omega=float(codec.omega if cfg.omega is None else cfg.omega),
+    ).validate_for(M)
+    return codec, spec
+
+
+def build(spec: ExperimentSpec) -> BuiltExperiment:
+    """Resolve every registry name and compose the problem in the one
+    valid order (see module docstring)."""
+    model_spec = resolve_model(spec.model)
+    profile = build_profile(
+        model_spec,
+        batch=spec.model.batch,
+        seq=spec.model.seq,
+        optimizer=spec.model.optimizer,
+    )
+    system = resolve_system(spec.system)
+
+    h = spec.hyper
+    hyper = synthetic_hyperspec(
+        model_spec.n_units,
+        system.num_clients,
+        gamma=h.gamma,
+        beta=h.beta,
+        theta0=h.theta0,
+        g2_scale=h.g2_scale,
+        sigma2_scale=h.sigma2_scale,
+        decay=h.decay,
+        seed=h.seed,
+    )
+    if h.eps is not None:
+        eps = float(h.eps)
+    else:
+        # the I=1 floor at R→∞ is cut-independent (no I_m>1 drift term),
+        # so any valid cut vector prices it; use evenly spread cuts.
+        U, M = model_spec.n_units, system.M
+        cuts = tuple(max(1, (m + 1) * U // M) for m in range(M - 1))
+        floor = theorem1_bound(hyper, 10**9, [1] * M, cuts)
+        eps = h.eps_scale * floor
+
+    compressor, compression = resolve_compression(spec.compression, system.M)
+
+    # compression attaches to the BASE problem, before any trace pricing —
+    # the ordering core.problem.with_compression would otherwise refuse.
+    base = HsflProblem(profile, system, hyper, eps=eps)
+    if compression is not None:
+        base = base.with_compression(compression)
+
+    trace = None
+    problem = base
+    if spec.scenario is not None:
+        from ..sim import make_trace, robust_problem
+
+        sc = spec.scenario
+        trace = make_trace(
+            sc.name, profile, system, rounds=sc.rounds, seed=sc.seed, **sc.params
+        )
+        # robust_problem re-prices the (uncompressed) trace over the
+        # problem's wire, keeping quantiles and ω on the same codec.
+        problem = robust_problem(
+            base,
+            trace,
+            quantile=sc.quantile,
+            rounds=sc.sim_rounds,
+            backend=sc.backend,
+        )
+        trace = problem.latency_model.trace  # the (possibly re-priced) wire
+
+    return BuiltExperiment(
+        spec=spec,
+        model_spec=model_spec,
+        profile=profile,
+        system=system,
+        hyper=hyper,
+        eps=eps,
+        compression=compression,
+        compressor=compressor,
+        trace=trace,
+        base_problem=base,
+        problem=problem,
+    )

@@ -1,0 +1,161 @@
+"""Named ``ExperimentSpec`` presets — the repo's canonical setups as data.
+
+``paper_spec`` is the Sec. VII experimental system (the problem every
+Fig. 2/4–9 harness prices); the ``EXPERIMENTS`` registry maps short names
+to zero-argument spec factories so drivers can look setups up by string.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+from .spec import (
+    CompressionCfg,
+    ExperimentSpec,
+    HyperCfg,
+    ModelCfg,
+    RunCfg,
+    ScenarioCfg,
+    SolverCfg,
+    SystemCfg,
+)
+
+
+def paper_spec(
+    seed: int = 0,
+    eps_scale: float = 6.0,
+    compute_scale: float = 1.0,
+    comm_scale: float = 1.0,
+    batch: int = 16,
+    mode: str = "solve",
+) -> ExperimentSpec:
+    """The paper's Sec. VII setting: VGG-16 on the 20-client/5-edge WAN
+    system, β=3 synthetic Theorem-1 constants, ε = eps_scale × the I=1
+    floor (exactly what ``benchmarks/common.paper_problem`` used to wire
+    by hand)."""
+    return ExperimentSpec(
+        name="paper-sec7",
+        model=ModelCfg(arch="vgg16-cifar10", batch=batch),
+        system=SystemCfg(
+            preset="paper-three-tier",
+            num_clients=20,
+            num_edges=5,
+            seed=seed,
+            compute_scale=compute_scale,
+            comm_scale=comm_scale,
+        ),
+        hyper=HyperCfg(beta=3.0, seed=seed, eps_scale=eps_scale),
+        solver=SolverCfg(kind="bcd"),
+        run=RunCfg(mode=mode, seed=seed),
+    )
+
+
+def two_tier_spec(
+    kind: str,
+    seed: int = 0,
+    eps_scale: float = 6.0,
+    compute_scale: float = 1.0,
+    comm_scale: float = 1.0,
+) -> ExperimentSpec:
+    """Fig. 7 baselines: two-tier client-edge / client-cloud SFL."""
+    if kind not in ("client-edge", "client-cloud"):
+        raise ValueError(f"kind must be client-edge|client-cloud: {kind!r}")
+    return ExperimentSpec(
+        name=f"two-tier-{kind}",
+        model=ModelCfg(arch="vgg16-cifar10", batch=16),
+        system=SystemCfg(
+            preset=f"two-tier-{kind}",
+            num_clients=20,
+            num_edges=5 if kind == "client-edge" else 1,
+            seed=seed,
+            compute_scale=compute_scale,
+            comm_scale=comm_scale,
+        ),
+        hyper=HyperCfg(beta=3.0, seed=seed, eps_scale=eps_scale),
+        solver=SolverCfg(kind="bcd"),
+        run=RunCfg(mode="solve", seed=seed),
+    )
+
+
+def tpu_pod_spec(seed: int = 0, eps: float = 2.0) -> ExperimentSpec:
+    """The same model priced on TPU v5e ICI/DCN links (DESIGN.md §2)."""
+    return ExperimentSpec(
+        name="tpu-pod",
+        model=ModelCfg(arch="vgg16-cifar10", batch=16),
+        system=SystemCfg(preset="tpu-pod", num_clients=16, num_edges=4),
+        hyper=HyperCfg(seed=seed, eps=eps),
+        solver=SolverCfg(kind="bcd"),
+        run=RunCfg(mode="solve", seed=seed),
+    )
+
+
+def robust_spec(
+    scenario: str,
+    seed: int = 0,
+    eps_scale: float = 6.0,
+    rounds: int = 64,
+    quantile: float = 0.95,
+) -> ExperimentSpec:
+    """Paper problem priced at a fleet-sim regime's q-quantile latencies."""
+    base = paper_spec(seed=seed, eps_scale=eps_scale)
+    return base.replace(
+        name=f"robust-{scenario}",
+        scenario=ScenarioCfg(
+            name=scenario, rounds=rounds, seed=seed, quantile=quantile
+        ),
+    )
+
+
+def quickstart_spec(seed: int = 0, rounds: int = 30) -> ExperimentSpec:
+    """The README quickstart: reduced smollm trained across 8→4→1 tiers."""
+    return ExperimentSpec(
+        name="quickstart",
+        model=ModelCfg(
+            arch="smollm-135m", variant="reduced", num_layers=4, batch=4, seq=32
+        ),
+        system=SystemCfg(
+            preset="paper-three-tier", num_clients=8, num_edges=4, seed=seed
+        ),
+        hyper=HyperCfg(seed=seed),
+        solver=SolverCfg(kind="fixed", cuts=(1, 3), intervals=(4, 2, 1)),
+        run=RunCfg(mode="train", seed=seed, rounds=rounds, lr=0.1),
+    )
+
+
+def compressed_spec(
+    codec: str = "int8",
+    seed: int = 0,
+    eps_scale: float = 6.0,
+    model_ratio=None,
+    omega=None,
+    **params,
+) -> ExperimentSpec:
+    """Paper problem over a compressed fed-server wire."""
+    base = paper_spec(seed=seed, eps_scale=eps_scale)
+    return base.replace(
+        name=f"compressed-{codec}",
+        compression=CompressionCfg(
+            codec=codec, params=dict(params), model_ratio=model_ratio, omega=omega
+        ),
+    )
+
+
+EXPERIMENTS: Dict[str, Callable[[], ExperimentSpec]] = {
+    "paper-sec7": paper_spec,
+    "tpu-pod": tpu_pod_spec,
+    "quickstart": quickstart_spec,
+    "robust-straggler-tail": lambda: robust_spec("straggler-tail"),
+    "compressed-int8": lambda: compressed_spec("int8"),
+}
+
+
+def register_experiment(name: str, factory: Callable[[], ExperimentSpec]) -> None:
+    EXPERIMENTS[name] = factory
+
+
+def get_experiment(name: str) -> ExperimentSpec:
+    try:
+        return EXPERIMENTS[name]()
+    except KeyError:
+        raise KeyError(
+            f"unknown experiment {name!r}; available: {sorted(EXPERIMENTS)}"
+        ) from None

@@ -1,0 +1,243 @@
+"""``run(spec)`` — one dispatcher over the three things the repo can do.
+
+* ``mode="solve"``    — optimize (I, μ) with the configured solver and
+  report the schedule, Θ′, R-to-ε, and the Eq. 17/18 latency breakdown.
+* ``mode="simulate"`` — same solve (typically against trace quantiles),
+  then replay the schedule through the fleet simulator and report the
+  per-round latency profile (p50/p95/worst, participants).
+* ``mode="train"``    — real Engine-A/B split training with the schedule
+  (solved or fixed), the spec's codec on the fed-server wire, and the
+  Theorem-1 bound for the schedule actually trained.
+
+Every mode returns the same ``ExperimentResult``; ``provenance`` is the
+resolved spec, so the artifact alone reproduces the run.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from ..core.bcd import solve_bcd
+from ..core.ma_solver import solve_ma
+from ..core.ms_solver import solve_ms
+from .build import BuiltExperiment, build
+from .result import ExperimentResult, jsonify
+from .spec import ExperimentSpec
+
+
+def _schedule(built: BuiltExperiment) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
+    """Resolve the (cuts, intervals) the run uses, per the solver config."""
+    s = built.spec.solver
+    p = built.problem
+    if s.kind == "bcd":
+        res = solve_bcd(
+            p,
+            init_cuts=s.cuts,
+            init_intervals=s.intervals,
+            tol=s.tol,
+            max_iters=s.max_iters,
+        )
+        return res.cuts, tuple(res.intervals)
+    if s.kind == "ma":
+        if s.cuts is None:
+            raise ValueError('solver kind="ma" needs solver.cuts (fixed μ)')
+        ma = solve_ma(p, s.cuts)
+        return tuple(s.cuts), tuple(ma.intervals)
+    if s.kind == "ms":
+        if s.intervals is None:
+            raise ValueError('solver kind="ms" needs solver.intervals (fixed I)')
+        ms = solve_ms(p, s.intervals)
+        return tuple(ms.cuts), tuple(s.intervals)
+    # "fixed": evaluate the given schedule as-is
+    if s.cuts is None or s.intervals is None:
+        raise ValueError('solver kind="fixed" needs both solver.cuts and '
+                         "solver.intervals")
+    return tuple(s.cuts), tuple(s.intervals)
+
+
+def _latency_breakdown(built: BuiltExperiment, cuts, intervals) -> Dict[str, Any]:
+    p = built.problem
+    return {
+        "split_T": float(p.split_T(cuts)),
+        "agg_T": [float(t) for t in p.agg_T(cuts)],
+        "pricing": (
+            "nominal" if built.spec.scenario is None
+            else f"{built.spec.scenario.name}@q{built.spec.scenario.quantile}"
+        ),
+    }
+
+
+def _simulate(built: BuiltExperiment, cuts, intervals) -> Dict[str, Any]:
+    from ..sim import simulate_rounds
+
+    sc = built.spec.scenario
+    res = simulate_rounds(
+        built.trace, cuts, intervals=intervals, backend=sc.backend
+    )
+    p50, p95, worst = np.quantile(res.total, [0.5, 0.95, 1.0])
+    return {
+        "scenario": sc.name,
+        "rounds": int(res.total.shape[0]),
+        "split_p50": float(np.quantile(res.split, 0.5)),
+        "split_p95": float(np.quantile(res.split, 0.95)),
+        "total_p50": float(p50),
+        "total_p95": float(p95),
+        "total_worst": float(worst),
+        "mean_participants": float(np.mean(res.participants)),
+    }
+
+
+def _train(built: BuiltExperiment, cuts, intervals) -> Dict[str, Any]:
+    """Real split training of the spec's model under the schedule."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..core.convergence import theorem1_bound
+    from ..core.engine import (
+        build_train_step_a,
+        build_train_step_b,
+        init_state_a,
+        init_state_b,
+    )
+    from ..core.tiers import TierPlan
+    from ..data import (
+        image_loader,
+        lm_loader,
+        make_cifar10_like,
+        make_lm_stream,
+        partition_iid,
+        partition_sort_and_shard,
+    )
+    from ..models.vgg import VggSpec, build_model
+    from ..optim import adam, momentum, sgd
+
+    spec = built.spec
+    rc = spec.run
+    model_spec = built.model_spec
+    N = built.system.num_clients
+
+    if isinstance(model_spec, VggSpec):
+        ds = make_cifar10_like(rc.dataset_size, seed=rc.seed)
+        labels = ds.labels
+        mk_loader = lambda parts: image_loader(ds, parts, spec.model.batch, rc.seed)
+    else:
+        # train at the spec's literal seq so pricing, Theorem-1 bound, and
+        # provenance all describe the run that actually happened
+        if spec.model.seq < 2:
+            raise ValueError(
+                f'run mode="train" on LM arch {spec.model.arch!r} needs '
+                f"model.seq >= 2 (next-token loss); got {spec.model.seq}"
+            )
+        ds = make_lm_stream(
+            rc.dataset_size, spec.model.seq, model_spec.vocab_size, seed=rc.seed
+        )
+        labels = ds.tokens[:, 0] % 10
+        mk_loader = lambda parts: lm_loader(ds, parts, spec.model.batch, rc.seed)
+
+    parts = (
+        partition_sort_and_shard(labels, N, 2, rc.seed)
+        if rc.non_iid
+        else partition_iid(len(labels), N, rc.seed)
+    )
+    loader = mk_loader(parts)
+    model = build_model(model_spec)
+    plan = TierPlan(
+        n_units=model_spec.n_units,
+        num_clients=N,
+        cuts=tuple(cuts),
+        intervals=tuple(intervals),
+        entities=built.system.entities,
+    )
+    opt = {"sgd": sgd, "momentum": momentum, "adam": adam}[spec.model.optimizer](rc.lr)
+    key = jax.random.PRNGKey(rc.seed)
+
+    if rc.engine == "a":
+        state = init_state_a(model, plan, opt, key)
+        step = jax.jit(
+            build_train_step_a(model, plan, opt, compressor=built.compressor)
+        )
+    else:
+        state = init_state_b(model, plan, opt, key)
+        step = jax.jit(
+            build_train_step_b(model, plan, opt, compressor=built.compressor)
+        )
+
+    losses = []
+    for r in range(rc.rounds):
+        batch = {k: jnp.asarray(v) for k, v in loader.next_round().items()}
+        state, loss = step(state, batch)
+        losses.append(float(loss))
+        if rc.log_every and ((r + 1) % rc.log_every == 0 or r == 0):
+            print(f"round {r+1:5d}  loss {losses[-1]:.4f}")
+
+    omega = 0.0 if built.compression is None else built.compression.omega
+    bound = theorem1_bound(
+        built.hyper, max(1, rc.rounds), intervals, cuts, omega=omega
+    )
+    return {
+        "engine": rc.engine,
+        "rounds": rc.rounds,
+        "first_loss": losses[0] if losses else None,
+        "final_loss": losses[-1] if losses else None,
+        "losses": losses,
+        "thm1_bound": float(bound),
+    }
+
+
+def evaluate_schedule(
+    built: BuiltExperiment,
+    cuts,
+    intervals,
+    mode: str = "solve",
+) -> ExperimentResult:
+    """Price one (I, μ) schedule under the built problem as a result.
+
+    This is the solve-mode result body; benchmarks that already hold a
+    solved schedule use it to emit artifacts without re-solving.
+    """
+    p = built.problem
+    theta = float(p.theta(intervals, cuts))
+    R = p.rounds(intervals, cuts)
+    total = float(p.total_T(intervals, cuts, R)) if R is not None else None
+    return ExperimentResult(
+        mode=mode,
+        cuts=tuple(int(c) for c in cuts),
+        intervals=tuple(int(i) for i in intervals),
+        theta=theta,
+        rounds_to_eps=float(R) if R is not None else None,
+        total_latency=total,
+        latency=_latency_breakdown(built, cuts, intervals),
+        provenance=jsonify(built.spec.to_dict()),
+    )
+
+
+def run(
+    spec: ExperimentSpec, built: Optional[BuiltExperiment] = None
+) -> ExperimentResult:
+    """Build the spec, resolve its schedule, and produce the mode's result.
+
+    Callers that already hold the ``build(spec)`` output pass it as
+    ``built`` to avoid re-resolving registries / re-drawing the system.
+    """
+    import dataclasses
+
+    if built is None:
+        built = build(spec)
+    elif built.spec != spec:
+        raise ValueError("built was constructed from a different spec")
+    if spec.run.mode == "simulate" and built.trace is None:
+        # fail before the (expensive) solve, not after
+        raise ValueError('run mode="simulate" needs a scenario section')
+    cuts, intervals = _schedule(built)
+    result = evaluate_schedule(built, cuts, intervals, mode=spec.run.mode)
+
+    if spec.run.mode == "simulate":
+        result = dataclasses.replace(
+            result, sim=_simulate(built, cuts, intervals)
+        )
+    elif spec.run.mode == "train":
+        result = dataclasses.replace(
+            result, train=_train(built, cuts, intervals)
+        )
+    return result

@@ -1,0 +1,277 @@
+"""The declarative experiment specification (DESIGN.md §10).
+
+One serializable dataclass tree — ``ExperimentSpec`` — describes everything
+this repo can do with the paper's pipeline: which model profile to price
+(Eqs. 11–16), which multi-tier system to price it on, which fleet-sim
+regime to robustify against, which wire codec to compress with, which
+solver to run (Algorithm 2 BCD / Proposition-1 MA / Dinkelbach MS), and
+what the run should produce (an optimized schedule, a simulated latency
+profile, or a real Engine-A/B training run).
+
+Every field is a plain JSON value (str / int / float / bool, tuples of
+those, or a flat mapping), so a spec survives ``json.dumps(spec.to_dict())``
+→ disk → ``ExperimentSpec.from_dict(json.loads(...))`` losslessly:
+``from_dict(to_dict(s)) == s`` for every spec, which
+``tests/test_api.py`` pins for every registry entry.
+
+The spec is *data only*.  Name→object resolution lives in
+``repro.api.registry``; the composition order (profile → compression →
+trace → robust problem → solver) lives in ``repro.api.build`` — the one
+place that knows compression must be attached to the base problem before
+trace-quantile pricing, so the historical ``with_compression``-under-
+``latency_model`` footgun cannot be expressed here at all.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple, Union
+
+
+def _int_tuple(x: Optional[Sequence[int]]) -> Optional[Tuple[int, ...]]:
+    """Normalize JSON lists (and any int sequence) to an int tuple."""
+    if x is None:
+        return None
+    return tuple(int(v) for v in x)
+
+
+def _ratio_tuple(
+    x: Union[None, float, int, Sequence[float]]
+) -> Union[None, float, Tuple[float, ...]]:
+    """Ratios may be one scalar (uniform across links) or per-link values."""
+    if x is None:
+        return None
+    if isinstance(x, (int, float)):
+        return float(x)
+    return tuple(float(v) for v in x)
+
+
+@dataclass(frozen=True)
+class ModelCfg:
+    """Which ``repro.configs`` architecture to profile, and at what shape.
+
+    ``arch`` is a registry id (``repro.api.registry.MODEL_IDS``);
+    ``variant`` picks the full SPEC or the CPU-runnable REDUCED config;
+    ``num_layers`` optionally overrides the unit count (e.g. the quickstart
+    bumps reduced smollm to 4 layers so all three tiers hold a unit).
+    """
+
+    arch: str = "vgg16-cifar10"
+    variant: str = "full"          # "full" | "reduced"
+    batch: int = 16
+    seq: int = 1
+    num_layers: Optional[int] = None
+    optimizer: str = "sgd"         # prices optimizer-state bytes (C5)
+
+    def __post_init__(self):
+        if self.variant not in ("full", "reduced"):
+            raise ValueError(f"variant must be full|reduced: {self.variant!r}")
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ModelCfg":
+        return cls(**d)
+
+
+@dataclass(frozen=True)
+class SystemCfg:
+    """Which multi-tier resource topology to price against.
+
+    ``preset`` names a builder in ``repro.api.registry.SYSTEMS``
+    (paper-three-tier | tpu-pod | two-tier-client-edge |
+    two-tier-client-cloud | anything registered via ``register_system``).
+    ``extras`` passes preset-specific keyword arguments straight through
+    (e.g. ``memory_bytes`` for the paper system, ``chip_flops`` for the
+    TPU pod).
+    """
+
+    preset: str = "paper-three-tier"
+    num_clients: int = 20
+    num_edges: int = 5
+    seed: int = 0
+    compute_scale: float = 1.0
+    comm_scale: float = 1.0
+    extras: Dict[str, Any] = field(default_factory=dict)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "SystemCfg":
+        d = dict(d)
+        d["extras"] = dict(d.get("extras", {}))
+        return cls(**d)
+
+
+@dataclass(frozen=True)
+class HyperCfg:
+    """Theorem-1 constants (``synthetic_hyperspec`` knobs) + the target ε.
+
+    ``eps`` pins the target directly; otherwise ``eps = eps_scale × floor``
+    where floor is the I=1 bound at R→∞ (cut-independent, since only
+    I_m > 1 tiers contribute drift).
+    """
+
+    gamma: float = 5e-4
+    beta: float = 50.0
+    theta0: float = 5.0
+    g2_scale: float = 20.0
+    sigma2_scale: float = 4.0
+    decay: float = 0.9
+    seed: int = 0
+    eps: Optional[float] = None
+    eps_scale: float = 6.0
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "HyperCfg":
+        return cls(**d)
+
+
+@dataclass(frozen=True)
+class ScenarioCfg:
+    """Which fleet-sim regime prices the latency terms, and at what quantile.
+
+    ``name`` is a key of ``repro.sim.SCENARIOS``; ``params`` are the
+    scenario constructor's extra knobs (e.g. ``compute_sigma`` for
+    lognormal-heterogeneous).  ``quantile`` is the robust-pricing level the
+    solvers consume (p50 typical, p95 straggler-robust); ``sim_rounds``
+    optionally caps how many trace rounds the quantile uses.
+    """
+
+    name: str = "homogeneous-paper"
+    rounds: int = 64
+    seed: int = 0
+    quantile: float = 0.95
+    backend: str = "numpy"
+    sim_rounds: Optional[int] = None
+    params: Dict[str, Any] = field(default_factory=dict)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ScenarioCfg":
+        d = dict(d)
+        d["params"] = dict(d.get("params", {}))
+        return cls(**d)
+
+
+@dataclass(frozen=True)
+class CompressionCfg:
+    """Which wire codec to train with and how the analytic layer prices it.
+
+    ``codec`` names an executable ``Compressor`` in
+    ``repro.api.registry.CODECS`` (identity | int8 | top-k | registered);
+    ``params`` are its constructor kwargs (``tile`` for int8, ``frac`` for
+    top-k).  The analytic ``CompressionSpec`` is derived from the codec's
+    declared (ratio, ω) unless overridden: ``model_ratio`` / ``act_ratio``
+    accept one scalar (uniform across links) or one value per link, and
+    ``omega`` overrides the bound inflation — so a pure pricing sweep uses
+    ``codec="identity"`` with explicit ratios.
+    """
+
+    codec: str = "identity"
+    params: Dict[str, Any] = field(default_factory=dict)
+    model_ratio: Union[None, float, Tuple[float, ...]] = None
+    act_ratio: Union[None, float, Tuple[float, ...]] = None
+    omega: Optional[float] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "model_ratio", _ratio_tuple(self.model_ratio))
+        object.__setattr__(self, "act_ratio", _ratio_tuple(self.act_ratio))
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "CompressionCfg":
+        d = dict(d)
+        d["params"] = dict(d.get("params", {}))
+        return cls(**d)
+
+
+@dataclass(frozen=True)
+class SolverCfg:
+    """Which optimizer of problem (20) runs, with its budgets.
+
+    ``kind``: "bcd" (Algorithm 2), "ma" (Proposition 1, needs ``cuts``),
+    "ms" (Dinkelbach, needs ``intervals``), or "fixed" (evaluate the given
+    schedule without optimizing).  For "bcd", ``cuts``/``intervals`` seed
+    the iteration.
+    """
+
+    kind: str = "bcd"
+    cuts: Optional[Tuple[int, ...]] = None
+    intervals: Optional[Tuple[int, ...]] = None
+    tol: float = 1e-6
+    max_iters: int = 50
+
+    def __post_init__(self):
+        if self.kind not in ("bcd", "ma", "ms", "fixed"):
+            raise ValueError(f"solver kind must be bcd|ma|ms|fixed: {self.kind!r}")
+        object.__setattr__(self, "cuts", _int_tuple(self.cuts))
+        object.__setattr__(self, "intervals", _int_tuple(self.intervals))
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "SolverCfg":
+        return cls(**d)
+
+
+@dataclass(frozen=True)
+class RunCfg:
+    """What ``run(spec)`` produces.
+
+    ``mode``: "solve" (optimized schedule + analytic latency breakdown),
+    "simulate" (schedule + per-round trace latency profile; needs a
+    ``scenario``), or "train" (real Engine-A/B split training with the
+    schedule).  Training knobs are ignored by the other modes.
+    """
+
+    mode: str = "solve"
+    seed: int = 0
+    rounds: int = 30               # training rounds (mode="train")
+    lr: float = 0.1
+    engine: str = "a"              # "a" (sync groups) | "b" (per-entity)
+    non_iid: bool = False
+    dataset_size: int = 512
+    log_every: int = 0             # 0 = silent
+
+    def __post_init__(self):
+        if self.mode not in ("solve", "simulate", "train"):
+            raise ValueError(f"run mode must be solve|simulate|train: {self.mode!r}")
+        if self.engine not in ("a", "b"):
+            raise ValueError(f"engine must be a|b: {self.engine!r}")
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "RunCfg":
+        return cls(**d)
+
+
+@dataclass(frozen=True)
+class ExperimentSpec:
+    """The whole experiment as one declarative, serializable value."""
+
+    model: ModelCfg = field(default_factory=ModelCfg)
+    system: SystemCfg = field(default_factory=SystemCfg)
+    hyper: HyperCfg = field(default_factory=HyperCfg)
+    solver: SolverCfg = field(default_factory=SolverCfg)
+    run: RunCfg = field(default_factory=RunCfg)
+    scenario: Optional[ScenarioCfg] = None
+    compression: Optional[CompressionCfg] = None
+    name: str = ""
+
+    def to_dict(self) -> Dict[str, Any]:
+        """Plain-JSON projection (tuples become lists; None sections stay None)."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ExperimentSpec":
+        scenario = d.get("scenario")
+        compression = d.get("compression")
+        return cls(
+            model=ModelCfg.from_dict(d.get("model", {})),
+            system=SystemCfg.from_dict(d.get("system", {})),
+            hyper=HyperCfg.from_dict(d.get("hyper", {})),
+            solver=SolverCfg.from_dict(d.get("solver", {})),
+            run=RunCfg.from_dict(d.get("run", {})),
+            scenario=None if scenario is None else ScenarioCfg.from_dict(scenario),
+            compression=(
+                None if compression is None
+                else CompressionCfg.from_dict(compression)
+            ),
+            name=d.get("name", ""),
+        )
+
+    def replace(self, **kwargs) -> "ExperimentSpec":
+        """Convenience ``dataclasses.replace`` that reads like the spec."""
+        return dataclasses.replace(self, **kwargs)

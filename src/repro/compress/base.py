@@ -77,6 +77,22 @@ class CompressionSpec:
             )
         return self
 
+    def to_dict(self) -> dict:
+        """Plain-JSON projection (the api layer's provenance format)."""
+        return {
+            "act_ratio": list(self.act_ratio),
+            "model_ratio": list(self.model_ratio),
+            "omega": self.omega,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CompressionSpec":
+        return cls(
+            act_ratio=tuple(float(r) for r in d["act_ratio"]),
+            model_ratio=tuple(float(r) for r in d["model_ratio"]),
+            omega=float(d.get("omega", 0.0)),
+        )
+
     @classmethod
     def identity(cls, M: int) -> "CompressionSpec":
         return cls((1.0,) * (M - 1), (1.0,) * (M - 1), 0.0)

@@ -89,7 +89,9 @@ class HsflProblem:
         Refuses to change the wire under an attached ``latency_model``: the
         model's cached quantiles price the *old* wire, so ω and the latency
         terms would describe two different codecs.  Attach compression
-        first, then re-price (``robust_problem`` threads it to the trace).
+        first, then re-price (``robust_problem`` threads it to the trace) —
+        or declare both in one ``ExperimentSpec`` and let ``repro.api.build``
+        resolve the ordering automatically.
         """
         if compression is not None:
             compression.validate_for(self.M)
@@ -97,7 +99,9 @@ class HsflProblem:
             raise ValueError(
                 "cannot change compression under an attached latency_model "
                 "(its quantiles price the old wire); set compression on the "
-                "base problem and re-attach via robust_problem"
+                "base problem and re-attach via robust_problem, or declare "
+                "compression + scenario in an ExperimentSpec and let "
+                "repro.api.build resolve the composition order"
             )
         return dataclasses.replace(self, compression=compression)
 

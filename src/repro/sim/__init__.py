@@ -11,6 +11,7 @@ from .scenarios import (
     homogeneous_paper,
     lognormal_heterogeneous,
     make_trace,
+    scenario_params,
     straggler_tail,
 )
 from .events import EventSimResult, RoundResult, simulate, simulate_round

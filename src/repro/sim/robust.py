@@ -9,6 +9,11 @@ existing Proposition-1 MA solver, Dinkelbach MS solver, and BCD loop
 optimize (I, μ) against the empirical regime with no changes — on the
 homogeneous-paper scenario the quantiles collapse to exactly Eq. (17)/(18)
 and the robust problem *is* the nominal one.
+
+This is the trace half of the composition order ``repro.api.build`` owns:
+compression lands on the base problem first, and ``robust_problem``
+re-prices the trace over that same wire — declare both in one
+``ExperimentSpec`` and the ordering is resolved for you.
 """
 from __future__ import annotations
 

@@ -288,6 +288,22 @@ SCENARIOS: Dict[str, Callable[..., SystemTrace]] = {
 }
 
 
+def scenario_params(name: str) -> Tuple[str, ...]:
+    """The extra keyword knobs a scenario accepts (beyond rounds/seed) —
+    what a serialized ``ScenarioCfg.params`` mapping may contain."""
+    import inspect
+
+    try:
+        factory = SCENARIOS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; available: {sorted(SCENARIOS)}"
+        ) from None
+    sig = inspect.signature(factory)
+    skip = {"profile", "system", "rounds", "seed"}
+    return tuple(p for p in sig.parameters if p not in skip)
+
+
 def make_trace(
     name: str,
     profile: LayerProfile,
@@ -304,5 +320,14 @@ def make_trace(
         raise KeyError(
             f"unknown scenario {name!r}; available: {sorted(SCENARIOS)}"
         ) from None
+    # specs arrive from JSON (repro.api.ScenarioCfg.params): fail with the
+    # accepted knob list instead of a bare TypeError deep in the factory
+    allowed = set(scenario_params(name))
+    unknown = sorted(set(kwargs) - allowed)
+    if unknown:
+        raise ValueError(
+            f"scenario {name!r} got unknown param(s) {unknown}; "
+            f"accepted: {sorted(allowed)}"
+        )
     trace = factory(profile, system, rounds, seed=seed, **kwargs)
     return trace if compression is None else trace.with_compression(compression)

@@ -1,0 +1,402 @@
+"""repro.api: spec round-trips, registry coverage, build equivalence.
+
+Four contracts:
+
+1. **Lossless serialization** — ``from_dict(to_dict(spec)) == spec`` (and
+   through a real JSON string) for specs exercising every registry entry:
+   all model ids, system presets, scenarios, and codecs.
+2. **Bit-exact equivalence** — ``api.build()`` composes exactly the same
+   problem the manual ``HsflProblem`` + ``with_compression`` +
+   ``robust_problem`` wiring produced: identical Θ′, latency terms, and
+   identical ``solve_bcd`` output.
+3. **The footgun is unrepresentable** — a spec carrying both compression
+   and a scenario builds (and solves) fine, while the equivalent manual
+   mis-ordering still raises in ``core.problem``; ``build`` covers the
+   previously-raising path.
+4. **Reproducibility from disk** — serializing a spec to JSON, reloading,
+   and re-running yields an identical ``ExperimentResult`` (schedule, Θ′,
+   R-to-ε).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    CODECS,
+    MODEL_IDS,
+    SYSTEMS,
+    CompressionCfg,
+    ExperimentSpec,
+    HyperCfg,
+    ModelCfg,
+    RunCfg,
+    ScenarioCfg,
+    SolverCfg,
+    SystemCfg,
+    build,
+    evaluate_schedule,
+    get_experiment,
+    paper_spec,
+    quickstart_spec,
+    robust_spec,
+    run,
+    scenario_names,
+    tpu_pod_spec,
+    two_tier_spec,
+)
+from repro.api.presets import EXPERIMENTS
+
+
+def roundtrip(spec: ExperimentSpec) -> ExperimentSpec:
+    """to_dict -> real JSON string -> from_dict."""
+    return ExperimentSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
+
+
+# --------------------------------------------------------------------------- #
+# 1. lossless serialization over every registry entry
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("arch", MODEL_IDS)
+def test_roundtrip_every_model(arch):
+    spec = ExperimentSpec(model=ModelCfg(arch=arch, variant="reduced", batch=4))
+    assert roundtrip(spec) == spec
+
+
+@pytest.mark.parametrize("preset", sorted(SYSTEMS))
+def test_roundtrip_every_system(preset):
+    spec = ExperimentSpec(
+        system=SystemCfg(preset=preset, num_clients=20, num_edges=5, seed=3)
+    )
+    assert roundtrip(spec) == spec
+
+
+@pytest.mark.parametrize("name", scenario_names())
+def test_roundtrip_every_scenario(name):
+    spec = ExperimentSpec(
+        scenario=ScenarioCfg(name=name, rounds=8, seed=1, quantile=0.5)
+    )
+    assert roundtrip(spec) == spec
+
+
+@pytest.mark.parametrize("codec", sorted(CODECS))
+def test_roundtrip_every_codec(codec):
+    spec = ExperimentSpec(compression=CompressionCfg(codec=codec))
+    assert roundtrip(spec) == spec
+
+
+@pytest.mark.parametrize("name", sorted(EXPERIMENTS))
+def test_roundtrip_every_experiment_preset(name):
+    spec = get_experiment(name)
+    assert roundtrip(spec) == spec
+
+
+def test_roundtrip_full_spec_with_everything():
+    spec = ExperimentSpec(
+        name="kitchen-sink",
+        model=ModelCfg(arch="smollm-135m", variant="reduced", num_layers=4,
+                       batch=4, seq=32, optimizer="adam"),
+        system=SystemCfg(preset="paper-three-tier", num_clients=8, num_edges=4,
+                         seed=7, comm_scale=0.5, extras={"memory_bytes": 8e9}),
+        hyper=HyperCfg(beta=3.0, eps_scale=5.0, seed=7),
+        scenario=ScenarioCfg(name="flaky-wan", rounds=16, quantile=0.9,
+                             params={"outage_p": 0.1}),
+        compression=CompressionCfg(codec="int8", params={"tile": 128},
+                                   model_ratio=(0.5, 0.25)),
+        solver=SolverCfg(kind="bcd", cuts=(2, 4), intervals=(2, 2, 1)),
+        run=RunCfg(mode="solve", seed=7),
+    )
+    rt = roundtrip(spec)
+    assert rt == spec
+    # tuple fields stay tuples after the JSON list round-trip
+    assert isinstance(rt.solver.cuts, tuple)
+    assert isinstance(rt.compression.model_ratio, tuple)
+
+
+def test_unknown_names_raise_with_choices():
+    with pytest.raises(KeyError, match="paper-three-tier"):
+        build(ExperimentSpec(system=SystemCfg(preset="nope")))
+    with pytest.raises(KeyError, match="int8"):
+        build(ExperimentSpec(compression=CompressionCfg(codec="nope")))
+    with pytest.raises(KeyError, match="unknown arch"):
+        build(ExperimentSpec(model=ModelCfg(arch="nope")))
+    with pytest.raises(ValueError, match="accepted"):
+        build(
+            ExperimentSpec(
+                scenario=ScenarioCfg(name="flaky-wan", rounds=4,
+                                     params={"bogus_knob": 1.0})
+            )
+        )
+
+
+# --------------------------------------------------------------------------- #
+# 2. bit-exact equivalence with the manual wiring
+# --------------------------------------------------------------------------- #
+
+
+def manual_paper_problem(seed=0, eps_scale=6.0):
+    from repro.configs.vgg16_cifar10 import SPEC as VGG
+    from repro.core import (
+        HsflProblem, SystemSpec, build_profile, synthetic_hyperspec,
+    )
+    from repro.core.convergence import theorem1_bound
+
+    prof = build_profile(VGG, batch=16)
+    system = SystemSpec.paper_three_tier(seed=seed)
+    hp = synthetic_hyperspec(VGG.n_units, 20, beta=3.0, seed=seed)
+    floor = theorem1_bound(hp, 10**9, [1, 1, 1], (3, 8))
+    return HsflProblem(prof, system, hp, eps=eps_scale * floor)
+
+
+def test_build_matches_manual_problem_exactly():
+    from repro.core import solve_bcd
+
+    manual = manual_paper_problem(seed=0)
+    api_prob = build(paper_spec(seed=0)).problem
+    assert api_prob.eps == manual.eps
+    sched = ((2, 5, 1), (3, 8))
+    assert api_prob.theta(*sched) == manual.theta(*sched)
+    assert api_prob.split_T((3, 8)) == manual.split_T((3, 8))
+    np.testing.assert_array_equal(api_prob.agg_T((3, 8)), manual.agg_T((3, 8)))
+
+    res_a, res_m = solve_bcd(api_prob), solve_bcd(manual)
+    assert res_a.cuts == res_m.cuts
+    assert tuple(res_a.intervals) == tuple(res_m.intervals)
+    assert res_a.theta == res_m.theta
+    assert res_a.total_latency == res_m.total_latency
+
+
+def test_build_compressed_matches_manual_with_compression():
+    from repro.compress import CompressionSpec
+    from repro.core import solve_bcd
+
+    manual = manual_paper_problem(seed=0).with_compression(
+        CompressionSpec.uniform(3, model_ratio=0.25)
+    )
+    spec = paper_spec(seed=0).replace(
+        compression=CompressionCfg(codec="identity", model_ratio=0.25)
+    )
+    api_prob = build(spec).problem
+    assert api_prob.compression == manual.compression
+    res_a, res_m = solve_bcd(api_prob), solve_bcd(manual)
+    assert (res_a.cuts, tuple(res_a.intervals), res_a.theta) == (
+        res_m.cuts, tuple(res_m.intervals), res_m.theta
+    )
+
+
+def test_build_robust_matches_manual_robust_problem():
+    from repro.core import solve_bcd
+    from repro.sim import make_trace, robust_problem
+
+    manual_base = manual_paper_problem(seed=0)
+    trace = make_trace(
+        "straggler-tail", manual_base.profile, manual_base.system,
+        rounds=16, seed=0,
+    )
+    manual = robust_problem(manual_base, trace, quantile=0.95)
+
+    spec = robust_spec("straggler-tail", seed=0, rounds=16, quantile=0.95)
+    api_prob = build(spec).problem
+    assert api_prob.split_T((3, 8)) == manual.split_T((3, 8))
+    res_a, res_m = solve_bcd(api_prob), solve_bcd(manual)
+    assert (res_a.cuts, tuple(res_a.intervals), res_a.theta) == (
+        res_m.cuts, tuple(res_m.intervals), res_m.theta
+    )
+
+
+def test_build_covers_the_previously_raising_path():
+    """compression + scenario in one spec builds and solves; the manual
+    mis-ordering (compression under an attached latency model) still
+    raises with a pointer at api.build."""
+    from repro.compress import CompressionSpec
+    from repro.sim import make_trace, robust_problem
+
+    spec = paper_spec(seed=0).replace(
+        compression=CompressionCfg(codec="identity", model_ratio=0.25),
+        scenario=ScenarioCfg(name="straggler-tail", rounds=8, quantile=0.95),
+    )
+    built = build(spec)  # must not raise
+    assert built.problem.compression is not None
+    assert built.problem.latency_model is not None
+    # the trace was re-priced over the same wire
+    assert built.trace.compression == built.problem.compression
+    res = run(spec)
+    assert np.isfinite(res.theta)
+
+    # the footgun, expressed manually, still raises — and names the api
+    manual_base = manual_paper_problem(seed=0)
+    trace = make_trace(
+        "straggler-tail", manual_base.profile, manual_base.system,
+        rounds=8, seed=0,
+    )
+    robust = robust_problem(manual_base, trace, quantile=0.95)
+    with pytest.raises(ValueError, match="repro.api.build"):
+        robust.with_compression(CompressionSpec.uniform(3, model_ratio=0.25))
+
+
+def test_system_preset_validation():
+    # client-cloud has exactly one server; a spec claiming otherwise raises
+    with pytest.raises(ValueError, match="num_edges=1"):
+        build(ExperimentSpec(
+            system=SystemCfg(preset="two-tier-client-cloud", num_edges=7)
+        ))
+    # more edges than clients cannot host a split
+    with pytest.raises(ValueError, match="num_edges <= num_clients"):
+        build(ExperimentSpec(
+            system=SystemCfg(preset="two-tier-client-edge",
+                             num_clients=20, num_edges=30)
+        ))
+    # two-tier presets take no extras (nothing would consume them)
+    with pytest.raises(ValueError, match="takes no extras"):
+        build(ExperimentSpec(
+            system=SystemCfg(preset="two-tier-client-edge",
+                             extras={"memory_bytes": 1e9})
+        ))
+
+
+def test_train_mode_rejects_unpriced_seq():
+    # LM training at the seq=1 default would diverge from the priced shape
+    spec = ExperimentSpec(
+        model=ModelCfg(arch="smollm-135m", variant="reduced", num_layers=4,
+                       batch=4),
+        system=SystemCfg(preset="paper-three-tier", num_clients=8, num_edges=4),
+        solver=SolverCfg(kind="fixed", cuts=(1, 3), intervals=(4, 2, 1)),
+        run=RunCfg(mode="train", rounds=1),
+    )
+    with pytest.raises(ValueError, match="seq >= 2"):
+        run(spec)
+
+
+def test_run_accepts_prebuilt_and_rejects_mismatch():
+    spec = paper_spec(seed=0)
+    built = build(spec)
+    res = run(spec, built=built)
+    assert identity_result_fields(res) == identity_result_fields(run(spec))
+    with pytest.raises(ValueError, match="different spec"):
+        run(paper_spec(seed=1), built=built)
+
+
+def test_two_tier_and_tpu_presets_build_and_solve():
+    for spec in (
+        two_tier_spec("client-edge", seed=0),
+        two_tier_spec("client-cloud", seed=0),
+        tpu_pod_spec(seed=0, eps=2.0),
+    ):
+        res = run(spec)
+        assert np.isfinite(res.theta)
+        assert len(res.cuts) == build(spec).system.M - 1
+
+
+# --------------------------------------------------------------------------- #
+# 3. run(spec) reproducibility from disk
+# --------------------------------------------------------------------------- #
+
+
+def identity_result_fields(res):
+    return (res.cuts, res.intervals, res.theta, res.rounds_to_eps,
+            res.total_latency)
+
+
+def test_json_spec_reproduces_identical_result(tmp_path):
+    spec = paper_spec(seed=0)
+    res = run(spec)
+
+    path = tmp_path / "spec.json"
+    path.write_text(json.dumps(spec.to_dict()))
+    reloaded = ExperimentSpec.from_dict(json.loads(path.read_text()))
+    assert reloaded == spec
+    res2 = run(reloaded)
+    assert identity_result_fields(res2) == identity_result_fields(res)
+    assert res2.latency == res.latency
+
+
+def test_json_spec_reproduces_robust_result(tmp_path):
+    spec = robust_spec("flaky-wan", seed=1, rounds=8)
+    res = run(spec)
+    reloaded = ExperimentSpec.from_dict(
+        json.loads(json.dumps(spec.to_dict()))
+    )
+    res2 = run(reloaded)
+    assert identity_result_fields(res2) == identity_result_fields(res)
+
+
+def test_result_to_dict_is_json_and_roundtrips():
+    from repro.api import ExperimentResult
+
+    res = run(paper_spec(seed=0))
+    s = json.dumps(res.to_dict())  # must not raise (numpy coerced)
+    back = ExperimentResult.from_dict(json.loads(s))
+    assert identity_result_fields(back) == identity_result_fields(res)
+    # provenance alone is enough to re-run the experiment
+    res3 = run(ExperimentSpec.from_dict(back.provenance))
+    assert identity_result_fields(res3) == identity_result_fields(res)
+
+
+def test_solver_kinds_dispatch():
+    base = paper_spec(seed=0)
+    bcd = run(base)
+    ma = run(base.replace(solver=SolverCfg(kind="ma", cuts=bcd.cuts)))
+    assert ma.cuts == bcd.cuts
+    ms = run(base.replace(
+        solver=SolverCfg(kind="ms", intervals=bcd.intervals)
+    ))
+    assert ms.intervals == bcd.intervals
+    fixed = run(base.replace(
+        solver=SolverCfg(kind="fixed", cuts=bcd.cuts, intervals=bcd.intervals)
+    ))
+    assert identity_result_fields(fixed)[:2] == identity_result_fields(bcd)[:2]
+    assert fixed.theta == bcd.theta
+    with pytest.raises(ValueError, match="solver.cuts"):
+        run(base.replace(solver=SolverCfg(kind="ma")))
+
+
+def test_simulate_mode_profiles_the_schedule():
+    spec = robust_spec("lognormal-heterogeneous", seed=0, rounds=8).replace(
+        run=RunCfg(mode="simulate", seed=0)
+    )
+    res = run(spec)
+    assert res.sim is not None
+    assert res.sim["rounds"] == 8
+    assert res.sim["total_p95"] >= res.sim["total_p50"] > 0
+    assert res.sim["mean_participants"] > 0
+
+
+def test_evaluate_schedule_matches_run():
+    spec = paper_spec(seed=0)
+    res = run(spec)
+    ev = evaluate_schedule(build(spec), res.cuts, res.intervals)
+    assert identity_result_fields(ev) == identity_result_fields(res)
+
+
+# --------------------------------------------------------------------------- #
+# 4. training path + deprecation shim
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.slow
+def test_train_mode_quickstart_runs_and_learns():
+    res = run(quickstart_spec(rounds=8))
+    assert res.train is not None
+    assert res.train["final_loss"] < res.train["first_loss"]
+    assert np.isfinite(res.train["thm1_bound"])
+
+
+def test_common_paper_problem_shim_warns_and_matches():
+    import warnings
+
+    from benchmarks.common import paper_problem
+
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        prob = paper_problem(seed=0)
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    manual = manual_paper_problem(seed=0)
+    assert prob.eps == manual.eps
+    assert prob.theta((2, 5, 1), (3, 8)) == manual.theta((2, 5, 1), (3, 8))
+
+
+def test_top_level_package_exports_api():
+    import repro
+
+    assert repro.api.ExperimentSpec is ExperimentSpec
