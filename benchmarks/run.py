@@ -20,6 +20,8 @@ Harness -> paper artifact map (details in DESIGN.md §7):
     fig45_benchmarks      Figs. 4-5  HSFL vs the 5 baseline policies
     fig67_resources       Figs. 6-7  resource scaling + tier count
     sim_scale             (ours)     fleet simulator: oracle check + 10^6-client sweep
+    solver_scale          (ours)     batched MS/MA/BCD lattice core vs the scalar
+                                     oracle walk (bit-exact optima, >=20x headline)
     compress_sweep        (ours)     compression ratio/omega priced through BCD,
                                      Thm 1 + the fused q8 kernel oracle
     ablations             Figs. 8-9  MA / MS ablations (+ real training)
@@ -36,7 +38,7 @@ import time
 def _registry(args):
     from . import (
         ablations, bound_check, compress_sweep, fig2_latency_vs_cut,
-        fig45_benchmarks, fig67_resources, roofline, sim_scale,
+        fig45_benchmarks, fig67_resources, roofline, sim_scale, solver_scale,
     )
 
     return [
@@ -49,6 +51,8 @@ def _registry(args):
          lambda: fig67_resources.main(args.quick, seed=args.seed)),
         ("sim_scale", "analytic",
          lambda: sim_scale.main(args.quick, seed=args.seed)),
+        ("solver_scale", "analytic",
+         lambda: solver_scale.main(args.quick, seed=args.seed)),
         ("ablations", "training",
          lambda: ablations.main(args.quick, seed=args.seed)),
         ("bound_check", "training",

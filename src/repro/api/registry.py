@@ -5,7 +5,8 @@ Four maps, one per spec axis:
 * ``MODEL_IDS``  — architecture ids (delegates to ``repro.configs``);
 * ``SYSTEMS``    — system presets: name → ``SystemCfg`` → ``SystemSpec``
   (paper-three-tier, tpu-pod, the two two-tier SFL baselines of Fig. 7,
-  plus anything added via ``register_system``);
+  the M=4 four-tier-wan hierarchy, plus anything added via
+  ``register_system``);
 * ``SCENARIOS``  — fleet-sim regimes (delegates to ``repro.sim``);
 * ``CODECS``     — wire codecs: name → ``Compressor`` constructor
   (delegates to ``repro.compress.SCHEMES``; extend via ``register_codec``).
@@ -145,6 +146,57 @@ def _two_tier(cfg: SystemCfg, kind: str) -> SystemSpec:
         model_up=(rng.uniform(75e6, 80e6, N) * cfg.comm_scale,),
         model_down=(np.full(N, 370e6) * cfg.comm_scale,),
         memory=(np.full(N, 8e9), np.full(J2, 64e9)),
+    )
+
+
+@register_system("four-tier-wan")
+def _four_tier_wan(cfg: SystemCfg) -> SystemSpec:
+    """Client–edge–regional–cloud WAN hierarchy (M=4): the Sec. VII
+    numbers extended one tier up (a regional aggregation layer between
+    edge and cloud), for M-sweeps of the solver core and deeper-hierarchy
+    scenarios.  ``extras['num_regional']`` sets J₃ (default J₂//2)."""
+    rng = np.random.default_rng(cfg.seed)
+    N, J2 = cfg.num_clients, cfg.num_edges
+    extras = dict(cfg.extras)
+    J3 = int(extras.pop("num_regional", max(1, J2 // 2)))
+    if extras:
+        raise ValueError(f"four-tier-wan unknown extras: {sorted(extras)}")
+    if not 1 <= J3 <= J2 <= N:
+        raise ValueError(
+            f"four-tier-wan needs 1 <= num_regional <= num_edges <= "
+            f"num_clients; got {J3}/{J2}/{N}"
+        )
+    dev = rng.uniform(0.4e12, 0.6e12, N) * cfg.compute_scale
+    edge = np.full(N, 5e12 / max(1, N // J2)) * cfg.compute_scale
+    regional = np.full(N, 20e12 / max(1, N // J3)) * cfg.compute_scale
+    cloud = np.full(N, 50e12 / N) * cfg.compute_scale
+    up_dev = rng.uniform(75e6, 80e6, N) * cfg.comm_scale
+    down_dev = np.full(N, 370e6) * cfg.comm_scale
+    edge_reg = rng.uniform(370e6, 400e6, N) * cfg.comm_scale
+    reg_cloud = rng.uniform(800e6, 1000e6, N) * cfg.comm_scale
+    return SystemSpec(
+        M=4,
+        num_clients=N,
+        entities=(N, J2, J3, 1),
+        compute=(dev, edge, regional, cloud),
+        act_up=(up_dev, edge_reg, reg_cloud),
+        act_down=(down_dev, edge_reg, reg_cloud),
+        model_up=(
+            rng.uniform(75e6, 80e6, N) * cfg.comm_scale,
+            rng.uniform(370e6, 400e6, J2) * cfg.comm_scale,
+            rng.uniform(800e6, 1000e6, J3) * cfg.comm_scale,
+        ),
+        model_down=(
+            np.full(N, 370e6) * cfg.comm_scale,
+            np.full(J2, 370e6) * cfg.comm_scale,
+            np.full(J3, 1000e6) * cfg.comm_scale,
+        ),
+        memory=(
+            np.full(N, 8e9),
+            np.full(J2, 16e9),
+            np.full(J3, 64e9),
+            np.array([256e9]),
+        ),
     )
 
 

@@ -37,17 +37,18 @@ def _schedule(built: BuiltExperiment) -> Tuple[Tuple[int, ...], Tuple[int, ...]]
             init_intervals=s.intervals,
             tol=s.tol,
             max_iters=s.max_iters,
+            backend=s.backend,
         )
         return res.cuts, tuple(res.intervals)
     if s.kind == "ma":
         if s.cuts is None:
             raise ValueError('solver kind="ma" needs solver.cuts (fixed μ)')
-        ma = solve_ma(p, s.cuts)
+        ma = solve_ma(p, s.cuts, backend=s.backend)
         return tuple(s.cuts), tuple(ma.intervals)
     if s.kind == "ms":
         if s.intervals is None:
             raise ValueError('solver kind="ms" needs solver.intervals (fixed I)')
-        ms = solve_ms(p, s.intervals)
+        ms = solve_ms(p, s.intervals, backend=s.backend)
         return tuple(ms.cuts), tuple(s.intervals)
     # "fixed": evaluate the given schedule as-is
     if s.cuts is None or s.intervals is None:

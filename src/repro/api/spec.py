@@ -188,6 +188,12 @@ class SolverCfg:
     "ms" (Dinkelbach, needs ``intervals``), or "fixed" (evaluate the given
     schedule without optimizing).  For "bcd", ``cuts``/``intervals`` seed
     the iteration.
+
+    ``backend`` picks the lattice-evaluation path (DESIGN.md §11):
+    "scalar" walks one cut vector at a time (the historical oracle path),
+    "numpy"/"jax" run the batched whole-lattice core, and "auto"
+    (default) picks numpy or — for lattices big enough to amortize the
+    jit — jax.  All four return bit-identical optima.
     """
 
     kind: str = "bcd"
@@ -195,10 +201,15 @@ class SolverCfg:
     intervals: Optional[Tuple[int, ...]] = None
     tol: float = 1e-6
     max_iters: int = 50
+    backend: str = "auto"
 
     def __post_init__(self):
         if self.kind not in ("bcd", "ma", "ms", "fixed"):
             raise ValueError(f"solver kind must be bcd|ma|ms|fixed: {self.kind!r}")
+        if self.backend not in ("auto", "scalar", "numpy", "jax"):
+            raise ValueError(
+                f"solver backend must be auto|scalar|numpy|jax: {self.backend!r}"
+            )
         object.__setattr__(self, "cuts", _int_tuple(self.cuts))
         object.__setattr__(self, "intervals", _int_tuple(self.intervals))
 

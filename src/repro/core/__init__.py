@@ -4,6 +4,7 @@
 from .convergence import HyperSpec, corollary1_rounds, synthetic_hyperspec, theorem1_bound
 from .latency import LayerProfile, SystemSpec, build_profile, total_latency
 from .problem import HsflProblem
+from .batched import BatchedEvaluator, cut_lattice
 from .ma_solver import MaSolution, solve_ma, solve_ma_bruteforce
 from .ms_solver import MsSolution, solve_ms, solve_ms_bruteforce
 from .bcd import BcdResult, solve_bcd

@@ -1,0 +1,409 @@
+"""Batched evaluation core: the whole MS/MA/BCD cut lattice at once.
+
+The scalar objective walk in ``core.problem`` prices one cut vector at a
+time — ``split_T`` re-runs the canonical stage chain of
+``latency.split_stages`` per candidate, so a Dinkelbach iteration over
+the U=64/M=3 lattice is ~2,016 Python chain walks and U=128/M=4 explodes
+to ~3·10⁵.  This module prices the *entire* C2–C5 lattice as array
+arithmetic, the same way ``sim/fleet.py`` vectorized the discrete-event
+oracle:
+
+* the feasible lattice is one ``[K, M-1]`` int array
+  (:func:`cut_lattice`, exact row order of
+  ``HsflProblem.iter_cut_vectors``);
+* every tier quantity is a gather into the leading-zero prefix-sum
+  tables the scalar path reads (``LayerProfile.prefix``, the G² cumsum
+  of ``convergence.tier_G2_sums``) — identical subtraction, identical
+  bits;
+* the canonical stage chain becomes a ``[K, S]`` work tensor
+  (:func:`split_work_tensor`) accumulated against per-stage ``[N]``
+  rates *in chain order*, so per-candidate ``split_T``/``agg_T`` and
+  therefore N(I, μ), D(I, μ), Θ'(I, μ) match the scalar oracle
+  bit-for-bit — the ``events.py``/``fleet.py`` contract, ported to the
+  solvers (enforced in ``tests/test_batched.py``).
+
+Backends: ``numpy`` is the reference implementation; ``jax`` runs the
+same chain jitted under ``enable_x64`` (float64 elementwise IEEE ops
+match NumPy exactly); ``auto`` picks jax only when the lattice is big
+enough to amortize the per-shape jit compile.  The scalar walk stays
+available as ``backend="scalar"`` in the solvers and is the test oracle.
+See DESIGN.md §11.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import TYPE_CHECKING, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..compress.base import CompressionSpec, act_ratio, model_ratio
+from .latency import BITS, LayerProfile, SystemSpec
+
+if TYPE_CHECKING:  # pragma: no cover - type hints only
+    from .problem import HsflProblem
+
+try:  # CPU jax is in the image; keep the solver core importable without it
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    _HAS_JAX = True
+except Exception:  # pragma: no cover - exercised only on jax-less installs
+    _HAS_JAX = False
+
+BACKENDS = ("numpy", "jax")
+
+# auto picks jax only when the [K, N] chain is big enough to amortize the
+# per-shape jit compile (~hundreds of ms); below this numpy wins outright.
+AUTO_JAX_MIN_ELEMS = 1_000_000
+
+
+def resolve_backend(backend: str, work_elems: Optional[int] = None) -> str:
+    """Map ``auto`` to a concrete backend (``scalar`` is handled upstream
+    by the solvers, before the batched core is involved)."""
+    if backend == "auto":
+        if not _HAS_JAX:
+            return "numpy"
+        if work_elems is not None and work_elems < AUTO_JAX_MIN_ELEMS:
+            return "numpy"
+        return "jax"
+    if backend == "jax" and not _HAS_JAX:
+        raise RuntimeError("jax backend requested but jax is not importable")
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown batched backend {backend!r}; use numpy|jax|auto "
+            '(backend="scalar" is the solvers\' non-batched oracle walk and '
+            "never reaches the batched core)"
+        )
+    return backend
+
+
+# --------------------------------------------------------------------------- #
+# lattice materialization (C2–C4)
+# --------------------------------------------------------------------------- #
+
+
+def cut_lattice(n_units: int, M: int, min_tier_units: int = 1) -> np.ndarray:
+    """All C2–C4-valid cut vectors as one ``[K, M-1]`` int64 array.
+
+    Row order is exactly ``HsflProblem.iter_cut_vectors`` (lexicographic
+    ``itertools.combinations``), so scalar loops and batched argmins
+    break ties identically.
+    """
+    t = min_tier_units
+    rng = range(t, n_units - t * (M - 1) + 1)
+    rows = [
+        c
+        for c in itertools.combinations(rng, M - 1)
+        if all(c[i + 1] - c[i] >= t for i in range(len(c) - 1))
+    ]
+    if not rows:
+        return np.zeros((0, M - 1), dtype=np.int64)
+    return np.asarray(rows, dtype=np.int64)
+
+
+def lattice_bounds(lattice: np.ndarray, n_units: int) -> np.ndarray:
+    """``[K, M+1]`` tier boundaries: 0 | cuts | U for every row."""
+    K = lattice.shape[0]
+    return np.concatenate(
+        [
+            np.zeros((K, 1), dtype=np.int64),
+            lattice,
+            np.full((K, 1), n_units, dtype=np.int64),
+        ],
+        axis=1,
+    )
+
+
+def stage_meta(M: int) -> Tuple[Tuple[str, int], ...]:
+    """(kind, index) of every leg of the canonical chain — cut-independent,
+    mirroring ``latency.split_stages`` (fwd up the hierarchy, bwd back)."""
+    meta: List[Tuple[str, int]] = []
+    for m in range(M):
+        meta.append(("compute_fwd", m))
+        if m < M - 1:
+            meta.append(("uplink", m))
+    for m in range(M - 1, -1, -1):
+        meta.append(("compute_bwd", m))
+        if m > 0:
+            meta.append(("downlink", m - 1))
+    return tuple(meta)
+
+
+# --------------------------------------------------------------------------- #
+# per-candidate work tensors (Eqs. 11–16 gathered from the prefix tables)
+# --------------------------------------------------------------------------- #
+
+
+def boundary_bits_lattice(
+    profile: LayerProfile,
+    lattice: np.ndarray,
+    m: int,
+    compression: Optional[CompressionSpec] = None,
+) -> np.ndarray:
+    """``[K]`` boundary-m activation/gradient bits (Eq. 12/14), matching
+    ``split_stages``'s ``boundary_bits`` multiply order."""
+    cut = lattice[:, m]
+    act = np.where(cut > 0, profile.act_bytes[np.maximum(cut - 1, 0)], 0.0)
+    return profile.batch * act * BITS * act_ratio(compression, m)
+
+
+def split_work_tensor(
+    profile: LayerProfile,
+    lattice: np.ndarray,
+    compression: Optional[CompressionSpec] = None,
+) -> np.ndarray:
+    """``[K, S]`` stage works in canonical chain order for every row —
+    the batched counterpart of ``latency.split_stages`` work values."""
+    M = lattice.shape[1] + 1
+    bnds = lattice_bounds(lattice, profile.n_units)
+    px = profile.prefix
+    fwd = px.flops_fwd[bnds[:, 1:]] - px.flops_fwd[bnds[:, :-1]]  # [K, M]
+    bwd = px.flops_bwd[bnds[:, 1:]] - px.flops_bwd[bnds[:, :-1]]
+    cols: List[np.ndarray] = []
+    for kind, idx in stage_meta(M):
+        if kind == "compute_fwd":
+            cols.append(fwd[:, idx])
+        elif kind == "compute_bwd":
+            cols.append(bwd[:, idx])
+        else:  # uplink / downlink share the boundary payload
+            cols.append(boundary_bits_lattice(profile, lattice, idx, compression))
+    return np.stack(cols, axis=1)
+
+
+def model_bits_lattice(
+    profile: LayerProfile,
+    lattice: np.ndarray,
+    compression: Optional[CompressionSpec] = None,
+) -> np.ndarray:
+    """``[K, M-1]`` fed-server model bits λ_m (Eq. 15/16 payload), matching
+    ``aggregation_phases``'s ``tier_param_bytes · 8 · ratio`` order."""
+    M = lattice.shape[1] + 1
+    bnds = lattice_bounds(lattice, profile.n_units)
+    cs = profile.prefix.param_bytes
+    out = np.empty((lattice.shape[0], M - 1))
+    for m in range(M - 1):
+        lam = cs[bnds[:, m + 1]] - cs[bnds[:, m]]
+        if m == 0:
+            lam = lam + profile.frontend_param_bytes
+        out[:, m] = lam * BITS * model_ratio(compression, m)
+    return out
+
+
+def tier_d_lattice(G2: np.ndarray, lattice: np.ndarray) -> np.ndarray:
+    """``[K, M]`` per-tier Σ G_l² — same cumsum-diff as ``tier_G2_sums``."""
+    cs = np.concatenate(([0.0], np.cumsum(np.asarray(G2, dtype=np.float64))))
+    bnds = lattice_bounds(lattice, len(G2))
+    return cs[bnds[:, 1:]] - cs[bnds[:, :-1]]
+
+
+def memory_mask(
+    profile: LayerProfile, system: SystemSpec, lattice: np.ndarray
+) -> np.ndarray:
+    """``[K]`` bool — constraint C5 for every row, same expression shape as
+    the scalar ``latency.memory_ok``."""
+    N = system.num_clients
+    bnds = lattice_bounds(lattice, profile.n_units)
+    px = profile.prefix
+    ok = np.ones(lattice.shape[0], dtype=bool)
+    for m in range(system.M):
+        lo, hi = bnds[:, m], bnds[:, m + 1]
+        hosted = N // system.entities[m]
+        per_model = (
+            (px.act_bytes[hi] - px.act_bytes[lo])
+            + (px.grad_act_bytes[hi] - px.grad_act_bytes[lo])
+        ) * profile.batch + (
+            (px.param_bytes[hi] - px.param_bytes[lo])
+            + (px.opt_bytes[hi] - px.opt_bytes[lo])
+        )
+        if m == 0:
+            per_model = per_model + profile.frontend_param_bytes
+        if m == system.M - 1:
+            per_model = per_model + profile.head_param_bytes
+        ok &= hosted * per_model < float(np.min(system.memory[m]))
+    return ok
+
+
+# --------------------------------------------------------------------------- #
+# nominal latency tables (Eqs. 17/18 for every row)
+# --------------------------------------------------------------------------- #
+
+
+def nominal_stage_rates(system: SystemSpec, M: int) -> List[np.ndarray]:
+    """Per-stage nominal ``[N]`` service rates, chain order (``stage_rate``)."""
+    rates: List[np.ndarray] = []
+    for kind, idx in stage_meta(M):
+        if kind in ("compute_fwd", "compute_bwd"):
+            rates.append(system.compute[idx])
+        elif kind == "uplink":
+            rates.append(system.act_up[idx])
+        else:
+            rates.append(system.act_down[idx])
+    return rates
+
+
+def accumulate_chain(
+    works: np.ndarray, rates: Sequence[np.ndarray], backend: str = "numpy"
+) -> np.ndarray:
+    """``[K]`` max-over-clients of the chain sum Σ_s work/rate, accumulated
+    in stage order (the bit-exactness-critical reduction)."""
+    if backend == "jax":
+        with enable_x64():
+            return np.asarray(
+                _chain_jit(jnp.asarray(works), jnp.asarray(np.stack(rates, axis=0)))
+            )
+    t = np.zeros((works.shape[0], rates[0].shape[0]))
+    for s, r in enumerate(rates):
+        t = t + works[:, s][:, None] / r[None, :]
+    return t.max(axis=1)
+
+
+if _HAS_JAX:
+
+    @jax.jit
+    def _chain_jit(works, rates):  # works [K, S], rates [S, N]
+        t = jnp.zeros((works.shape[0], rates.shape[1]), dtype=works.dtype)
+        for s in range(rates.shape[0]):
+            t = t + works[:, s][:, None] / rates[s][None, :]
+        return jnp.max(t, axis=1)
+
+    @jax.jit
+    def _agg_jit(lam, up, down):  # lam [K], up/down [J]
+        return jnp.max(lam[:, None] / up[None, :], axis=1) + jnp.max(
+            lam[:, None] / down[None, :], axis=1
+        )
+
+
+def nominal_split_table(
+    profile: LayerProfile,
+    system: SystemSpec,
+    lattice: np.ndarray,
+    compression: Optional[CompressionSpec] = None,
+    backend: str = "numpy",
+) -> np.ndarray:
+    """``[K]`` T_S(μ) for every lattice row (Eq. 17)."""
+    works = split_work_tensor(profile, lattice, compression)
+    rates = nominal_stage_rates(system, lattice.shape[1] + 1)
+    return accumulate_chain(works, rates, backend)
+
+
+def nominal_agg_table(
+    profile: LayerProfile,
+    system: SystemSpec,
+    lattice: np.ndarray,
+    compression: Optional[CompressionSpec] = None,
+    backend: str = "numpy",
+) -> np.ndarray:
+    """``[K, M-1]`` T_{m,A}(μ) for every lattice row (Eq. 18)."""
+    M = lattice.shape[1] + 1
+    lam = model_bits_lattice(profile, lattice, compression)
+    agg = np.zeros((lattice.shape[0], M - 1))
+    for m in range(M - 1):
+        if system.entities[m] <= 1:
+            continue  # Eq. (15)/(16) indicator
+        up, down = system.model_up[m], system.model_down[m]
+        if backend == "jax":
+            with enable_x64():
+                agg[:, m] = np.asarray(
+                    _agg_jit(
+                        jnp.asarray(lam[:, m]), jnp.asarray(up), jnp.asarray(down)
+                    )
+                )
+        else:
+            agg[:, m] = (lam[:, m][:, None] / up[None, :]).max(axis=1) + (
+                lam[:, m][:, None] / down[None, :]
+            ).max(axis=1)
+    return agg
+
+
+# --------------------------------------------------------------------------- #
+# the evaluator
+# --------------------------------------------------------------------------- #
+
+
+class BatchedEvaluator:
+    """Whole-lattice Θ'/N/D evaluation for one ``HsflProblem``.
+
+    Latency tables (``split`` [K], ``agg`` [K, M-1]) and the convergence
+    gathers (``d`` [K, M-1], ``mem_ok`` [K]) are computed ONCE per
+    problem; evaluating the objective for any interval vector is then
+    O(K·M) elementwise arithmetic — one Dinkelbach step is a single
+    argmin over a [K] array.  Obtain via ``problem.evaluator(backend)``
+    (memoized per problem instance, so BCD's repeated MS solves share
+    one table build; ``with_compression`` returns a new problem and
+    therefore re-prices).
+
+    Latency pricing mirrors ``HsflProblem``: nominal Eq. 17/18 tables
+    when no ``latency_model`` is attached; a model exposing
+    ``split_T_batch``/``agg_T_batch`` (``sim.robust.TraceLatency``)
+    prices the lattice through the trace; any other ``LatencyModel``
+    falls back to per-row protocol calls (correct, not fast).
+    """
+
+    def __init__(self, problem: "HsflProblem", backend: str = "auto"):
+        self.problem = problem
+        lattice = problem.cut_lattice()
+        M = problem.M
+        self.backend = resolve_backend(
+            backend, work_elems=lattice.shape[0] * problem.system.num_clients
+        )
+        self.lattice = lattice
+        self.mem_ok = memory_mask(problem.profile, problem.system, lattice)
+        lm = problem.latency_model
+        if lm is None:
+            self.split = nominal_split_table(
+                problem.profile, problem.system, lattice,
+                problem.compression, self.backend,
+            )
+            self.agg = nominal_agg_table(
+                problem.profile, problem.system, lattice,
+                problem.compression, self.backend,
+            )
+        elif hasattr(lm, "split_T_batch") and hasattr(lm, "agg_T_batch"):
+            self.split = np.asarray(lm.split_T_batch(lattice), dtype=np.float64)
+            self.agg = np.asarray(lm.agg_T_batch(lattice), dtype=np.float64)
+        else:  # generic LatencyModel: scalar protocol per row
+            rows = [tuple(int(x) for x in r) for r in lattice]
+            self.split = np.array([lm.split_T(r) for r in rows])
+            self.agg = np.array(
+                [[lm.agg_T(r, m) for m in range(M - 1)] for r in rows]
+            )
+        self.d = tier_d_lattice(problem.hyper.G2, lattice)[:, : M - 1]
+        self.c, self.kappa = problem.constants()
+        self.scale = 2.0 * problem.hyper.theta0 / problem.hyper.gamma
+
+    @property
+    def K(self) -> int:
+        return self.lattice.shape[0]
+
+    def cuts_at(self, i: int) -> Tuple[int, ...]:
+        return tuple(int(x) for x in self.lattice[i])
+
+    def numerator(self, intervals: Sequence[int]) -> np.ndarray:
+        """[K] N(I, μ) — ``split + Σ_m agg_m / I_m`` in tier order (the
+        ``add.reduce`` order of the scalar ``problem.numerator``)."""
+        M = self.problem.M
+        acc = self.agg[:, 0] / float(intervals[0])
+        for m in range(1, M - 1):
+            acc = acc + self.agg[:, m] / float(intervals[m])
+        return self.split + acc
+
+    def denominator(self, intervals: Sequence[int]) -> np.ndarray:
+        """[K] D(I, μ) = c − κ·Σ_{I_m>1} I_m² d_m (Eq. 22/24)."""
+        s = np.zeros(self.K)
+        for m in range(self.problem.M - 1):
+            I = int(intervals[m])
+            if I > 1:
+                s = s + (I**2) * self.d[:, m]
+        return self.c - self.kappa * s
+
+    def theta(self, intervals: Sequence[int]) -> np.ndarray:
+        """[K] exact Θ'(I, μ); +inf where C5 fails or D ≤ 0."""
+        from .problem import INFEASIBLE
+
+        D = self.denominator(intervals)
+        N_ = self.numerator(intervals)
+        th = np.full(self.K, INFEASIBLE)
+        ok = self.mem_ok & (D > 0)
+        th[ok] = self.scale * N_[ok] / D[ok]
+        return th

@@ -39,7 +39,13 @@ def solve_bcd(
     tol: float = 1e-6,
     max_iters: int = 50,
     compression: Optional[CompressionSpec] = None,
+    backend: str = "auto",
 ) -> BcdResult:
+    """``backend`` selects the block solvers' evaluation path (DESIGN.md
+    §11): "scalar" is the historical per-cut walk (test oracle);
+    "numpy"/"jax"/"auto" run the batched lattice core — the MS latency
+    tables are built once per problem and shared across every Dinkelbach
+    step of every BCD iteration.  Results are bit-identical either way."""
     if compression is not None:
         problem = problem.with_compression(compression)
     M, U = problem.M, problem.n_units
@@ -54,9 +60,9 @@ def solve_bcd(
     history: List[float] = []
     theta = problem.theta(intervals, cuts)
     for _ in range(max_iters):
-        ma = solve_ma(problem, cuts)
+        ma = solve_ma(problem, cuts, backend=backend)
         intervals = ma.intervals
-        ms = solve_ms(problem, intervals)
+        ms = solve_ms(problem, intervals, backend=backend)
         cuts = ms.cuts
         new_theta = problem.theta(intervals, cuts)
         history.append(new_theta)

@@ -28,10 +28,17 @@ class HyperSpec:
 
 
 def tier_G2_sums(G2: np.ndarray, cuts: Sequence[int]) -> np.ndarray:
-    """Σ_{l in tier m} G_l² for every tier (M = len(cuts)+1)."""
+    """Σ_{l in tier m} G_l² for every tier (M = len(cuts)+1).
+
+    Computed as leading-zero cumsum differences — the canonical tier-sum
+    arithmetic shared with the batched lattice core
+    (``core.batched.tier_d_lattice``), so scalar and batched d_m agree
+    bit-for-bit.
+    """
     bounds = [0, *cuts, len(G2)]
+    cs = np.concatenate(([0.0], np.cumsum(np.asarray(G2, dtype=np.float64))))
     return np.array(
-        [float(np.sum(G2[bounds[m] : bounds[m + 1]])) for m in range(len(bounds) - 1)]
+        [float(cs[bounds[m + 1]] - cs[bounds[m]]) for m in range(len(bounds) - 1)]
     )
 
 

@@ -22,6 +22,30 @@ from ..models.vgg import VggSpec
 BITS = 8.0
 
 
+def prefix_table(arr: np.ndarray) -> np.ndarray:
+    """Leading-zero float64 prefix sums: ``table[hi] - table[lo]`` is the
+    canonical tier sum of ``arr[lo:hi]``.
+
+    Every tier quantity in this repo — scalar chain, batched lattice core
+    (``core.batched``), memory constraint — reads the SAME tables with the
+    same subtraction, which is what makes the batched evaluation bit-exact
+    against the scalar walk (``np.sum`` over a slice pairwise-accumulates
+    and would differ in the last bit).
+    """
+    return np.concatenate(([0.0], np.cumsum(np.asarray(arr, dtype=np.float64))))
+
+
+@dataclass(frozen=True)
+class ProfilePrefix:
+    """Prefix-sum tables ([U+1] each) of every per-unit profile column."""
+    flops_fwd: np.ndarray
+    flops_bwd: np.ndarray
+    act_bytes: np.ndarray
+    grad_act_bytes: np.ndarray
+    param_bytes: np.ndarray
+    opt_bytes: np.ndarray
+
+
 @dataclass(frozen=True)
 class LayerProfile:
     """Per-unit workload profile (unit = HSFL cut granularity)."""
@@ -37,10 +61,27 @@ class LayerProfile:
     head_param_bytes: float
     batch: int
 
+    @property
+    def prefix(self) -> ProfilePrefix:
+        """Memoized prefix-sum tables (computed once per profile; the
+        instance ``__dict__`` write bypasses the frozen-dataclass guard)."""
+        tables = self.__dict__.get("_prefix")
+        if tables is None:
+            tables = ProfilePrefix(
+                flops_fwd=prefix_table(self.flops_fwd),
+                flops_bwd=prefix_table(self.flops_bwd),
+                act_bytes=prefix_table(self.act_bytes),
+                grad_act_bytes=prefix_table(self.grad_act_bytes),
+                param_bytes=prefix_table(self.param_bytes),
+                opt_bytes=prefix_table(self.opt_bytes),
+            )
+            self.__dict__["_prefix"] = tables
+        return tables
+
     def tier_flops(self, cuts: Sequence[int], m: int, bwd: bool = False) -> float:
         lo, hi = self._bounds(cuts, m)
-        arr = self.flops_bwd if bwd else self.flops_fwd
-        return float(np.sum(arr[lo:hi]))
+        cs = self.prefix.flops_bwd if bwd else self.prefix.flops_fwd
+        return float(cs[hi] - cs[lo])
 
     def tier_param_bytes(self, cuts: Sequence[int], m: int) -> float:
         lo, hi = self._bounds(cuts, m)
@@ -50,7 +91,8 @@ class LayerProfile:
             extra += self.frontend_param_bytes
         if m == M - 1:
             extra += self.head_param_bytes
-        return float(np.sum(self.param_bytes[lo:hi])) + extra
+        cs = self.prefix.param_bytes
+        return float(cs[hi] - cs[lo]) + extra
 
     def _bounds(self, cuts: Sequence[int], m: int) -> Tuple[int, int]:
         b = [0, *cuts, self.n_units]
@@ -326,26 +368,29 @@ def total_latency(
 
 
 def memory_ok(profile: LayerProfile, system: SystemSpec, cuts: Sequence[int]) -> bool:
-    """Constraint C5: per-entity memory for hosted sub-models."""
+    """Constraint C5: per-entity memory for hosted sub-models.
+
+    Reads the profile's prefix tables with the same expression shape as
+    the batched lattice check (``core.batched.memory_mask``) so the two
+    agree on every knife-edge cut.
+    """
     N = system.num_clients
     bnds = [0, *cuts, profile.n_units]
-    csum_act = np.cumsum(profile.act_bytes)
-    csum_gact = np.cumsum(profile.grad_act_bytes)
+    px = profile.prefix
     for m in range(system.M):
         lo, hi = bnds[m], bnds[m + 1]
         hosted = N // system.entities[m]
-        per_model = float(
-            (csum_act[hi - 1] if hi > 0 else 0.0)
-            - (csum_act[lo - 1] if lo > 0 else 0.0)
-            + (csum_gact[hi - 1] if hi > 0 else 0.0)
-            - (csum_gact[lo - 1] if lo > 0 else 0.0)
-        ) * profile.batch + float(
-            np.sum(profile.param_bytes[lo:hi]) + np.sum(profile.opt_bytes[lo:hi])
+        per_model = (
+            (px.act_bytes[hi] - px.act_bytes[lo])
+            + (px.grad_act_bytes[hi] - px.grad_act_bytes[lo])
+        ) * profile.batch + (
+            (px.param_bytes[hi] - px.param_bytes[lo])
+            + (px.opt_bytes[hi] - px.opt_bytes[lo])
         )
         if m == 0:
-            per_model += profile.frontend_param_bytes
+            per_model = per_model + profile.frontend_param_bytes
         if m == system.M - 1:
-            per_model += profile.head_param_bytes
+            per_model = per_model + profile.head_param_bytes
         cap = float(np.min(system.memory[m]))
         if hosted * per_model >= cap:
             return False

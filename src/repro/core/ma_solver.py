@@ -15,6 +15,15 @@ Proposition 1 structure:
     the 2^{|M''|} floor/ceil roundings under the *exact* objective (with the
     I=1 indicator discontinuity honoured).
 
+The candidate set (pinned bases + rounding neighbourhoods) is generated
+once by ``_candidate_intervals``; the final exact-objective pick runs
+either as the historical per-candidate ``problem.theta`` walk
+(``backend="scalar"``, each call re-prices T_S/T_{m,A} from scratch) or
+as one vectorized Θ' evaluation over a ``[C, M-1]`` interval array with
+the latency terms a/b priced exactly once (any other backend) — same
+candidate order, same accumulation order, bit-identical winner
+(DESIGN.md §11).
+
 The solver is exact up to the integer rounding neighbourhood, which matches
 Eq. (26)/(38); ``tests/test_solvers.py`` verifies optimality against brute
 force over the full integer grid.
@@ -36,7 +45,9 @@ class MaSolution:
     theta: float
 
 
-def _cubic_positive_root(ka: float, kb: float, kc: float) -> float:
+def _cubic_positive_root(
+    ka: float, kb: float, kc: float, max_doublings: int = 200
+) -> float:
     """Unique positive root of  ka·I³ + kb·I² − kc = 0  (ka, kb, kc > 0)."""
     roots = np.roots([ka, kb, 0.0, -kc])
     real = roots[np.abs(roots.imag) < 1e-9].real
@@ -44,8 +55,20 @@ def _cubic_positive_root(ka: float, kb: float, kc: float) -> float:
     if len(pos) == 0:  # numerical fallback: bisection
         lo, hi = 1e-9, 1.0
         f = lambda x: ka * x**3 + kb * x**2 - kc
-        while f(hi) < 0:
+        for _ in range(max_doublings):
+            if f(hi) >= 0:
+                break
             hi *= 2.0
+        else:
+            # a degenerate coefficient set (e.g. ka = kb = 0, kc > 0) has no
+            # positive root at all; without this cap the bracket expansion
+            # would double `hi` forever.
+            raise ValueError(
+                "MA bracket expansion failed: "
+                f"Ξ(I) = {ka!r}·I³ + {kb!r}·I² − {kc!r} has no positive root "
+                f"within I ≤ {hi:.3g} after {max_doublings} doublings "
+                "(Proposition 1 requires ka, kb, kc > 0)"
+            )
         for _ in range(200):
             mid = 0.5 * (lo + hi)
             if f(mid) < 0:
@@ -95,34 +118,27 @@ def _newton_jacobi(
     return I
 
 
-def solve_ma(
-    problem: HsflProblem,
-    cuts: Sequence[int],
-    i_max: int = 10_000,
-) -> MaSolution:
-    """Optimal MA intervals for fixed cuts (Proposition 1 + enumeration)."""
-    M = problem.M
-    a = problem.split_T(cuts)
-    b = problem.agg_T(cuts)  # [M-1]
-    c, kappa = problem.constants()
-    d = problem.tier_d(cuts)[: M - 1]
-
-    best: Optional[MaSolution] = None
-
-    def consider(intervals: Tuple[int, ...]):
-        nonlocal best
-        th = problem.theta(list(intervals) + [1], cuts)
-        if th < (best.theta if best else INFEASIBLE):
-            best = MaSolution(tuple(intervals) + (1,), th)
-
+def _candidate_intervals(
+    M: int,
+    a: float,
+    b: np.ndarray,
+    c: float,
+    kappa: float,
+    d: np.ndarray,
+    i_max: int,
+) -> List[Tuple[int, ...]]:
+    """Proposition-1 candidate set, in the exact enumeration order the
+    scalar path historically evaluated (pinned subsets outer, rounding
+    combos inner) — both backends pick argmins over this one list."""
     tiers = list(range(M - 1))
+    out: List[Tuple[int, ...]] = []
     for pinned in itertools.chain.from_iterable(
         itertools.combinations(tiers, k) for k in range(M)
     ):
         free = [m for m in tiers if m not in pinned]
         base = {m: 1 for m in pinned}
         if not free:
-            consider(tuple(base[m] for m in tiers))
+            out.append(tuple(base[m] for m in tiers))
             continue
         pinned_b = float(sum(b[m] for m in pinned))
         root = _newton_jacobi(a, b, c, kappa, d, free, pinned_b)
@@ -141,7 +157,84 @@ def solve_ma(
         for combo in itertools.product(*cands_per):
             iv = dict(base)
             iv.update({m: v for m, v in zip(free, combo)})
-            consider(tuple(iv[m] for m in tiers))
+            out.append(tuple(iv[m] for m in tiers))
+    return out
+
+
+def _theta_candidates(
+    problem: HsflProblem,
+    mem_ok: bool,
+    a: float,
+    b: np.ndarray,
+    c: float,
+    kappa: float,
+    d: np.ndarray,
+    cand: np.ndarray,
+) -> np.ndarray:
+    """Exact Θ'(I, μ) for ``[C, M-1]`` interval rows at one fixed cut —
+    latency terms a/b priced once, accumulation order matching
+    ``problem.numerator``/``denominator``/``theta`` bit-for-bit."""
+    C = cand.shape[0]
+    if not mem_ok:
+        return np.full(C, INFEASIBLE)
+    M = problem.M
+    acc = b[0] / cand[:, 0]
+    for m in range(1, M - 1):
+        acc = acc + b[m] / cand[:, m]
+    num = a + acc
+    s = np.zeros(C)
+    for m in range(M - 1):
+        I = cand[:, m]
+        s = s + np.where(I > 1, (I * I) * d[m], 0.0)
+    D = c - kappa * s
+    th = np.full(C, INFEASIBLE)
+    ok = D > 0
+    scale = 2.0 * problem.hyper.theta0 / problem.hyper.gamma
+    th[ok] = scale * num[ok] / D[ok]
+    return th
+
+
+def solve_ma(
+    problem: HsflProblem,
+    cuts: Sequence[int],
+    i_max: int = 10_000,
+    backend: str = "auto",
+) -> MaSolution:
+    """Optimal MA intervals for fixed cuts (Proposition 1 + enumeration).
+
+    ``backend="scalar"`` evaluates each candidate through
+    ``problem.theta`` (re-pricing the latency terms per candidate — the
+    oracle path); anything else evaluates all candidates in one
+    vectorized pass.  Identical winner either way.
+    """
+    if backend != "scalar":
+        from .batched import resolve_backend
+
+        resolve_backend(backend)  # validate; MA's candidate set is small
+        # enough that the vectorized pass below is numpy on every backend
+    M = problem.M
+    a = problem.split_T(cuts)
+    b = problem.agg_T(cuts)  # [M-1]
+    c, kappa = problem.constants()
+    d = problem.tier_d(cuts)[: M - 1]
+    cands = _candidate_intervals(M, a, b, c, kappa, d, i_max)
+
+    best: Optional[MaSolution] = None
+    if backend == "scalar":
+        for intervals in cands:
+            th = problem.theta(list(intervals) + [1], cuts)
+            if th < (best.theta if best else INFEASIBLE):
+                best = MaSolution(tuple(intervals) + (1,), th)
+    elif cands:
+        arr = np.asarray(cands, dtype=np.int64)
+        th = _theta_candidates(
+            problem, problem.memory_feasible(cuts), a, b, c, kappa, d, arr
+        )
+        i = int(np.argmin(th))  # first-tie, like the scalar strict-< scan
+        if th[i] < INFEASIBLE:
+            best = MaSolution(
+                tuple(int(x) for x in arr[i]) + (1,), float(th[i])
+            )
 
     if best is None:
         # No finite-interval schedule reaches ε: fall back to all-ones

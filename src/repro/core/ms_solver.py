@@ -14,8 +14,20 @@ because every quantity is additive over tiers given the cut vector, and the
 number of C2–C4-valid cut vectors is combinatorial-small
 (≈ U^{M-1}/(M-1)! — e.g. 2,016 for U=64, M=3), an exact search over the
 feasible lattice is both faster and stronger than an LP-relaxation MILP
-here. ``solve_ms_bruteforce`` (direct ratio enumeration) is the test oracle;
-Dinkelbach must and does reach the same optimum.
+here.
+
+Two execution paths, bit-identical by construction (DESIGN.md §11):
+
+* ``backend="scalar"`` walks the lattice one cut vector at a time through
+  ``problem.numerator``/``denominator`` — the historical path, kept as
+  the test oracle;
+* ``backend="numpy"|"jax"|"auto"`` reads the problem's memoized
+  ``BatchedEvaluator``: N and D for the whole lattice are precomputed
+  arrays, so each Dinkelbach step is one argmin over ``[K]`` — this is
+  what lets BCD re-run online at U=128/M=4 (~3·10⁵ lattice points).
+
+``solve_ms_bruteforce`` (direct ratio enumeration) is the test oracle;
+Dinkelbach must and does reach the same optimum on either path.
 """
 from __future__ import annotations
 
@@ -52,19 +64,22 @@ def _feasible_cuts(problem: HsflProblem, intervals: Sequence[int]) -> List[Tuple
     return out
 
 
-def solve_ms(
+_INFEASIBLE_MSG = (
+    "MS sub-problem infeasible: no cut vector satisfies C2–C5 with "
+    "a reachable convergence bound (try larger eps or smaller I)."
+)
+
+
+def _solve_ms_scalar(
     problem: HsflProblem,
     intervals: Sequence[int],
-    tol: float = 1e-9,
-    max_iters: int = 64,
+    tol: float,
+    max_iters: int,
 ) -> MsSolution:
-    """Optimal cuts for fixed intervals via Dinkelbach over an exact backend."""
+    """The one-cut-at-a-time Dinkelbach walk (oracle path)."""
     feas = _feasible_cuts(problem, intervals)
     if not feas:
-        raise ValueError(
-            "MS sub-problem infeasible: no cut vector satisfies C2–C5 with "
-            "a reachable convergence bound (try larger eps or smaller I)."
-        )
+        raise ValueError(_INFEASIBLE_MSG)
     # initial q from an arbitrary feasible point
     n0, d0 = _nd(problem, intervals, feas[0])
     q = n0 / d0
@@ -87,10 +102,48 @@ def solve_ms(
     return MsSolution(tuple(best), scale * q, dinkelbach_iters=it)
 
 
+def solve_ms(
+    problem: HsflProblem,
+    intervals: Sequence[int],
+    tol: float = 1e-9,
+    max_iters: int = 64,
+    backend: str = "auto",
+) -> MsSolution:
+    """Optimal cuts for fixed intervals via Dinkelbach over an exact backend.
+
+    ``backend="scalar"`` re-walks the lattice per iteration (oracle);
+    anything else evaluates the whole lattice through the problem's
+    memoized ``BatchedEvaluator`` — identical iterates, identical optimum,
+    to the last bit.
+    """
+    if backend == "scalar":
+        return _solve_ms_scalar(problem, intervals, tol, max_iters)
+    ev = problem.evaluator(backend)
+    nums = ev.numerator(intervals)
+    dens = ev.denominator(intervals)
+    feas = np.flatnonzero(ev.mem_ok & (dens > 0))
+    if feas.size == 0:
+        raise ValueError(_INFEASIBLE_MSG)
+    n, d = nums[feas], dens[feas]
+    q = n[0] / d[0]
+    best_i = feas[0]
+    for it in range(1, max_iters + 1):
+        vals = n - q * d  # whole-lattice parametric step: one argmin
+        j = int(np.argmin(vals))
+        best_i, fq = feas[j], vals[j]
+        new_q = n[j] / d[j]
+        if abs(fq) <= tol * max(1.0, abs(q)) or abs(new_q - q) <= tol * max(1.0, abs(q)):
+            q = new_q
+            break
+        q = new_q
+    scale = 2.0 * problem.hyper.theta0 / problem.hyper.gamma
+    return MsSolution(ev.cuts_at(int(best_i)), float(scale * q), dinkelbach_iters=it)
+
+
 def solve_ms_bruteforce(
     problem: HsflProblem, intervals: Sequence[int]
 ) -> MsSolution:
-    """Direct ratio enumeration (test oracle)."""
+    """Direct ratio enumeration (test oracle; reads the shared lattice)."""
     best_cuts, best_th = None, INFEASIBLE
     for cuts in problem.iter_cut_vectors():
         th = problem.theta(intervals, cuts)

@@ -32,7 +32,6 @@ this up); ω always enters through ``constants()`` here.
 from __future__ import annotations
 
 import dataclasses
-import itertools
 from dataclasses import dataclass
 from typing import Iterator, List, Optional, Protocol, Sequence, Tuple
 
@@ -201,18 +200,52 @@ class HsflProblem:
             prev = cval
         return True
 
+    def cut_lattice(self, min_tier_units: int = 1) -> np.ndarray:
+        """The C2–C4-valid cut lattice as one memoized ``[K, M-1]`` int
+        array (row order == ``iter_cut_vectors``), shared by every solver
+        — the scalar Dinkelbach walk, ``solve_ms_bruteforce``, and the
+        batched core all read this one materialization instead of
+        re-generating and re-filtering it per call.
+
+        The cache lives on the instance: ``with_compression`` (and any
+        ``dataclasses.replace``) returns a NEW problem, so derived
+        problems re-materialize against their own wire/caches.
+        """
+        cache = self.__dict__.setdefault("_lattice_cache", {})
+        lat = cache.get(min_tier_units)
+        if lat is None:
+            from .batched import cut_lattice
+
+            lat = cache[min_tier_units] = cut_lattice(
+                self.n_units, self.M, min_tier_units
+            )
+        return lat
+
+    def evaluator(self, backend: str = "auto"):
+        """The memoized whole-lattice ``BatchedEvaluator`` (DESIGN.md §11).
+
+        Built once per (problem instance, resolved backend): BCD's
+        repeated MS solves share one latency-table build.  Results are
+        bit-identical across backends and to the scalar walk.
+        """
+        from .batched import BatchedEvaluator, resolve_backend
+
+        be = resolve_backend(
+            backend,
+            work_elems=self.cut_lattice().shape[0] * self.system.num_clients,
+        )
+        cache = self.__dict__.setdefault("_evaluator_cache", {})
+        ev = cache.get(be)
+        if ev is None:
+            ev = cache[be] = BatchedEvaluator(self, backend=be)
+        return ev
+
     def iter_cut_vectors(
         self, min_tier_units: int = 1
     ) -> Iterator[Tuple[int, ...]]:
         """All C2–C4-valid cut vectors with every tier holding at least
         ``min_tier_units`` units (the paper requires each tier non-empty so
-        the split actually spans the hierarchy)."""
-        U, M = self.n_units, self.M
-        rng = range(min_tier_units, U - min_tier_units * (M - 1) + 1)
-        for cuts in itertools.combinations(rng, M - 1):
-            ok = all(
-                cuts[i + 1] - cuts[i] >= min_tier_units
-                for i in range(len(cuts) - 1)
-            )
-            if ok:
-                yield cuts
+        the split actually spans the hierarchy).  Yields rows of the
+        memoized ``cut_lattice`` in order."""
+        for row in self.cut_lattice(min_tier_units):
+            yield tuple(int(x) for x in row)

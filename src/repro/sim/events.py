@@ -134,6 +134,8 @@ def round_agg_phases(
     )
     if len(up) == system.num_clients:
         up, down = up[state.available], down[state.available]
+        if len(up) == 0:
+            return None  # zero-participant round: nothing to upload this tier
     return up, down
 
 

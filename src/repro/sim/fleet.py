@@ -116,6 +116,76 @@ def round_latency(
     return FleetRound(split, per_client, agg, n_part)
 
 
+def simulate_lattice_rounds(
+    trace: SystemTrace,
+    lattice: np.ndarray,
+    rounds: Optional[int] = None,
+    backend: str = "auto",
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Whole-lattice counterpart of ``simulate_rounds`` for the batched
+    solver core: per-round split ``[K, R]`` and per-tier agg ``[K, M-1, R]``
+    for every cut row at once (no interval gating — quantile pricing
+    consumes raw per-round latencies, exactly like ``TraceLatency``).
+
+    Bit-exactness: consumes the same ``[K, S]`` stage-work tensor the
+    nominal batched path uses (``core.batched.split_work_tensor``), prices
+    it against the same ``base_rate × round_mult`` products as
+    ``events.round_stage_durations``, and accumulates in canonical chain
+    order — so row k equals ``simulate_rounds(trace, lattice[k])`` to the
+    last bit (pinned in ``tests/test_batched.py``).
+    """
+    from ..core.batched import model_bits_lattice, split_work_tensor, stage_meta
+
+    be = _resolve_backend(backend)
+    R = trace.rounds if rounds is None else min(rounds, trace.rounds)
+    system, profile = trace.system, trace.profile
+    M, N, K = system.M, system.num_clients, lattice.shape[0]
+    works = split_work_tensor(profile, lattice, trace.compression)   # [K, S]
+    lam = model_bits_lattice(profile, lattice, trace.compression)    # [K, M-1]
+    meta = stage_meta(M)
+
+    split = np.zeros((K, R))
+    agg = np.zeros((K, M - 1, R))
+    for r in range(R):
+        state = trace.round_state(r)
+        rates = []
+        for kind, idx in meta:
+            if kind in ("compute_fwd", "compute_bwd"):
+                rates.append(system.compute[idx] * state.compute_mult[idx])
+            elif kind == "uplink":
+                rates.append(system.act_up[idx] * state.link_up_mult[idx])
+            else:
+                rates.append(system.act_down[idx] * state.link_down_mult[idx])
+        avail = state.available
+        if not avail.any():
+            pass  # a round with zero participants has split 0 (events.py)
+        elif be == "jax":
+            with enable_x64():
+                t = jnp.zeros((K, N))
+                for s, rt in enumerate(rates):
+                    t = t + jnp.asarray(works[:, s])[:, None] / jnp.asarray(rt)[None, :]
+                masked = jnp.where(jnp.asarray(avail), t, -jnp.inf)
+                split[:, r] = np.asarray(jnp.max(masked, axis=1))
+        else:
+            t = np.zeros((K, N))
+            for s, rt in enumerate(rates):
+                t = t + works[:, s][:, None] / rt[None, :]
+            split[:, r] = t[:, avail].max(axis=1)
+        for m in range(M - 1):
+            if system.entities[m] <= 1:
+                continue
+            up_rate = system.model_up[m] * state.fed_up_mult[m]
+            down_rate = system.model_down[m] * state.fed_down_mult[m]
+            up = lam[:, m][:, None] / up_rate[None, :]
+            down = lam[:, m][:, None] / down_rate[None, :]
+            if up.shape[1] == N:  # clients host tier m: absent ones don't sync
+                up, down = up[:, avail], down[:, avail]
+                if up.shape[1] == 0:
+                    continue
+            agg[:, m, r] = up.max(axis=1) + down.max(axis=1)
+    return split, agg
+
+
 def simulate_rounds(
     trace: SystemTrace,
     cuts: Sequence[int],

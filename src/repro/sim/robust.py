@@ -18,12 +18,12 @@ re-prices the trace over that same wire — declare both in one
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..core.problem import HsflProblem
-from .fleet import simulate_rounds
+from .fleet import simulate_lattice_rounds, simulate_rounds
 from .scenarios import SystemTrace
 
 
@@ -33,6 +33,13 @@ class TraceLatency:
     Per-round latencies are simulated once per cut vector through the
     vectorized fleet path and cached — the BCD/Dinkelbach solvers revisit
     the same lattice points many times.
+
+    The batched solver core (``core.batched.BatchedEvaluator``) consumes
+    the ``split_T_batch``/``agg_T_batch`` lattice methods instead: one
+    ``[K, N]``-per-round sweep prices every cut vector at once, and
+    ``np.quantile`` along the rounds axis is bit-identical to the scalar
+    per-cut quantile — so robust solves return the same optima on every
+    backend (DESIGN.md §11).
     """
 
     def __init__(
@@ -47,6 +54,9 @@ class TraceLatency:
         self.rounds = trace.rounds if rounds is None else min(rounds, trace.rounds)
         self.backend = backend
         self._cache: Dict[Tuple[int, ...], Tuple[np.ndarray, np.ndarray]] = {}
+        self._lattice_cache: Optional[
+            Tuple[bytes, Tuple[np.ndarray, np.ndarray]]
+        ] = None
 
     def per_round(self, cuts: Sequence[int]) -> Tuple[np.ndarray, np.ndarray]:
         """(split [R], agg [M-1, R]) for this cut vector, cached."""
@@ -59,6 +69,21 @@ class TraceLatency:
             hit = self._cache[key] = (res.split, res.agg)
         return hit
 
+    def per_round_lattice(
+        self, lattice: np.ndarray
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """(split [K, R], agg [K, M-1, R]) for a whole cut lattice, cached
+        (BCD builds one evaluator per problem but may rebuild after
+        ``with_compression``; the trace sweep is the expensive part)."""
+        key = lattice.tobytes()
+        if self._lattice_cache is not None and self._lattice_cache[0] == key:
+            return self._lattice_cache[1]
+        res = simulate_lattice_rounds(
+            self.trace, lattice, rounds=self.rounds, backend=self.backend
+        )
+        self._lattice_cache = (key, res)
+        return res
+
     # ------------------------------------------------------------------ #
     # LatencyModel protocol
     # ------------------------------------------------------------------ #
@@ -69,6 +94,19 @@ class TraceLatency:
     def agg_T(self, cuts: Sequence[int], m: int) -> float:
         _, agg = self.per_round(cuts)
         return float(np.quantile(agg[m], self.quantile))
+
+    # ------------------------------------------------------------------ #
+    # batched lattice protocol (consumed by core.batched.BatchedEvaluator)
+    # ------------------------------------------------------------------ #
+    def split_T_batch(self, lattice: np.ndarray) -> np.ndarray:
+        """[K] q-quantile T_S per lattice row (== ``split_T`` per row)."""
+        split, _ = self.per_round_lattice(lattice)
+        return np.quantile(split, self.quantile, axis=1)
+
+    def agg_T_batch(self, lattice: np.ndarray) -> np.ndarray:
+        """[K, M-1] q-quantile T_{m,A} per row (== ``agg_T`` per row)."""
+        _, agg = self.per_round_lattice(lattice)
+        return np.quantile(agg, self.quantile, axis=2)
 
 
 def robust_problem(

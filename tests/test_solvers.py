@@ -85,3 +85,17 @@ def test_infeasible_eps_raises():
     prob = make_problem(0, eps_scale=0.0)  # eps below the bound floor
     with pytest.raises(ValueError):
         solve_ms(prob, [1, 1, 1])
+
+
+def test_cubic_bracket_expansion_capped():
+    """Degenerate Ξ coefficients used to hang the bisection bracket loop
+    (``while f(hi) < 0: hi *= 2.0`` never terminates when Ξ(I) ≡ −kc);
+    the cap must turn that into a clear error instead."""
+    from repro.core.ma_solver import _cubic_positive_root
+
+    # ka = kb = 0, kc > 0: Ξ(I) = −kc < 0 for every I — no positive root,
+    # and np.roots on the degenerate polynomial finds nothing either
+    with pytest.raises(ValueError, match="bracket expansion"):
+        _cubic_positive_root(0.0, 0.0, 1.0)
+    # tiny-but-valid coefficients still resolve through the fallback
+    assert _cubic_positive_root(2.0, 3.0, 5.0) == pytest.approx(1.0)
