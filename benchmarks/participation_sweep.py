@@ -1,0 +1,150 @@
+"""Participation sweep: the straggler deadline priced end-to-end (DESIGN.md §12).
+
+Three asserted claims, not just tables:
+
+1. **Crossover sweep** — on the paper preset under the straggler-tail
+   fleet, tightening the deadline (target rate 1.0 → 0.5) weakly lowers
+   the BCD optimum's expected round time (rounds stop waiting for the
+   tail) while the 1/q-inflated Theorem-1 bound weakly raises
+   rounds-to-ε — the round-time vs rounds-to-ε trade the solvers
+   navigate.  At the P50 deadline the expected round time sits strictly
+   below the full-participation round time and the inflated bound still
+   certifies convergence (finite R).
+2. **Full-participation identity** — target rate 1.0 estimates q ≡ 1
+   exactly, and the q≡1-inflated bound equals the plain bound bit-for-bit
+   (partial participation is a strict generalization).
+3. **Masked training** — a real (tiny-VGG) Engine-A run with
+   deadline-driven masks sampled from the fleet trace: participation lands
+   strictly inside (0, 1), the loss still trains, and the run is
+   reproducible (same spec → same losses).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import emit, record
+
+
+# --------------------------------------------------------------------------- #
+# 1. deadline sweep through the BCD solver
+# --------------------------------------------------------------------------- #
+
+
+def crossover_sweep(quick: bool, seed: int) -> list:
+    from repro.api import ParticipationCfg, ScenarioCfg, build, paper_spec, run
+
+    rates = (1.0, 0.75, 0.5) if quick else (1.0, 0.9, 0.75, 0.6, 0.5)
+    rounds = 16 if quick else 48
+    base = paper_spec(seed=seed).replace(
+        scenario=ScenarioCfg(name="straggler-tail", rounds=rounds, seed=seed)
+    )
+    results = []
+    for rate in rates:
+        spec = base.replace(
+            name=f"participation-q{rate}",
+            participation=ParticipationCfg(target_rate=rate),
+        )
+        built = build(spec)
+        res = record(run(spec, built=built))
+        results.append((rate, built.participation, res))
+    rows = [
+        (rate, f"{p.deadline:.4g}", f"{p.q[0]:.3f}", str(res.cuts),
+         str(tuple(res.intervals)), res.latency["split_T"],
+         res.rounds_to_eps, res.total_latency)
+        for rate, p, res in results
+    ]
+    emit(rows, ("target_rate", "deadline_s", "q1", "cuts", "intervals",
+                "expected_round_T", "rounds_to_eps", "converged_T"))
+
+    split = [res.latency["split_T"] for _, _, res in results]
+    R = [res.rounds_to_eps for _, _, res in results]
+    # the inflated bound must still certify convergence at every deadline
+    assert all(r is not None and np.isfinite(r) for r in R), R
+    # tighter deadline -> weakly cheaper expected rounds, weakly more of them
+    assert all(a >= b - 1e-12 for a, b in zip(split, split[1:])), split
+    assert all(a <= b * (1 + 1e-12) for a, b in zip(R, R[1:])), R
+    # acceptance pin: at the P50 deadline, expected round time strictly
+    # below the full-participation (rate 1.0) round time
+    assert split[-1] < split[0], (split[-1], split[0])
+    return rows
+
+
+# --------------------------------------------------------------------------- #
+# 2. full participation is the exact q ≡ 1 special case
+# --------------------------------------------------------------------------- #
+
+
+def full_participation_identity(quick: bool, seed: int) -> list:
+    from repro.api import ParticipationCfg, ScenarioCfg, build, paper_spec
+    from repro.core.convergence import theorem1_bound
+
+    rounds = 16 if quick else 48
+    spec = paper_spec(seed=seed).replace(
+        scenario=ScenarioCfg(name="straggler-tail", rounds=rounds, seed=seed),
+        participation=ParticipationCfg(target_rate=1.0),
+    )
+    built = build(spec)
+    q = built.participation.q
+    assert q == (1.0,) * built.system.M, q  # everyone makes the global-max barrier
+    cuts, intervals = (3, 8), (2, 3, 1)
+    plain = theorem1_bound(built.hyper, 100, intervals, cuts)
+    inflated = theorem1_bound(
+        built.hyper, 100, intervals, cuts, participation=built.participation
+    )
+    rows = [("q==1 bound == plain bound", plain, inflated, plain == inflated)]
+    emit(rows, ("identity", "plain", "q1_inflated", "bit_equal"))
+    assert plain == inflated, (plain, inflated)
+    return rows
+
+
+# --------------------------------------------------------------------------- #
+# 3. real masked training off the sampled fleet masks
+# --------------------------------------------------------------------------- #
+
+
+def masked_training(quick: bool, seed: int) -> list:
+    from repro.api import (
+        ModelCfg, ParticipationCfg, RunCfg, ScenarioCfg, SolverCfg,
+        paper_spec, run,
+    )
+
+    rounds = 4 if quick else 16
+    spec = paper_spec(seed=seed).replace(
+        name="participation-train",
+        model=ModelCfg(arch="vgg16-cifar10", batch=4),
+        scenario=ScenarioCfg(name="straggler-tail", rounds=32, seed=seed),
+        participation=ParticipationCfg(target_rate=0.5),
+        solver=SolverCfg(kind="fixed", cuts=(2, 4), intervals=(2, 2, 1)),
+        run=RunCfg(mode="train", seed=seed, rounds=rounds, lr=0.05,
+                   dataset_size=128),
+    )
+    res = record(run(spec))
+    res2 = run(spec)
+    rate = res.train["mean_participation"]
+    rows = [(res.train["engine"], rounds, f"{rate:.3f}",
+             res.train["first_loss"], res.train["final_loss"],
+             res.train["losses"] == res2.train["losses"])]
+    emit(rows, ("engine", "rounds", "mean_participation", "first_loss",
+                "final_loss", "reproducible"))
+    assert 0.0 < rate < 1.0, rate  # the deadline actually drops stragglers
+    assert np.isfinite(res.train["final_loss"]), res.train
+    assert res.train["losses"] == res2.train["losses"]
+    return rows
+
+
+def main(quick: bool = False, seed: int = 0) -> list:
+    out = []
+    out += crossover_sweep(quick, seed)
+    out += full_participation_identity(quick, seed)
+    out += masked_training(quick, seed)
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    main(args.quick, seed=args.seed)

@@ -24,6 +24,8 @@ Harness -> paper artifact map (details in DESIGN.md §7):
                                      oracle walk (bit-exact optima, >=20x headline)
     compress_sweep        (ours)     compression ratio/omega priced through BCD,
                                      Thm 1 + the fused q8 kernel oracle
+    participation_sweep   (ours)     straggler deadline: round-time vs
+                                     rounds-to-eps crossover + masked training
     ablations             Figs. 8-9  MA / MS ablations (+ real training)
     bound_check           Thm 1      empirical gradient norms vs the bound
     roofline              §g         three-term roofline per (arch x shape)
@@ -38,7 +40,8 @@ import time
 def _registry(args):
     from . import (
         ablations, bound_check, compress_sweep, fig2_latency_vs_cut,
-        fig45_benchmarks, fig67_resources, roofline, sim_scale, solver_scale,
+        fig45_benchmarks, fig67_resources, participation_sweep, roofline,
+        sim_scale, solver_scale,
     )
 
     return [
@@ -60,6 +63,9 @@ def _registry(args):
         # runs a (tiny) real compressed training round for the omega bound
         ("compress_sweep", "training",
          lambda: compress_sweep.main(args.quick, seed=args.seed)),
+        # runs a (tiny) real masked training run off the sampled fleet masks
+        ("participation_sweep", "training",
+         lambda: participation_sweep.main(args.quick, seed=args.seed)),
         ("roofline", "extracted", lambda: _roofline(roofline)),
     ]
 

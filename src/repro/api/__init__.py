@@ -10,6 +10,7 @@ from .spec import (
     ExperimentSpec,
     HyperCfg,
     ModelCfg,
+    ParticipationCfg,
     RunCfg,
     ScenarioCfg,
     SolverCfg,
@@ -33,6 +34,7 @@ from .presets import (
     compressed_spec,
     get_experiment,
     paper_spec,
+    participation_spec,
     quickstart_spec,
     register_experiment,
     robust_spec,

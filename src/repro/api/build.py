@@ -21,7 +21,12 @@ from dataclasses import dataclass
 from typing import Optional, Tuple
 
 from ..compress.base import CompressionSpec
-from ..core.convergence import HyperSpec, synthetic_hyperspec, theorem1_bound
+from ..core.convergence import (
+    HyperSpec,
+    ParticipationSpec,
+    synthetic_hyperspec,
+    theorem1_bound,
+)
 from ..core.latency import LayerProfile, SystemSpec, build_profile
 from ..core.problem import HsflProblem
 from .registry import resolve_codec, resolve_model, resolve_system
@@ -48,6 +53,7 @@ class BuiltExperiment:
     trace: Optional[object]                 # sim.SystemTrace
     base_problem: HsflProblem
     problem: HsflProblem
+    participation: Optional[ParticipationSpec] = None  # resolved q_m/deadline
 
 
 def resolve_compression(
@@ -105,9 +111,12 @@ def build(spec: ExperimentSpec) -> BuiltExperiment:
         eps = float(h.eps)
     else:
         # the I=1 floor at R→∞ is cut-independent (no I_m>1 drift term),
-        # so any valid cut vector prices it; use evenly spread cuts.
-        U, M = model_spec.n_units, system.M
-        cuts = tuple(max(1, (m + 1) * U // M) for m in range(M - 1))
+        # so any valid cut vector prices it; use the shared evenly-spread
+        # anchor (also BCD's starting point and the q_m reference cut).
+        from ..core.bcd import default_init_cuts
+
+        M = system.M
+        cuts = default_init_cuts(model_spec.n_units, M)
         floor = theorem1_bound(hyper, 10**9, [1] * M, cuts)
         eps = h.eps_scale * floor
 
@@ -121,23 +130,46 @@ def build(spec: ExperimentSpec) -> BuiltExperiment:
 
     trace = None
     problem = base
+    participation = None
     if spec.scenario is not None:
-        from ..sim import make_trace, robust_problem
+        from ..sim import make_trace, participation_problem, robust_problem
 
         sc = spec.scenario
         trace = make_trace(
             sc.name, profile, system, rounds=sc.rounds, seed=sc.seed, **sc.params
         )
-        # robust_problem re-prices the (uncompressed) trace over the
-        # problem's wire, keeping quantiles and ω on the same codec.
-        problem = robust_problem(
-            base,
-            trace,
-            quantile=sc.quantile,
-            rounds=sc.sim_rounds,
-            backend=sc.backend,
-        )
+        if spec.participation is not None:
+            # deadline policy: expectation pricing of the deadline-capped
+            # round + 1/q_m bound inflation, composed in one step so the
+            # latency and convergence sides describe the same barrier.
+            pc = spec.participation
+            problem = participation_problem(
+                base,
+                trace,
+                deadline=pc.deadline,
+                target_rate=pc.target_rate,
+                cuts=pc.cuts,
+                rounds=sc.sim_rounds,
+                backend=sc.backend,
+            )
+            participation = problem.participation
+        else:
+            # robust_problem re-prices the (uncompressed) trace over the
+            # problem's wire, keeping quantiles and ω on the same codec.
+            problem = robust_problem(
+                base,
+                trace,
+                quantile=sc.quantile,
+                rounds=sc.sim_rounds,
+                backend=sc.backend,
+            )
         trace = problem.latency_model.trace  # the (possibly re-priced) wire
+    elif spec.participation is not None:
+        raise ValueError(
+            "a participation section needs a scenario section: the deadline "
+            "policy is priced against a fleet trace (add scenario=, e.g. "
+            'ScenarioCfg(name="straggler-tail"))'
+        )
 
     return BuiltExperiment(
         spec=spec,
@@ -151,4 +183,5 @@ def build(spec: ExperimentSpec) -> BuiltExperiment:
         trace=trace,
         base_problem=base,
         problem=problem,
+        participation=participation,
     )

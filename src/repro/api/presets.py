@@ -13,6 +13,7 @@ from .spec import (
     ExperimentSpec,
     HyperCfg,
     ModelCfg,
+    ParticipationCfg,
     RunCfg,
     ScenarioCfg,
     SolverCfg,
@@ -105,6 +106,25 @@ def robust_spec(
     )
 
 
+def participation_spec(
+    scenario: str = "straggler-tail",
+    target_rate: float = 0.75,
+    seed: int = 0,
+    eps_scale: float = 6.0,
+    rounds: int = 64,
+) -> ExperimentSpec:
+    """Paper problem under a straggler deadline (DESIGN.md §12): the round
+    barrier sits at the scenario's pooled ``target_rate`` finish-time
+    quantile, latency terms become deadline-capped trace expectations, and
+    the bound inflates by the estimated 1/q_m."""
+    base = paper_spec(seed=seed, eps_scale=eps_scale)
+    return base.replace(
+        name=f"participation-{scenario}",
+        scenario=ScenarioCfg(name=scenario, rounds=rounds, seed=seed),
+        participation=ParticipationCfg(target_rate=target_rate),
+    )
+
+
 def quickstart_spec(seed: int = 0, rounds: int = 30) -> ExperimentSpec:
     """The README quickstart: reduced smollm trained across 8→4→1 tiers."""
     return ExperimentSpec(
@@ -144,6 +164,7 @@ EXPERIMENTS: Dict[str, Callable[[], ExperimentSpec]] = {
     "tpu-pod": tpu_pod_spec,
     "quickstart": quickstart_spec,
     "robust-straggler-tail": lambda: robust_spec("straggler-tail"),
+    "participation-straggler-tail": lambda: participation_spec("straggler-tail"),
     "compressed-int8": lambda: compressed_spec("int8"),
 }
 

@@ -59,14 +59,26 @@ def _schedule(built: BuiltExperiment) -> Tuple[Tuple[int, ...], Tuple[int, ...]]
 
 def _latency_breakdown(built: BuiltExperiment, cuts, intervals) -> Dict[str, Any]:
     p = built.problem
-    return {
+    if built.spec.scenario is None:
+        pricing = "nominal"
+    elif built.participation is not None:
+        pricing = (
+            f"{built.spec.scenario.name}"
+            f"@deadline{built.participation.deadline:.4g}s"
+        )
+    else:
+        pricing = f"{built.spec.scenario.name}@q{built.spec.scenario.quantile}"
+    out = {
         "split_T": float(p.split_T(cuts)),
         "agg_T": [float(t) for t in p.agg_T(cuts)],
-        "pricing": (
-            "nominal" if built.spec.scenario is None
-            else f"{built.spec.scenario.name}@q{built.spec.scenario.quantile}"
-        ),
+        "pricing": pricing,
     }
+    if built.participation is not None:
+        out["participation"] = {
+            "deadline": built.participation.deadline,
+            "q_tier": [float(v) for v in built.participation.q],
+        }
+    return out
 
 
 def _simulate(built: BuiltExperiment, cuts, intervals) -> Dict[str, Any]:
@@ -77,7 +89,7 @@ def _simulate(built: BuiltExperiment, cuts, intervals) -> Dict[str, Any]:
         built.trace, cuts, intervals=intervals, backend=sc.backend
     )
     p50, p95, worst = np.quantile(res.total, [0.5, 0.95, 1.0])
-    return {
+    out = {
         "scenario": sc.name,
         "rounds": int(res.total.shape[0]),
         "split_p50": float(np.quantile(res.split, 0.5)),
@@ -87,6 +99,20 @@ def _simulate(built: BuiltExperiment, cuts, intervals) -> Dict[str, Any]:
         "total_worst": float(worst),
         "mean_participants": float(np.mean(res.participants)),
     }
+    if built.participation is not None:
+        from ..sim import participation_masks
+
+        pr = participation_masks(
+            built.trace, cuts, built.participation.deadline
+        )
+        out["participation"] = {
+            "deadline": built.participation.deadline,
+            "mean_rate": float(np.mean(pr.rates)),
+            "q_tier": [float(v) for v in pr.q_tier],
+            "expected_round_time": float(np.mean(pr.round_time)),
+            "full_round_time": float(np.mean(res.split)),
+        }
+    return out
 
 
 def _train(built: BuiltExperiment, cuts, intervals) -> Dict[str, Any]:
@@ -153,30 +179,55 @@ def _train(built: BuiltExperiment, cuts, intervals) -> Dict[str, Any]:
     opt = {"sgd": sgd, "momentum": momentum, "adam": adam}[spec.model.optimizer](rc.lr)
     key = jax.random.PRNGKey(rc.seed)
 
+    masks = None
+    if built.participation is not None:
+        # deadline-driven per-round client masks sampled from the fleet
+        # trace at the schedule actually trained (DESIGN.md §12); the
+        # trace replays cyclically past its horizon.
+        from ..sim import participation_masks
+
+        masks = participation_masks(
+            built.trace, cuts, built.participation.deadline
+        ).masks
+
+    with_mask = masks is not None
     if rc.engine == "a":
         state = init_state_a(model, plan, opt, key)
         step = jax.jit(
-            build_train_step_a(model, plan, opt, compressor=built.compressor)
+            build_train_step_a(
+                model, plan, opt, compressor=built.compressor,
+                with_mask=with_mask,
+            )
         )
     else:
         state = init_state_b(model, plan, opt, key)
         step = jax.jit(
-            build_train_step_b(model, plan, opt, compressor=built.compressor)
+            build_train_step_b(
+                model, plan, opt, compressor=built.compressor,
+                with_mask=with_mask,
+            )
         )
 
     losses = []
     for r in range(rc.rounds):
         batch = {k: jnp.asarray(v) for k, v in loader.next_round().items()}
-        state, loss = step(state, batch)
+        if with_mask:
+            mk = jnp.asarray(
+                masks[r % masks.shape[0]], dtype=jnp.float32
+            )
+            state, loss = step(state, batch, mk)
+        else:
+            state, loss = step(state, batch)
         losses.append(float(loss))
         if rc.log_every and ((r + 1) % rc.log_every == 0 or r == 0):
             print(f"round {r+1:5d}  loss {losses[-1]:.4f}")
 
     omega = 0.0 if built.compression is None else built.compression.omega
     bound = theorem1_bound(
-        built.hyper, max(1, rc.rounds), intervals, cuts, omega=omega
+        built.hyper, max(1, rc.rounds), intervals, cuts, omega=omega,
+        participation=built.participation,
     )
-    return {
+    out = {
         "engine": rc.engine,
         "rounds": rc.rounds,
         "first_loss": losses[0] if losses else None,
@@ -184,6 +235,12 @@ def _train(built: BuiltExperiment, cuts, intervals) -> Dict[str, Any]:
         "losses": losses,
         "thm1_bound": float(bound),
     }
+    if with_mask:
+        out["mean_participation"] = float(
+            np.mean(masks[np.arange(rc.rounds) % masks.shape[0]])
+        )
+        out["deadline"] = built.participation.deadline
+    return out
 
 
 def evaluate_schedule(

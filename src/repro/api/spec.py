@@ -150,6 +150,45 @@ class ScenarioCfg:
 
 
 @dataclass(frozen=True)
+class ParticipationCfg:
+    """Straggler-aware partial participation policy (DESIGN.md §12).
+
+    Exactly one of ``deadline`` (the round barrier in seconds) or
+    ``target_rate`` (the pooled per-client finish-time quantile the
+    barrier should sit at, e.g. 0.5 = drop the slower half of
+    client-rounds) must be set.  Requires a ``scenario`` section — the
+    policy is priced against that fleet trace: latency terms become
+    deadline-capped trace expectations and the Theorem-1 terms inflate by
+    the estimated 1/q_m.  ``cuts`` optionally pins the reference cut
+    vector the q_m estimation replays (default: evenly spread, the BCD
+    starting anchor).
+    """
+
+    deadline: Optional[float] = None
+    target_rate: Optional[float] = None
+    cuts: Optional[Tuple[int, ...]] = None
+
+    def __post_init__(self):
+        if (self.deadline is None) == (self.target_rate is None):
+            raise ValueError(
+                "participation needs exactly one of deadline= or "
+                f"target_rate= (got deadline={self.deadline!r}, "
+                f"target_rate={self.target_rate!r})"
+            )
+        if self.deadline is not None and self.deadline <= 0:
+            raise ValueError(f"deadline must be positive: {self.deadline}")
+        if self.target_rate is not None and not (0.0 < self.target_rate <= 1.0):
+            raise ValueError(
+                f"target_rate must lie in (0, 1]: {self.target_rate}"
+            )
+        object.__setattr__(self, "cuts", _int_tuple(self.cuts))
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ParticipationCfg":
+        return cls(**d)
+
+
+@dataclass(frozen=True)
 class CompressionCfg:
     """Which wire codec to train with and how the analytic layer prices it.
 
@@ -259,6 +298,7 @@ class ExperimentSpec:
     run: RunCfg = field(default_factory=RunCfg)
     scenario: Optional[ScenarioCfg] = None
     compression: Optional[CompressionCfg] = None
+    participation: Optional[ParticipationCfg] = None
     name: str = ""
 
     def to_dict(self) -> Dict[str, Any]:
@@ -269,6 +309,7 @@ class ExperimentSpec:
     def from_dict(cls, d: Mapping[str, Any]) -> "ExperimentSpec":
         scenario = d.get("scenario")
         compression = d.get("compression")
+        participation = d.get("participation")
         return cls(
             model=ModelCfg.from_dict(d.get("model", {})),
             system=SystemCfg.from_dict(d.get("system", {})),
@@ -279,6 +320,10 @@ class ExperimentSpec:
             compression=(
                 None if compression is None
                 else CompressionCfg.from_dict(compression)
+            ),
+            participation=(
+                None if participation is None
+                else ParticipationCfg.from_dict(participation)
             ),
             name=d.get("name", ""),
         )

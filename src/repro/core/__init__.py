@@ -1,7 +1,13 @@
 # The paper's primary contribution: the HSFL framework (engines), its
 # convergence theory (Theorem 1 / Corollary 1), and the MA+MS system
 # optimizer (Proposition 1, Dinkelbach, Algorithm 2 BCD).
-from .convergence import HyperSpec, corollary1_rounds, synthetic_hyperspec, theorem1_bound
+from .convergence import (
+    HyperSpec,
+    ParticipationSpec,
+    corollary1_rounds,
+    synthetic_hyperspec,
+    theorem1_bound,
+)
 from .latency import LayerProfile, SystemSpec, build_profile, total_latency
 from .problem import HsflProblem
 from .batched import BatchedEvaluator, cut_lattice

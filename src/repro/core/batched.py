@@ -350,11 +350,15 @@ class BatchedEvaluator:
         self.lattice = lattice
         self.mem_ok = memory_mask(problem.profile, problem.system, lattice)
         lm = problem.latency_model
+        pp = problem.participation
         if lm is None:
             self.split = nominal_split_table(
                 problem.profile, problem.system, lattice,
                 problem.compression, self.backend,
             )
+            if pp is not None and pp.deadline is not None:
+                # nominal deadline barrier — same min as the scalar split_T
+                self.split = np.minimum(self.split, pp.deadline)
             self.agg = nominal_agg_table(
                 problem.profile, problem.system, lattice,
                 problem.compression, self.backend,
@@ -369,6 +373,10 @@ class BatchedEvaluator:
                 [[lm.agg_T(r, m) for m in range(M - 1)] for r in rows]
             )
         self.d = tier_d_lattice(problem.hyper.G2, lattice)[:, : M - 1]
+        if pp is not None:
+            # per-tier 1/q_m drift inflation — the same elementwise divide
+            # the scalar problem.tier_d applies, so D stays bit-equal
+            self.d = self.d / problem.q[: M - 1][None, :]
         self.c, self.kappa = problem.constants()
         self.scale = 2.0 * problem.hyper.theta0 / problem.hyper.gamma
 

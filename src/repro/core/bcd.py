@@ -10,6 +10,14 @@ to the problem via ``HsflProblem.with_compression``) and both block solvers
 re-optimize (I, μ) against the compressed wire — cheaper model bytes pull
 the optimal cut deeper and the optimal intervals down, which
 ``benchmarks/compress_sweep.py`` sweeps and asserts.
+
+So is partial participation (DESIGN.md §12): a problem composed through
+``repro.sim.participation_problem`` prices T_S as the trace expectation of
+the deadline-capped round and inflates the bound denominator by the
+estimated 1/q_m — the BCD iteration then trades a tighter deadline
+(cheaper expected rounds via ``problem.split_T``/``total_T``) against the
+extra rounds-to-ε the inflated D(I, μ) demands, with no changes below;
+``benchmarks/participation_sweep.py`` sweeps the crossover.
 """
 from __future__ import annotations
 
@@ -20,6 +28,14 @@ from ..compress.base import CompressionSpec
 from .ma_solver import solve_ma
 from .ms_solver import solve_ms
 from .problem import INFEASIBLE, HsflProblem
+
+
+def default_init_cuts(n_units: int, M: int) -> Tuple[int, ...]:
+    """Evenly spread cuts — the feasible starting anchor of ``solve_bcd``,
+    shared with eps-floor pricing (``repro.api.build``) and participation
+    q_m estimation (``repro.sim.participation``) so every consumer anchors
+    at the same reference point."""
+    return tuple(max(1, (m + 1) * n_units // M) for m in range(M - 1))
 
 
 @dataclass(frozen=True)
@@ -50,8 +66,7 @@ def solve_bcd(
         problem = problem.with_compression(compression)
     M, U = problem.M, problem.n_units
     if init_cuts is None:
-        # evenly spread cuts as the feasible starting point
-        init_cuts = tuple(max(1, (m + 1) * U // M) for m in range(M - 1))
+        init_cuts = default_init_cuts(U, M)  # evenly spread starting point
     cuts = tuple(init_cuts)
     intervals = (
         tuple(init_intervals) if init_intervals else tuple([1] * M)

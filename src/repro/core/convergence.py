@@ -7,9 +7,79 @@ tier-sums of G_l² enter the bound.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple, Union
 
 import numpy as np
+
+
+@dataclass(frozen=True)
+class ParticipationSpec:
+    """Analytic view of straggler-aware partial participation (DESIGN.md §12).
+
+    ``q`` holds the per-tier participation rates q_m ∈ (0, 1]: the expected
+    fraction of tier-m entities whose round contribution survives the
+    deadline (tier 1's entities are the clients themselves, so q_1 is the
+    plain client participation rate).  ``deadline`` is the round barrier in
+    seconds that produced those rates (None for a rate-only spec).
+
+    Estimated from a fleet trace by ``repro.sim.participation`` and
+    attached to an ``HsflProblem``; the Theorem-1 terms inflate by 1/q —
+    uniform participant sampling keeps the aggregate unbiased but averages
+    over N·q_1 instead of N gradients (σ² term), and a tier whose syncs
+    only reach a q_m fraction of its entities accumulates 1/q_m more
+    drift between effective aggregations (G² term).  q ≡ 1 recovers the
+    paper's full-participation bound exactly.
+    """
+
+    q: Tuple[float, ...]               # per-tier rates, len M
+    deadline: Optional[float] = None   # seconds (the policy that produced q)
+
+    def __post_init__(self):
+        object.__setattr__(self, "q", tuple(float(v) for v in self.q))
+        if self.deadline is not None:
+            object.__setattr__(self, "deadline", float(self.deadline))
+
+    def validate_for(self, M: int) -> "ParticipationSpec":
+        if len(self.q) != M:
+            raise ValueError(
+                f"ParticipationSpec has {len(self.q)} tier rates for an "
+                f"M={M} system"
+            )
+        for m, v in enumerate(self.q):
+            if not (0.0 < v <= 1.0):
+                raise ValueError(
+                    f"participation rate q_{m+1}={v} outside (0, 1] — a "
+                    "tier that never participates has an unbounded variance "
+                    "inflation (loosen the deadline)"
+                )
+        if self.deadline is not None and self.deadline <= 0:
+            raise ValueError(f"deadline must be positive: {self.deadline}")
+        return self
+
+
+def participation_rates(
+    participation: Union[None, float, Sequence[float], ParticipationSpec],
+    M: int,
+) -> np.ndarray:
+    """Normalize a participation argument to per-tier rates ``[M]``.
+
+    Accepts None (full participation), one scalar rate (uniform across
+    tiers), a per-tier sequence, or a ``ParticipationSpec``.
+    """
+    if participation is None:
+        return np.ones(M)
+    if isinstance(participation, ParticipationSpec):
+        participation.validate_for(M)
+        return np.asarray(participation.q, dtype=np.float64)
+    if isinstance(participation, (int, float)):
+        q = np.full(M, float(participation))
+    else:
+        q = np.asarray([float(v) for v in participation], dtype=np.float64)
+        if len(q) != M:
+            raise ValueError(f"need {M} per-tier rates, got {len(q)}")
+    if np.any(q <= 0) or np.any(q > 1):
+        raise ValueError(f"participation rates must lie in (0, 1]: {q}")
+    return q
 
 
 @dataclass(frozen=True)
@@ -48,6 +118,7 @@ def theorem1_bound(
     intervals: Sequence[int],
     cuts: Sequence[int],
     omega: float = 0.0,
+    participation: Union[None, float, Sequence[float], ParticipationSpec] = None,
 ) -> float:
     """RHS of Eq. (8): bound on (1/R) Σ_t E||∇f||².
 
@@ -56,13 +127,23 @@ def theorem1_bound(
     E‖C(g) − g‖² ≤ ω‖g‖² inflates the stochastic-gradient variance term
     to (1 + ω)σ², leaving the drift term untouched.  ω = 0 recovers the
     paper's full-precision bound exactly.
+
+    ``participation`` (per-tier rates q_m, a scalar rate, or a
+    ``ParticipationSpec`` — DESIGN.md §12) inflates the variance term by
+    1/q_1 (the round averages over N·q_1 client gradients) and every
+    tier's drift term by 1/q_m (syncs only land on the participating
+    fraction of entities).  None recovers full participation exactly.
     """
     g, b = hp.gamma, hp.beta
+    M = len(intervals)
+    q = participation_rates(participation, M)
     d = tier_G2_sums(hp.G2, cuts)
     term1 = 2.0 * hp.theta0 / (g * R)
-    term2 = b * g * (1.0 + omega) * hp.sigma2_sum / hp.num_clients
+    term2 = b * g * (1.0 + omega) * hp.sigma2_sum / (hp.num_clients * q[0])
     term3 = 4.0 * b**2 * g**2 * sum(
-        (I**2) * dm for I, dm in zip(intervals[:-1], d[:-1]) if I > 1
+        (I**2) * (dm / qm)
+        for I, dm, qm in zip(intervals[:-1], d[:-1], q[:-1])
+        if I > 1
     )
     return term1 + term2 + term3
 
@@ -73,13 +154,18 @@ def corollary1_rounds(
     intervals: Sequence[int],
     cuts: Sequence[int],
     omega: float = 0.0,
+    participation: Union[None, float, Sequence[float], ParticipationSpec] = None,
 ) -> Optional[float]:
     """Eq. (10): rounds to reach target ε; None if the schedule cannot reach ε."""
     g, b = hp.gamma, hp.beta
+    M = len(intervals)
+    q = participation_rates(participation, M)
     d = tier_G2_sums(hp.G2, cuts)
-    denom = eps - b * g * (1.0 + omega) * hp.sigma2_sum / hp.num_clients
+    denom = eps - b * g * (1.0 + omega) * hp.sigma2_sum / (hp.num_clients * q[0])
     denom -= 4.0 * b**2 * g**2 * sum(
-        (I**2) * dm for I, dm in zip(intervals[:-1], d[:-1]) if I > 1
+        (I**2) * (dm / qm)
+        for I, dm, qm in zip(intervals[:-1], d[:-1], q[:-1])
+        if I > 1
     )
     if denom <= 0:
         return None
@@ -87,14 +173,20 @@ def corollary1_rounds(
 
 
 def bound_constants(
-    hp: HyperSpec, eps: float, omega: float = 0.0
+    hp: HyperSpec, eps: float, omega: float = 0.0, q1: float = 1.0
 ) -> Tuple[float, float]:
     """(c, kappa) with denominator = c - kappa * Σ 1{I>1} I² d_m  (Eq. 22/24).
 
     ω shrinks c (the ε headroom left after the (1+ω)-inflated variance
-    term), which is how compression noise reaches the MA/MS solvers.
+    term), which is how compression noise reaches the MA/MS solvers;
+    ``q1`` < 1 (the client participation rate, DESIGN.md §12) shrinks it
+    further — a round only averages N·q_1 stochastic gradients.  The
+    per-tier drift inflation 1/q_m enters through ``HsflProblem.tier_d``
+    instead (it scales d_m, not the shared κ).
     """
-    c = eps - hp.beta * hp.gamma * (1.0 + omega) * hp.sigma2_sum / hp.num_clients
+    c = eps - hp.beta * hp.gamma * (1.0 + omega) * hp.sigma2_sum / (
+        hp.num_clients * q1
+    )
     kappa = 4.0 * hp.beta**2 * hp.gamma**2
     return c, kappa
 

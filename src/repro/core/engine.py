@@ -72,10 +72,34 @@ def init_state_a(model, plan: TierPlan, opt: Optimizer, key) -> TrainState:
     return TrainState(params=params, opt_state=opt.init(params), step=jnp.zeros((), jnp.int32))
 
 
+def _masked_select(new, old, w: jax.Array):
+    """Per-client select: participants take the updated leaf, absentees keep
+    the old one.  Only client-stacked leaves (leading axis N) are masked;
+    scalar bookkeeping leaves (e.g. adam's step counter) pass through."""
+
+    def f(n, o):
+        if n.ndim == 0 or n.shape[0] != w.shape[0]:
+            return n
+        return jnp.where(
+            w.reshape((-1,) + (1,) * (n.ndim - 1)) > 0.0, n, o
+        )
+
+    return jax.tree.map(f, new, old)
+
+
+def masked_mean_loss(losses: jax.Array, w: jax.Array) -> jax.Array:
+    """Participation-weighted round loss Σ w_i·loss_i / Σ w_i (0.0 for a
+    zero-participant round — the round is a no-op, DESIGN.md §12)."""
+    total = jnp.sum(w)
+    return jnp.where(
+        total > 0.0, jnp.sum(losses * w) / jnp.maximum(total, 1.0), 0.0
+    )
+
+
 def build_train_step_a(
     model, plan: TierPlan, opt: Optimizer, *, sync_opt_state: bool = False,
-    fed_round=None, compressor=None,
-) -> Callable[[TrainState, Params], Tuple[TrainState, jax.Array]]:
+    fed_round=None, compressor=None, with_mask: bool = False,
+) -> Callable[..., Tuple[TrainState, jax.Array]]:
     """Engine-A step: vmapped per-client update + hierarchical aggregation.
 
     batch leaves have a leading client axis [N, b, ...].
@@ -98,20 +122,35 @@ def build_train_step_a(
     (1+ω) variance reading is exact only for the keyed stochastic mode,
     so empirical bound checks over this path are conservative heuristics
     (see ``benchmarks/compress_sweep.py``).
+
+    ``with_mask=True`` returns ``step(state, batch, mask)`` instead: the
+    [N] participation mask (1 = the client made the round's deadline)
+    restricts the local update to participants — absentees keep their
+    params and optimizer moments untouched — and every aggregation level
+    averages participants only (``tiers.synchronize`` mask semantics,
+    DESIGN.md §12).  The reported loss is the participation-weighted mean.
+    An all-ones mask is bit-identical to the unmasked step.
     """
     compress_fn = (
         None if compressor is None
         else lambda x: jax.vmap(lambda v: compressor.transform(v))(x)
     )
 
-    def step_fn(state: TrainState, batch: Params) -> Tuple[TrainState, jax.Array]:
+    def _step(state: TrainState, batch: Params, mask) -> Tuple[TrainState, jax.Array]:
         losses, grads = jax.vmap(jax.value_and_grad(model.loss_fn))(
             state.params, batch
         )
         new_params, new_opt = opt.update(state.params, grads, state.opt_state)
+        if mask is None:
+            loss = jnp.mean(losses)
+        else:
+            w = mask.astype(jnp.float32)
+            new_params = _masked_select(new_params, state.params, w)
+            new_opt = _masked_select(new_opt, state.opt_state, w)
+            loss = masked_mean_loss(losses, w)
         new_params = synchronize(
             new_params, plan, state.step, fed_round=fed_round,
-            compress_fn=compress_fn,
+            compress_fn=compress_fn, mask=mask,
         )
         if sync_opt_state and jax.tree.leaves(new_opt):
             new_opt = jax.tree.map(
@@ -120,21 +159,22 @@ def build_train_step_a(
             # momentum/adam moments are client-stacked like params: apply the
             # same schedule so replicas stay consistent after aggregation.
             if opt.name == "momentum":
-                new_opt = synchronize(new_opt, plan, state.step, fed_round=fed_round)
+                new_opt = synchronize(
+                    new_opt, plan, state.step, fed_round=fed_round, mask=mask
+                )
             elif opt.name == "adam":
                 new_opt = dict(new_opt)
                 new_opt["m"] = synchronize(
-                    new_opt["m"], plan, state.step, fed_round=fed_round
+                    new_opt["m"], plan, state.step, fed_round=fed_round, mask=mask
                 )
                 new_opt["v"] = synchronize(
-                    new_opt["v"], plan, state.step, fed_round=fed_round
+                    new_opt["v"], plan, state.step, fed_round=fed_round, mask=mask
                 )
-        return (
-            TrainState(new_params, new_opt, state.step + 1),
-            jnp.mean(losses),
-        )
+        return TrainState(new_params, new_opt, state.step + 1), loss
 
-    return step_fn
+    if with_mask:
+        return _step
+    return lambda state, batch: _step(state, batch, None)
 
 
 # --------------------------------------------------------------------------- #
@@ -160,8 +200,9 @@ def init_state_b(model, plan: TierPlan, opt: Optimizer, key) -> TrainState:
 
 
 def build_train_step_b(
-    model, plan: TierPlan, opt: Optimizer, *, compressor=None
-) -> Callable[[TrainState, Params], Tuple[TrainState, jax.Array]]:
+    model, plan: TierPlan, opt: Optimizer, *, compressor=None,
+    with_mask: bool = False,
+) -> Callable[..., Tuple[TrainState, jax.Array]]:
     """Engine-B step: literal split execution.
 
     Forward: tier-1 vmapped over N clients; activations regrouped into J_2
@@ -172,12 +213,31 @@ def build_train_step_b(
     ``compressor`` compresses each entity's model upload before the Eq. 4
     fed-server mean — the literal wire the latency model prices with
     ``model_ratio`` (DESIGN.md §9).
+
+    ``with_mask=True`` returns ``step(state, batch, mask)``: the global
+    objective becomes the participation-weighted mean Σ w_i·loss_i / Σ w_i
+    (per-client losses, so clients weight exactly as in Engine A), each
+    tier-m entity's gradient is rescaled by Σw / Σ_{i∈j} w_i — the mean
+    over its *participating* clients' gradients, zero for a
+    zero-participant entity, whose sub-model therefore keeps its last
+    synced params — and the Eq. 4 fed-server mean weights entities by
+    their participant counts.  This mirrors ``tiers.synchronize``'s mask
+    semantics, so A == B extends to partial rounds
+    (``tests/test_engines_equal.py``).  MoE specs are not supported here:
+    the aux-loss regrouping means are unweighted, so a masked MoE round
+    would diverge from Engine A.
     """
     N = plan.num_clients
     M = plan.M
     spec = model.spec
+    if with_mask and getattr(spec, "moe", None) is not None:
+        raise NotImplementedError(
+            "masked Engine B does not support MoE specs: the aux-loss "
+            "regroup means are participation-unweighted (use Engine A for "
+            "masked MoE training)"
+        )
 
-    def global_loss(tier_params, batch):
+    def global_loss(tier_params, batch, w=None):
         # ---- tier 1 on each client ----
         def t1(p, b):
             carry = model.frontend_apply(p["frontend"], b)
@@ -259,8 +319,19 @@ def build_train_step_b(
         labels = batch["labels"].reshape(-1, batch["labels"].shape[-1])
         if spec.family == "vlm":
             logits = logits[:, spec.prefix_len :]
-        mask = (labels >= 0).astype(jnp.float32)
-        loss = L.cross_entropy(logits, jnp.maximum(labels, 0), mask)
+        lmask = (labels >= 0).astype(jnp.float32)
+        if w is None:
+            loss = L.cross_entropy(logits, jnp.maximum(labels, 0), lmask)
+        else:
+            # per-client CE then participation-weighted mean: clients enter
+            # the objective exactly as Engine A's vmapped loss_fn does.
+            lg = logits.reshape(N, -1, *logits.shape[1:])
+            lb = labels.reshape(N, -1, *labels.shape[1:])
+            lm = lmask.reshape(N, -1, *lmask.shape[1:])
+            per_client = jax.vmap(
+                lambda lo, la, mk: L.cross_entropy(lo, jnp.maximum(la, 0), mk)
+            )(lg, lb, lm)
+            return masked_mean_loss(per_client, w)
         if spec.moe is not None:
             # aux bookkeeping: pre-flatten aux arrives scaled by N (the
             # scalar flatten is x.mean()*N), so divide it back; the top
@@ -270,14 +341,28 @@ def build_train_step_b(
             loss = loss + 0.01 * (aux_pre / N + aux_top)
         return loss
 
-    def step_fn(state: TrainState, batch: Params) -> Tuple[TrainState, jax.Array]:
-        loss, grads = jax.value_and_grad(global_loss)(state.params, batch)
+    def _step(state: TrainState, batch: Params, mask) -> Tuple[TrainState, jax.Array]:
+        w = None if mask is None else mask.astype(jnp.float32)
+        loss, grads = jax.value_and_grad(global_loss)(state.params, batch, w)
         # per-client SGD semantics: tier m's shared entity model moves by the
-        # *mean of its clients' gradients* = (N / N_m^j) * dL/dw_m  (see DESIGN)
+        # *mean of its clients' gradients* = (N / N_m^j) * dL/dw_m  (see
+        # DESIGN); under a mask the mean runs over the entity's participants
+        # only — scale Σw / Σ_{i∈j} w_i, zero for a zero-participant entity.
         scaled = []
         for m, g in enumerate(grads):
             J = plan.entities[m]
-            scaled.append(jax.tree.map(lambda x, J=J: x * J, g))
+            if w is None:
+                scaled.append(jax.tree.map(lambda x, J=J: x * J, g))
+            else:
+                wj = w.reshape(J, N // J).sum(axis=1)  # [J] participant counts
+                sc = jnp.where(wj > 0.0, jnp.sum(w) / jnp.maximum(wj, 1.0), 0.0)
+                scaled.append(
+                    jax.tree.map(
+                        lambda x, sc=sc, J=J: x
+                        * sc.reshape((J,) + (1,) * (x.ndim - 1)).astype(x.dtype),
+                        g,
+                    )
+                )
         new_params, new_opt = opt.update(state.params, scaled, state.opt_state)
         # Eq. 4 fed-server aggregation across entities at I_m
         out = []
@@ -285,8 +370,9 @@ def build_train_step_b(
             interval = int(plan.intervals[m])
             if plan.entities[m] > 1 and interval >= 1:
                 do = (state.step + 1) % interval == 0
+                J = plan.entities[m]
 
-                def agg(t):
+                def agg(t, J=J):
                     if compressor is not None:
                         # lossy fed-server upload, per entity (axis 0)
                         t = jax.tree.map(
@@ -295,18 +381,40 @@ def build_train_step_b(
                             )(x),
                             t,
                         )
-                    return jax.tree.map(
-                        lambda x: jnp.broadcast_to(
-                            jnp.mean(x, 0, keepdims=True), x.shape
-                        ),
-                        t,
-                    )
+                    if w is None:
+                        return jax.tree.map(
+                            lambda x: jnp.broadcast_to(
+                                jnp.mean(x, 0, keepdims=True), x.shape
+                            ),
+                            t,
+                        )
+                    # entities weighted by participant count — the same
+                    # hierarchical weighting tiers.synchronize applies in
+                    # Engine A; a zero-participant *round* leaves every
+                    # entity at its last synced params.
+                    wj = w.reshape(J, N // J).sum(axis=1)
+                    s = jnp.sum(wj)
+
+                    def wm(x):
+                        ww = wj.reshape((J,) + (1,) * (x.ndim - 1))
+                        tot = jnp.sum(
+                            x * ww.astype(x.dtype), axis=0, keepdims=True,
+                            dtype=jnp.float32,
+                        )
+                        mn = (tot / jnp.maximum(s, 1.0)).astype(x.dtype)
+                        return jnp.where(
+                            s > 0.0, jnp.broadcast_to(mn, x.shape), x
+                        )
+
+                    return jax.tree.map(wm, t)
 
                 p = lax.cond(do, agg, lambda t: t, p)
             out.append(p)
         return TrainState(out, new_opt, state.step + 1), loss
 
-    return step_fn
+    if with_mask:
+        return _step
+    return lambda state, batch: _step(state, batch, None)
 
 
 def engine_b_to_full(model, plan: TierPlan, tier_params) -> Params:

@@ -38,7 +38,13 @@ from typing import Iterator, List, Optional, Protocol, Sequence, Tuple
 import numpy as np
 
 from ..compress.base import CompressionSpec
-from .convergence import HyperSpec, bound_constants, tier_G2_sums
+from .convergence import (
+    HyperSpec,
+    ParticipationSpec,
+    bound_constants,
+    participation_rates,
+    tier_G2_sums,
+)
 from .latency import (
     LayerProfile,
     SystemSpec,
@@ -66,6 +72,7 @@ class HsflProblem:
     eps: float
     latency_model: Optional[LatencyModel] = None
     compression: Optional[CompressionSpec] = None
+    participation: Optional[ParticipationSpec] = None
 
     @property
     def M(self) -> int:
@@ -79,6 +86,40 @@ class HsflProblem:
     def omega(self) -> float:
         """Compression-error second moment ω (0 for the f32 wire)."""
         return 0.0 if self.compression is None else self.compression.omega
+
+    @property
+    def q(self) -> np.ndarray:
+        """Per-tier participation rates q_m ``[M]`` (all ones when full)."""
+        return participation_rates(self.participation, self.M)
+
+    def with_participation(
+        self, participation: Optional[ParticipationSpec]
+    ) -> "HsflProblem":
+        """The same problem under straggler-aware partial participation
+        (DESIGN.md §12): the Theorem-1 terms inflate by 1/q_m, and — when
+        the spec carries a ``deadline`` and no trace ``latency_model`` is
+        attached — the nominal T_S is capped at the deadline (a round
+        never waits past the barrier).
+
+        Like ``with_compression``, this refuses to change the regime under
+        an attached ``latency_model``: a trace model's cached latencies
+        price one participation policy, so swapping the spec alone would
+        leave the latency and bound sides describing different deadlines.
+        Compose both at once with ``repro.sim.participation_problem`` (or
+        declare a ``participation`` section in an ``ExperimentSpec``).
+        """
+        if participation is not None:
+            participation.validate_for(self.M)
+        if self.latency_model is not None and participation != self.participation:
+            raise ValueError(
+                "cannot change participation under an attached latency_model "
+                "(its latencies price the old policy); compose trace pricing "
+                "and the participation spec together via "
+                "repro.sim.participation_problem, or declare a participation "
+                "section in an ExperimentSpec and let repro.api.build "
+                "resolve the composition"
+            )
+        return dataclasses.replace(self, participation=participation)
 
     def with_compression(self, compression: Optional[CompressionSpec]) -> "HsflProblem":
         """The same problem priced over a compressed wire: byte ratios enter
@@ -108,17 +149,31 @@ class HsflProblem:
     # objective pieces
     # ------------------------------------------------------------------ #
     def constants(self) -> Tuple[float, float]:
-        """(c, κ) of the bound denominator (ω-inflated under compression)."""
-        return bound_constants(self.hyper, self.eps, omega=self.omega)
+        """(c, κ) of the bound denominator (ω-inflated under compression,
+        1/q_1-inflated under partial participation)."""
+        q1 = 1.0 if self.participation is None else self.q[0]
+        return bound_constants(self.hyper, self.eps, omega=self.omega, q1=q1)
 
     def tier_d(self, cuts: Sequence[int]) -> np.ndarray:
-        """d_m(μ) = Σ_{l ∈ tier m} G_l² for all tiers."""
-        return tier_G2_sums(self.hyper.G2, cuts)
+        """d_m(μ) = Σ_{l ∈ tier m} G_l² for all tiers — inflated to d_m/q_m
+        under partial participation (DESIGN.md §12; the batched lattice
+        core applies the identical per-tier division, so scalar and
+        batched denominators stay bit-equal)."""
+        d = tier_G2_sums(self.hyper.G2, cuts)
+        if self.participation is not None:
+            d = d / self.q
+        return d
 
     def split_T(self, cuts: Sequence[int]) -> float:
         if self.latency_model is not None:
             return self.latency_model.split_T(cuts)
-        return split_latency(self.profile, self.system, cuts, self.compression)
+        t = split_latency(self.profile, self.system, cuts, self.compression)
+        if self.participation is not None and self.participation.deadline is not None:
+            # nominal view of the deadline barrier: the server never waits
+            # past it (trace-based expectation pricing lives in
+            # repro.sim.participation.DeadlineLatency)
+            t = min(t, self.participation.deadline)
+        return t
 
     def agg_T(self, cuts: Sequence[int]) -> np.ndarray:
         """b_m = T_{m,A} for tiers m < M."""

@@ -157,6 +157,44 @@ def _group_mean(tree: Params, groups: int) -> Params:
     return jax.tree.map(f, tree)
 
 
+def _group_mean_masked(tree: Params, groups: int, w: jax.Array) -> Params:
+    """Participation-weighted group mean, broadcast back (DESIGN.md §12).
+
+    ``w`` is the per-client participation mask [N] (0/1 float32).  Each
+    group averages only its participants — effective weights w_i / Σ_g w
+    sum to 1 per participating group — and the aggregate is broadcast to
+    *every* member (state lives at the group's server, so an absentee
+    resumes from the group aggregate when it rejoins).  A zero-participant
+    group keeps its members' current params — the entity's last synced
+    value — matching the fleet simulator's zero-participant convention
+    (nothing is uploaded, so nothing moves).
+
+    Because a completed level leaves every member of a subgroup carrying
+    the subgroup's weighted mean, re-averaging the next (coarser) level
+    with the same per-client weights reproduces exact hierarchical
+    participant-count weighting: Σ_i w_i x_i / Σ_i w_i = Σ_g s_g m_g / Σ_g
+    s_g.  With w ≡ 1 the arithmetic (f32 multiply-by-one, same sum
+    reduction, divide by the group size) is bit-identical to
+    ``_group_mean``.
+    """
+    w = w.astype(jnp.float32)
+
+    def f(x):
+        n = x.shape[0]
+        g = x.reshape(groups, n // groups, *x.shape[1:])
+        wg = w.reshape(groups, n // groups)
+        ww = wg.reshape(wg.shape + (1,) * (g.ndim - 2))
+        s = jnp.sum(wg, axis=1).reshape((groups,) + (1,) * (g.ndim - 1))
+        tot = jnp.sum(
+            g * ww.astype(g.dtype), axis=1, keepdims=True, dtype=jnp.float32
+        )
+        m = (tot / jnp.maximum(s, 1.0)).astype(x.dtype)
+        out = jnp.where(s > 0.0, jnp.broadcast_to(m, g.shape), g)
+        return out.reshape(x.shape)
+
+    return jax.tree.map(f, tree)
+
+
 def synchronize(
     params: Params,
     plan: TierPlan,
@@ -164,6 +202,7 @@ def synchronize(
     *,
     fed_round=None,
     compress_fn=None,
+    mask=None,
 ) -> Params:
     """Apply the per-tier aggregation schedule at round ``step`` (post-update).
 
@@ -188,6 +227,14 @@ def synchronize(
     m < M−1 with more than one entity — exactly the exchanges the latency
     model prices with ``model_ratio`` — and never to the unpriced local
     entity syncs (Eq. 3) or the single-entity top tier.
+
+    ``mask`` ([N] bool/float, 1 = the client participated this round)
+    switches every level to the participation-weighted mean of
+    ``_group_mean_masked`` (DESIGN.md §12): participants are averaged
+    with weight 1/|group participants|, the aggregate is broadcast to all
+    members, and a zero-participant group keeps its last synced params.
+    ``mask=None`` is the exact full-participation path (and an all-ones
+    mask is bit-identical to it, pinned in ``tests/test_participation.py``).
     """
     parts = tier_subtrees(params, plan)
     if fed_round is not None and not isinstance(fed_round, (tuple, list)):
@@ -208,6 +255,8 @@ def synchronize(
             def level_mean(p, groups=groups, fed=fed):
                 if fed:
                     p = jax.tree.map(compress_fn, p)
+                if mask is not None:
+                    return _group_mean_masked(p, groups, mask)
                 return _group_mean(p, groups)
 
             if interval <= 1:

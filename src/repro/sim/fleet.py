@@ -121,6 +121,7 @@ def simulate_lattice_rounds(
     lattice: np.ndarray,
     rounds: Optional[int] = None,
     backend: str = "auto",
+    deadline: Optional[float] = None,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Whole-lattice counterpart of ``simulate_rounds`` for the batched
     solver core: per-round split ``[K, R]`` and per-tier agg ``[K, M-1, R]``
@@ -133,6 +134,14 @@ def simulate_lattice_rounds(
     ``events.round_stage_durations``, and accumulates in canonical chain
     order — so row k equals ``simulate_rounds(trace, lattice[k])`` to the
     last bit (pinned in ``tests/test_batched.py``).
+
+    ``deadline`` switches on the partial-participation view (DESIGN.md
+    §12): a round's split is capped at the *effective* barrier
+    ``d_eff = max(deadline, fastest available finish)`` — the server never
+    waits past it, but cannot close a round before at least one upload
+    lands — and client-hosted tier syncs run over that round's
+    participants: available clients whose chain finished by d_eff, a
+    per-lattice-row set since finish times depend on the cut.
     """
     from ..core.batched import model_bits_lattice, split_work_tensor, stage_meta
 
@@ -157,6 +166,7 @@ def simulate_lattice_rounds(
             else:
                 rates.append(system.act_down[idx] * state.link_down_mult[idx])
         avail = state.available
+        part = None  # [K, N] per-row participants (deadline pricing only)
         if not avail.any():
             pass  # a round with zero participants has split 0 (events.py)
         elif be == "jax":
@@ -164,13 +174,26 @@ def simulate_lattice_rounds(
                 t = jnp.zeros((K, N))
                 for s, rt in enumerate(rates):
                     t = t + jnp.asarray(works[:, s])[:, None] / jnp.asarray(rt)[None, :]
-                masked = jnp.where(jnp.asarray(avail), t, -jnp.inf)
-                split[:, r] = np.asarray(jnp.max(masked, axis=1))
+                av = jnp.asarray(avail)
+                masked = jnp.where(av, t, -jnp.inf)
+                top = jnp.max(masked, axis=1)
+                if deadline is not None:
+                    d_eff = jnp.maximum(
+                        deadline, jnp.min(jnp.where(av, t, jnp.inf), axis=1)
+                    )
+                    part = np.asarray(av[None, :] & (t <= d_eff[:, None]))
+                    top = jnp.minimum(d_eff, top)
+                split[:, r] = np.asarray(top)
         else:
             t = np.zeros((K, N))
             for s, rt in enumerate(rates):
                 t = t + works[:, s][:, None] / rt[None, :]
-            split[:, r] = t[:, avail].max(axis=1)
+            top = t[:, avail].max(axis=1)
+            if deadline is not None:
+                d_eff = np.maximum(deadline, t[:, avail].min(axis=1))
+                part = avail[None, :] & (t <= d_eff[:, None])
+                top = np.minimum(d_eff, top)
+            split[:, r] = top
         for m in range(M - 1):
             if system.entities[m] <= 1:
                 continue
@@ -179,6 +202,12 @@ def simulate_lattice_rounds(
             up = lam[:, m][:, None] / up_rate[None, :]
             down = lam[:, m][:, None] / down_rate[None, :]
             if up.shape[1] == N:  # clients host tier m: absent ones don't sync
+                if part is not None:
+                    any_part = part.any(axis=1)
+                    up_m = np.where(part, up, -np.inf).max(axis=1)
+                    down_m = np.where(part, down, -np.inf).max(axis=1)
+                    agg[:, m, r] = np.where(any_part, up_m + down_m, 0.0)
+                    continue
                 up, down = up[:, avail], down[:, avail]
                 if up.shape[1] == 0:
                     continue

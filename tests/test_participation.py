@@ -1,0 +1,600 @@
+"""Partial participation (DESIGN.md §12): mask-weighted aggregation,
+deadline masks / q_m estimation, expectation pricing, bound inflation.
+
+Contracts pinned here:
+
+* mask-weighted ``tiers.synchronize``: an all-ones mask is BIT-EXACT with
+  the unmasked path, per-group weights sum to 1, client order within an
+  entity doesn't matter, and a zero-participant group keeps its last
+  synced params;
+* ``participation_masks`` / ``deadline_for_rate`` / ``estimate_participation``
+  semantics, including the effective-deadline (≥ 1 participant) rule;
+* ``DeadlineLatency`` scalar protocol == whole-lattice batch methods,
+  bit-for-bit, and solver optima identical across backends;
+* the 1/q Theorem-1 inflation: q ≡ 1 is bit-identical to the plain bound,
+  the bound is monotone in q, and scalar/batched denominators agree;
+* the zero-participant-round convention: one documented behavior across
+  the event oracle, the fleet fast path, the lattice path, the deadline
+  pricing, and the new mask path.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.vgg16_cifar10 import SPEC as VGG
+from repro.core import (
+    HsflProblem,
+    ParticipationSpec,
+    SystemSpec,
+    build_profile,
+    solve_bcd,
+    synthetic_hyperspec,
+    theorem1_bound,
+)
+from repro.core.convergence import corollary1_rounds, participation_rates
+from repro.core.tiers import TierPlan, default_plan, synchronize
+from repro.sim import (
+    DeadlineLatency,
+    deadline_for_rate,
+    estimate_participation,
+    make_trace,
+    participation_masks,
+    participation_problem,
+)
+
+CUTS = (3, 8)
+
+
+def _params(key, N, U, d=4):
+    ks = jax.random.split(key, 3)
+    return {
+        "frontend": {"embed": jax.random.normal(ks[0], (N, 8, d))},
+        "units": {"w": jax.random.normal(ks[1], (N, U, d, d))},
+        "head": {"norm": jax.random.normal(ks[2], (N, d))},
+    }
+
+
+def paper_problem(num_clients=20, num_edges=5, seed=0):
+    prof = build_profile(VGG, batch=16)
+    system = SystemSpec.paper_three_tier(
+        num_clients=num_clients, num_edges=num_edges, seed=seed
+    )
+    hp = synthetic_hyperspec(VGG.n_units, num_clients, beta=3.0, seed=seed)
+    floor = theorem1_bound(hp, 10**9, [1, 1, 1], CUTS)
+    return HsflProblem(prof, system, hp, eps=6.0 * floor)
+
+
+# --------------------------------------------------------------------------- #
+# mask-weighted synchronize
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_all_ones_mask_is_bit_exact(seed):
+    """synchronize(mask=ones) == synchronize(mask=None), to the bit, at
+    every step of the schedule (local and fed rounds)."""
+    N, U = 8, 6
+    params = _params(jax.random.PRNGKey(seed), N, U)
+    plan = default_plan(U, N, cuts=(2, 4), intervals=(3, 2, 1), entities=(N, 4, 1))
+    ones = jnp.ones(N, jnp.float32)
+    for step in range(4):
+        a = synchronize(params, plan, jnp.int32(step))
+        b = synchronize(params, plan, jnp.int32(step), mask=ones)
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_masked_weights_sum_to_one_per_group():
+    """The aggregate is the participant mean: weights w_i/Σw sum to 1 per
+    group, so aggregating all-equal replicas is the identity and a mixed
+    group reproduces the exact participant average."""
+    N, U = 6, 3
+    params = _params(jax.random.PRNGKey(1), N, U)
+    # tier 1 global at I=1, tier 2 entity groups of 2 at every round
+    plan = default_plan(U, N, cuts=(1, 2), intervals=(1, 5, 1), entities=(N, 3, 1))
+    mask = jnp.asarray(np.array([1, 0, 1, 1, 0, 0], np.float32))
+    out = synchronize(params, plan, jnp.int32(0), mask=mask)
+    w_in = np.asarray(params["units"]["w"], np.float64)
+    w = np.asarray(out["units"]["w"])
+    # tier 1 (unit 0): global fed mean over participants {0, 2, 3}
+    expect = w_in[[0, 2, 3], 0].mean(0)
+    for i in range(N):
+        np.testing.assert_allclose(w[i, 0], expect, rtol=1e-6)
+    # tier 2 (unit 1): entity {0,1} -> participant {0} alone (weight 1)
+    np.testing.assert_allclose(w[0, 1], w_in[0, 1], rtol=1e-6)
+    np.testing.assert_allclose(w[1, 1], w_in[0, 1], rtol=1e-6)
+    # entity {2,3} -> mean of both
+    np.testing.assert_allclose(w[2, 1], w_in[[2, 3], 1].mean(0), rtol=1e-6)
+
+
+def test_masked_mean_permutation_invariant_within_entity():
+    """Swapping clients within an entity (params and mask together) only
+    permutes the output rows — the aggregate value doesn't change."""
+    N, U = 8, 4
+    params = _params(jax.random.PRNGKey(2), N, U)
+    plan = default_plan(U, N, cuts=(1, 2), intervals=(1, 1, 1), entities=(N, 4, 1))
+    mask = np.array([1, 0, 1, 1, 0, 1, 1, 0], np.float32)
+    # swap clients 2 and 3 (both live in entity 1 = clients {2, 3})
+    perm = np.array([0, 1, 3, 2, 4, 5, 6, 7])
+    params_p = jax.tree.map(lambda x: x[perm], params)
+    out = synchronize(params, plan, jnp.int32(0), mask=jnp.asarray(mask))
+    out_p = synchronize(
+        params_p, plan, jnp.int32(0), mask=jnp.asarray(mask[perm])
+    )
+    for x, y in zip(jax.tree.leaves(out), jax.tree.leaves(out_p)):
+        np.testing.assert_allclose(
+            np.asarray(x)[perm], np.asarray(y), rtol=1e-6, atol=1e-7
+        )
+
+
+def test_zero_participant_group_keeps_last_synced_params():
+    """A group with no participants is untouched by its level — the
+    members keep the entity's last synced params (PR-4 convention)."""
+    N, U = 6, 3
+    params = _params(jax.random.PRNGKey(3), N, U)
+    # tier 2's fed level is not due at step 0 (I=5): only the entity-level
+    # Eq. 3 sync runs, so a dead entity is observable as unchanged params
+    plan = default_plan(U, N, cuts=(1, 2), intervals=(1, 5, 1), entities=(N, 3, 1))
+    mask = jnp.asarray(np.array([0, 0, 1, 1, 1, 0], np.float32))
+    out = synchronize(params, plan, jnp.int32(0), mask=mask)
+    w_in = np.asarray(params["units"]["w"])
+    w = np.asarray(out["units"]["w"])
+    # tier-2 entity {0,1} has zero participants: unit 1 rows unchanged
+    np.testing.assert_array_equal(w[0, 1], w_in[0, 1])
+    np.testing.assert_array_equal(w[1, 1], w_in[1, 1])
+    # an all-zero mask leaves the whole tree unchanged, bit-for-bit
+    out0 = synchronize(params, plan, jnp.int32(0), mask=jnp.zeros(N, jnp.float32))
+    for x, y in zip(jax.tree.leaves(params), jax.tree.leaves(out0)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# --------------------------------------------------------------------------- #
+# masks, rates, deadlines
+# --------------------------------------------------------------------------- #
+
+
+def small_trace(name="straggler-tail", num_clients=8, num_edges=2, rounds=12,
+                seed=0, **kw):
+    prof = build_profile(VGG, batch=2)
+    system = SystemSpec.paper_three_tier(
+        num_clients=num_clients, num_edges=num_edges, seed=seed
+    )
+    return make_trace(name, prof, system, rounds=rounds, seed=seed, **kw)
+
+
+def test_participation_masks_semantics():
+    trace = small_trace()
+    dl = deadline_for_rate(trace, CUTS, 0.75)
+    res = participation_masks(trace, CUTS, dl)
+    assert res.masks.shape == (trace.rounds, trace.system.num_clients)
+    # every round with available clients keeps >= 1 participant (d_eff rule)
+    assert res.masks.any(axis=1).all()
+    # q_tier[0] is the plain client rate; rates are per-round fractions
+    np.testing.assert_allclose(res.q_tier[0], res.masks.mean())
+    np.testing.assert_allclose(res.rates, res.masks.mean(axis=1))
+    # round time is exactly the d_eff-capped straggler max, per round
+    from repro.sim.participation import per_client_finish_times
+
+    for r in range(trace.rounds):
+        t = per_client_finish_times(trace, r, CUTS)
+        avail = trace.round_state(r).available
+        d_eff = max(dl, float(t[avail].min()))
+        assert res.round_time[r] == min(d_eff, float(t[avail].max())), r
+        np.testing.assert_array_equal(res.masks[r], avail & (t <= d_eff))
+    # entity rate of the single-entity cloud tier is 1 whenever anyone runs
+    assert res.q_tier[-1] == 1.0
+    # tighter deadline -> (weakly) fewer participants
+    res_tight = participation_masks(trace, CUTS, dl * 0.5)
+    assert res_tight.masks.sum() <= res.masks.sum()
+
+
+def test_deadline_for_rate_extremes():
+    trace = small_trace()
+    d_max = deadline_for_rate(trace, CUTS, 1.0)
+    res = participation_masks(trace, CUTS, d_max)
+    assert res.masks.all()  # everyone makes the global-max barrier
+    assert res.q_tier.tolist() == [1.0, 1.0, 1.0]
+    spec = estimate_participation(trace, CUTS, target_rate=1.0)
+    assert spec.q == (1.0, 1.0, 1.0) and spec.deadline == d_max
+    with pytest.raises(ValueError):
+        estimate_participation(trace, CUTS)  # neither policy
+    with pytest.raises(ValueError):
+        estimate_participation(trace, CUTS, deadline=1.0, target_rate=0.5)
+    with pytest.raises(ValueError):
+        deadline_for_rate(trace, CUTS, 0.0)
+
+
+def test_masks_depend_on_cut():
+    """Finish times depend on the cut vector, so the same deadline admits
+    different participant sets under different splits."""
+    trace = small_trace()
+    dl = deadline_for_rate(trace, CUTS, 0.6)
+    a = participation_masks(trace, CUTS, dl)
+    b = participation_masks(trace, (1, 2), dl)
+    assert a.masks.shape == b.masks.shape
+    assert not np.array_equal(a.masks, b.masks)
+
+
+# --------------------------------------------------------------------------- #
+# DeadlineLatency: scalar == batch, solver backend equivalence
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("scenario", ["straggler-tail", "flaky-wan", "diurnal-churn"])
+def test_deadline_latency_batch_matches_scalar(scenario):
+    trace = small_trace(scenario, rounds=6)
+    problem = dataclasses.replace(
+        paper_problem(num_clients=8, num_edges=2),
+        profile=trace.profile, system=trace.system,
+    )
+    dl = deadline_for_rate(trace, CUTS, 0.7)
+    lm = DeadlineLatency(trace, dl)
+    lat = problem.cut_lattice()
+    split_b, agg_b = lm.split_T_batch(lat), lm.agg_T_batch(lat)
+    for k, cuts in enumerate(problem.iter_cut_vectors()):
+        assert split_b[k] == lm.split_T(cuts), (scenario, cuts)
+        for m in range(problem.M - 1):
+            assert agg_b[k, m] == lm.agg_T(cuts, m), (scenario, cuts, m)
+
+
+def test_deadline_latency_jax_backend_bit_equal():
+    pytest.importorskip("jax")
+    trace = small_trace(rounds=5)
+    dl = deadline_for_rate(trace, CUTS, 0.7)
+    lat = np.asarray([CUTS, (1, 2), (2, 6)], dtype=np.int64)
+    a = DeadlineLatency(trace, dl, backend="numpy")
+    b = DeadlineLatency(trace, dl, backend="jax")
+    np.testing.assert_array_equal(a.split_T_batch(lat), b.split_T_batch(lat))
+    np.testing.assert_array_equal(a.agg_T_batch(lat), b.agg_T_batch(lat))
+
+
+def test_participation_problem_solver_backends_identical():
+    base = paper_problem()
+    trace = make_trace(
+        "straggler-tail", base.profile, base.system, rounds=16, seed=0
+    )
+    pp = participation_problem(base, trace, target_rate=0.75)
+    assert pp.participation is not None and pp.participation.deadline > 0
+    rs = solve_bcd(pp, backend="scalar")
+    rn = solve_bcd(pp, backend="numpy")
+    assert rs.cuts == rn.cuts
+    assert tuple(rs.intervals) == tuple(rn.intervals)
+    assert rs.theta == rn.theta and rs.rounds == rn.rounds
+
+
+def test_participation_problem_full_rate_prices_expectation():
+    """target_rate=1.0: nobody is dropped (q == 1, bound untouched) and
+    T_S is the trace *expectation* of the uncapped round."""
+    base = paper_problem(num_clients=8, num_edges=2)
+    trace = small_trace(rounds=10)
+    # estimate the barrier at CUTS so the pooled max covers CUTS's rounds
+    pp = participation_problem(base, trace, target_rate=1.0, cuts=CUTS)
+    assert pp.participation.q == (1.0, 1.0, 1.0)
+    c_pp, k_pp = pp.constants()
+    c0, k0 = base.constants()
+    assert (c_pp, k_pp) == (c0, k0)
+    np.testing.assert_array_equal(pp.tier_d(CUTS), base.tier_d(CUTS))
+    from repro.sim import simulate_rounds
+
+    res = simulate_rounds(trace, CUTS)
+    assert pp.split_T(CUTS) == float(np.mean(res.split))
+
+
+def test_participation_problem_compression_threading():
+    from repro.compress import CompressionSpec
+
+    base = paper_problem(num_clients=8, num_edges=2)
+    int8 = CompressionSpec.uniform(3, 0.25, omega=0.004)
+    trace = small_trace(rounds=6)
+    pp = participation_problem(
+        base.with_compression(int8), trace, target_rate=0.8
+    )
+    assert pp.latency_model.trace.compression == int8
+    topk = CompressionSpec.uniform(3, 0.5, omega=0.75)
+    with pytest.raises(ValueError):
+        participation_problem(
+            base.with_compression(int8), trace.with_compression(topk),
+            target_rate=0.8,
+        )
+
+
+def test_with_participation_guards():
+    base = paper_problem(num_clients=8, num_edges=2)
+    spec = ParticipationSpec(q=(0.5, 1.0, 1.0), deadline=1.0)
+    p = base.with_participation(spec)
+    assert p.participation == spec
+    with pytest.raises(ValueError):
+        base.with_participation(ParticipationSpec(q=(0.5, 1.0)))  # wrong M
+    with pytest.raises(ValueError):
+        base.with_participation(ParticipationSpec(q=(0.0, 1.0, 1.0)))
+    trace = small_trace(rounds=4)
+    pp = participation_problem(
+        paper_problem(num_clients=8, num_edges=2), trace, target_rate=0.9
+    )
+    with pytest.raises(ValueError):  # latency model prices the old policy
+        pp.with_participation(spec)
+
+
+# --------------------------------------------------------------------------- #
+# bound inflation
+# --------------------------------------------------------------------------- #
+
+
+def test_bound_q1_is_bit_identical_to_plain():
+    hp = synthetic_hyperspec(VGG.n_units, 20, beta=3.0, seed=0)
+    iv = (2, 3, 1)
+    ones = ParticipationSpec(q=(1.0, 1.0, 1.0))
+    assert theorem1_bound(hp, 50, iv, CUTS) == theorem1_bound(
+        hp, 50, iv, CUTS, participation=ones
+    )
+    assert corollary1_rounds(hp, 1000.0, iv, CUTS) == corollary1_rounds(
+        hp, 1000.0, iv, CUTS, participation=ones
+    )
+
+
+def test_bound_monotone_in_q():
+    hp = synthetic_hyperspec(VGG.n_units, 20, beta=3.0, seed=0)
+    iv = (2, 3, 1)
+    prev = theorem1_bound(hp, 50, iv, CUTS)
+    for q in (0.9, 0.6, 0.3):
+        cur = theorem1_bound(hp, 50, iv, CUTS, participation=q)
+        assert cur > prev, (q, cur, prev)
+        prev = cur
+    # fewer participants -> more rounds to the same eps (when reachable)
+    eps = 3.0 * theorem1_bound(hp, 10**9, iv, CUTS)
+    r_full = corollary1_rounds(hp, eps, iv, CUTS)
+    r_half = corollary1_rounds(hp, eps, iv, CUTS, participation=0.5)
+    assert r_half is None or r_half > r_full
+
+
+def test_participation_rates_validation():
+    assert participation_rates(None, 3).tolist() == [1.0, 1.0, 1.0]
+    assert participation_rates(0.5, 3).tolist() == [0.5, 0.5, 0.5]
+    assert participation_rates((0.5, 0.75, 1.0), 3).tolist() == [0.5, 0.75, 1.0]
+    with pytest.raises(ValueError):
+        participation_rates((0.5, 0.75), 3)
+    with pytest.raises(ValueError):
+        participation_rates(1.5, 3)
+    with pytest.raises(ValueError):
+        participation_rates(0.0, 3)
+
+
+def test_scalar_and_batched_denominators_agree_under_participation():
+    base = paper_problem()
+    p = base.with_participation(
+        ParticipationSpec(q=(0.6, 0.8, 1.0), deadline=0.5)
+    )
+    ev = p.evaluator("numpy")
+    for k, cuts in enumerate(p.iter_cut_vectors()):
+        assert ev.split[k] == p.split_T(cuts)  # nominal split capped at 0.5
+        assert ev.split[k] <= 0.5
+        for iv in ((1, 1, 1), (2, 3, 1), (4, 2, 1)):
+            assert ev.denominator(iv)[k] == p.denominator(iv, cuts)
+            assert ev.theta(iv)[k] == p.theta(iv, cuts)
+
+
+# --------------------------------------------------------------------------- #
+# API: spec round-trip, build, train
+# --------------------------------------------------------------------------- #
+
+
+def participation_api_spec(rate=0.8, rounds=12, seed=0):
+    from repro.api import ParticipationCfg, ScenarioCfg, paper_spec
+
+    return paper_spec(seed=seed).replace(
+        scenario=ScenarioCfg(name="straggler-tail", rounds=rounds, seed=seed),
+        participation=ParticipationCfg(target_rate=rate),
+        name="participation-test",
+    )
+
+
+def test_spec_round_trip_and_build():
+    import json
+
+    from repro.api import ExperimentSpec, ParticipationCfg, build
+
+    spec = participation_api_spec()
+    d = json.loads(json.dumps(spec.to_dict()))
+    assert ExperimentSpec.from_dict(d) == spec
+    built = build(spec)
+    assert built.participation is not None
+    assert built.problem.participation == built.participation
+    assert 0.0 < built.participation.q[0] <= 1.0
+    # deadline policy round-trips too
+    spec2 = spec.replace(
+        participation=ParticipationCfg(deadline=0.25, cuts=(2, 5))
+    )
+    d2 = json.loads(json.dumps(spec2.to_dict()))
+    assert ExperimentSpec.from_dict(d2) == spec2
+    built2 = build(spec2)
+    assert built2.participation.deadline == 0.25
+
+
+def test_participation_cfg_validation():
+    from repro.api import ParticipationCfg
+
+    with pytest.raises(ValueError):
+        ParticipationCfg()  # neither policy
+    with pytest.raises(ValueError):
+        ParticipationCfg(deadline=0.5, target_rate=0.5)  # both
+    with pytest.raises(ValueError):
+        ParticipationCfg(deadline=-1.0)
+    with pytest.raises(ValueError):
+        ParticipationCfg(target_rate=1.5)
+
+
+def test_participation_without_scenario_rejected():
+    from repro.api import ParticipationCfg, build, paper_spec
+
+    spec = paper_spec().replace(
+        participation=ParticipationCfg(target_rate=0.5)
+    )
+    with pytest.raises(ValueError, match="scenario"):
+        build(spec)
+
+
+def test_run_solve_bit_identical_without_participation():
+    """The participation=None API path is unchanged: identical result to a
+    spec that never heard of the feature (acceptance pin)."""
+    from repro.api import paper_spec, run
+
+    res = run(paper_spec(seed=0))
+    assert res.provenance.get("participation") is None
+    # the seeded paper optimum (also pinned by benchmarks): stable schedule
+    assert res.theta > 0 and res.rounds_to_eps is not None
+
+
+# --------------------------------------------------------------------------- #
+# zero-participant-round convention across every path
+# --------------------------------------------------------------------------- #
+
+
+def test_zero_participant_round_convention_all_paths():
+    """One documented behavior everywhere: a zero-available round prices
+    split = 0 and skips client-hosted syncs in the event oracle, the fleet
+    fast path, the lattice path, AND the deadline-pricing path; the mask
+    path's all-zero round is a parameter no-op."""
+    from repro.sim import simulate, simulate_rounds
+    from repro.sim.fleet import simulate_lattice_rounds
+    from repro.sim.scenarios import SystemTrace
+
+    prof = build_profile(VGG, batch=4)
+    system = SystemSpec.paper_three_tier(num_clients=6, num_edges=2, seed=0)
+    base = make_trace("homogeneous-paper", prof, system, rounds=4, seed=0)
+    empty = dataclasses.replace(
+        base.round_state(0),
+        available=np.zeros(system.num_clients, dtype=bool),
+    )
+    trace = SystemTrace(
+        "with-dead-round", prof, system, base.rounds, 0,
+        lambda r: empty if r == 1 else base.round_state(r),
+    )
+    cuts = (3, 8)
+    ev = simulate(trace, cuts)
+    fl = simulate_rounds(trace, cuts, backend="numpy")
+    np.testing.assert_array_equal(ev.split, fl.split)
+    assert ev.split[1] == 0.0 and ev.agg[0, 1] == 0.0
+
+    lat = np.asarray([cuts], dtype=np.int64)
+    dl = float(np.max(fl.split)) * 2.0  # generous barrier
+    split_b, agg_b = simulate_lattice_rounds(
+        trace, lat, backend="numpy", deadline=dl
+    )
+    assert split_b[0, 1] == 0.0 and agg_b[0, 0, 1] == 0.0
+
+    lm = DeadlineLatency(trace, dl)
+    split_s, agg_s = lm.per_round(cuts)
+    np.testing.assert_array_equal(split_s, split_b[0])
+    np.testing.assert_array_equal(agg_s, agg_b[0])
+    assert split_s[1] == 0.0
+
+    pr = participation_masks(trace, cuts, dl)
+    assert not pr.masks[1].any()          # nobody available, nobody masked in
+    assert pr.round_time[1] == 0.0        # the dead round costs nothing
+    assert pr.masks[0].all()              # generous barrier: everyone else in
+
+    # mask path: the all-zero round is a no-op on params (bit-for-bit)
+    params = _params(jax.random.PRNGKey(0), system.num_clients, 6)
+    plan = default_plan(
+        6, system.num_clients, cuts=(2, 4), intervals=(1, 1, 1),
+        entities=system.entities,
+    )
+    out = synchronize(
+        params, plan, jnp.int32(0),
+        mask=jnp.asarray(pr.masks[1], jnp.float32),
+    )
+    for x, y in zip(jax.tree.leaves(params), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# --------------------------------------------------------------------------- #
+# masked Engine A on a tiny model (fast-suite coverage; the full A/B
+# differential matrix lives in tests/test_engines_equal.py, nightly)
+# --------------------------------------------------------------------------- #
+
+
+def _tiny_vgg_setup(N=4):
+    from repro.models.vgg import VggModel, VggSpec
+    from repro.optim import sgd
+
+    spec = VggSpec(
+        name="vgg-tiny", conv_channels=(4, 8), pool_after=(0,),
+        fc_dims=(16, 10), image_size=8, in_channels=3, num_classes=10,
+    )
+    model = VggModel(spec)
+    plan = default_plan(
+        spec.n_units, N, cuts=(1, 2), intervals=(2, 1, 1), entities=(N, 2, 1)
+    )
+    return spec, model, plan, sgd(0.05)
+
+
+def _tiny_batch(spec, N, b, seed):
+    rng = np.random.default_rng(seed)
+    return {
+        "images": jnp.asarray(
+            rng.normal(size=(N, b, spec.image_size, spec.image_size, 3)),
+            jnp.float32,
+        ),
+        "labels": jnp.asarray(
+            rng.integers(0, spec.num_classes, (N, b)), jnp.int32
+        ),
+    }
+
+
+def test_engine_a_masked_step_semantics():
+    from repro.core import build_train_step_a, init_state_a
+
+    N = 4
+    spec, model, plan, opt = _tiny_vgg_setup(N)
+    key = jax.random.PRNGKey(0)
+    s_plain = init_state_a(model, plan, opt, key)
+    s_mask = init_state_a(model, plan, opt, key)
+    step_plain = jax.jit(build_train_step_a(model, plan, opt))
+    step_mask = jax.jit(build_train_step_a(model, plan, opt, with_mask=True))
+
+    # all-ones mask: bit-identical to the unmasked step, every round
+    for t in range(3):
+        batch = _tiny_batch(spec, N, 2, t)
+        s_plain, l0 = step_plain(s_plain, batch)
+        s_mask, l1 = step_mask(s_mask, batch, jnp.ones(N, jnp.float32))
+        assert float(l0) == float(l1)
+    for a, b in zip(jax.tree.leaves(s_plain.params), jax.tree.leaves(s_mask.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # an all-zero mask is a whole-round no-op (loss 0, params frozen)
+    batch = _tiny_batch(spec, N, 2, 99)
+    s_after, loss = step_mask(s_mask, batch, jnp.zeros(N, jnp.float32))
+    assert float(loss) == 0.0
+    for a, b in zip(jax.tree.leaves(s_mask.params), jax.tree.leaves(s_after.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_api_train_with_participation_masks():
+    """run(mode="train") under a participation policy drives the masked
+    engine with trace-sampled masks and reports the realized rate."""
+    from repro.api import (
+        HyperCfg, ModelCfg, ParticipationCfg, RunCfg, ScenarioCfg,
+        SolverCfg, SystemCfg, ExperimentSpec, run,
+    )
+
+    spec = ExperimentSpec(
+        name="train-masked",
+        model=ModelCfg(
+            arch="smollm-135m", variant="reduced", num_layers=4, batch=2, seq=8
+        ),
+        system=SystemCfg(
+            preset="paper-three-tier", num_clients=8, num_edges=4, seed=0
+        ),
+        hyper=HyperCfg(seed=0),
+        scenario=ScenarioCfg(name="straggler-tail", rounds=16, seed=0),
+        participation=ParticipationCfg(target_rate=0.5),
+        solver=SolverCfg(kind="fixed", cuts=(1, 3), intervals=(2, 2, 1)),
+        run=RunCfg(mode="train", seed=0, rounds=4, lr=0.05, dataset_size=32),
+    )
+    res = run(spec)
+    assert res.train["deadline"] > 0
+    assert 0.0 < res.train["mean_participation"] <= 1.0
+    assert np.isfinite(res.train["final_loss"])
