@@ -22,6 +22,9 @@ Harness -> paper artifact map (details in DESIGN.md §7):
     sim_scale             (ours)     fleet simulator: oracle check + 10^6-client sweep
     solver_scale          (ours)     batched MS/MA/BCD lattice core vs the scalar
                                      oracle walk (bit-exact optima, >=20x headline)
+    control_drift         (ours)     online adaptive control: time-to-eps vs every
+                                     static schedule on drifting fleets + warm
+                                     re-solve latency (>=10x over cold)
     compress_sweep        (ours)     compression ratio/omega priced through BCD,
                                      Thm 1 + the fused q8 kernel oracle
     participation_sweep   (ours)     straggler deadline: round-time vs
@@ -39,9 +42,9 @@ import time
 
 def _registry(args):
     from . import (
-        ablations, bound_check, compress_sweep, fig2_latency_vs_cut,
-        fig45_benchmarks, fig67_resources, participation_sweep, roofline,
-        sim_scale, solver_scale,
+        ablations, bound_check, compress_sweep, control_drift,
+        fig2_latency_vs_cut, fig45_benchmarks, fig67_resources,
+        participation_sweep, roofline, sim_scale, solver_scale,
     )
 
     return [
@@ -56,6 +59,8 @@ def _registry(args):
          lambda: sim_scale.main(args.quick, seed=args.seed)),
         ("solver_scale", "analytic",
          lambda: solver_scale.main(args.quick, seed=args.seed)),
+        ("control_drift", "analytic",
+         lambda: control_drift.main(args.quick, seed=args.seed)),
         ("ablations", "training",
          lambda: ablations.main(args.quick, seed=args.seed)),
         ("bound_check", "training",

@@ -7,6 +7,7 @@
 # uniform ExperimentResult whose provenance is the resolved spec.
 from .spec import (
     CompressionCfg,
+    ControlCfg,
     ExperimentSpec,
     HyperCfg,
     ModelCfg,

@@ -86,6 +86,12 @@ def resolve_compression(
 def build(spec: ExperimentSpec) -> BuiltExperiment:
     """Resolve every registry name and compose the problem in the one
     valid order (see module docstring)."""
+    if spec.run.mode == "control" and spec.scenario is None:
+        raise ValueError(
+            'run mode="control" needs a scenario section: the controller '
+            "observes round telemetry from that fleet trace (add scenario=, "
+            'e.g. ScenarioCfg(name="flaky-wan"))'
+        )
     model_spec = resolve_model(spec.model)
     profile = build_profile(
         model_spec,

@@ -41,6 +41,7 @@ class ExperimentResult:
     latency: Dict[str, Any] = field(default_factory=dict)
     sim: Optional[Dict[str, Any]] = None   # per-round trace profile
     train: Optional[Dict[str, Any]] = None # real-training metrics
+    control: Optional[Dict[str, Any]] = None  # adaptive-control run log
     provenance: Dict[str, Any] = field(default_factory=dict)  # resolved spec
 
     @property
@@ -59,6 +60,7 @@ class ExperimentResult:
                 "latency": self.latency,
                 "sim": self.sim,
                 "train": self.train,
+                "control": self.control,
                 "provenance": self.provenance,
             }
         )
@@ -75,5 +77,6 @@ class ExperimentResult:
             latency=dict(d.get("latency", {})),
             sim=d.get("sim"),
             train=d.get("train"),
+            control=d.get("control"),
             provenance=dict(d.get("provenance", {})),
         )

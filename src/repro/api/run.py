@@ -8,6 +8,11 @@
 * ``mode="train"``    — real Engine-A/B split training with the schedule
   (solved or fixed), the spec's codec on the fed-server wire, and the
   Theorem-1 bound for the schedule actually trained.
+* ``mode="control"``  — the train loop under the online adaptive
+  controller (``repro.control``): round telemetry feeds a sliding-window
+  system estimate, drift triggers warm-started re-solves, engine state
+  migrates across switches, and the Theorem-1 bound is composed
+  piecewise over the schedule segments.
 
 Every mode returns the same ``ExperimentResult``; ``provenance`` is the
 resolved spec, so the artifact alone reproduces the run.
@@ -115,19 +120,13 @@ def _simulate(built: BuiltExperiment, cuts, intervals) -> Dict[str, Any]:
     return out
 
 
-def _train(built: BuiltExperiment, cuts, intervals) -> Dict[str, Any]:
-    """Real split training of the spec's model under the schedule."""
-    import jax
-    import jax.numpy as jnp
+def _training_setup(built: BuiltExperiment):
+    """Shared data / model / optimizer assembly for train and control modes.
 
-    from ..core.convergence import theorem1_bound
-    from ..core.engine import (
-        build_train_step_a,
-        build_train_step_b,
-        init_state_a,
-        init_state_b,
-    )
-    from ..core.tiers import TierPlan
+    Returns ``(model, loader, opt, N)``; the plan / step / mask wiring
+    stays with the caller because the control loop rebuilds those on
+    every schedule switch.
+    """
     from ..data import (
         image_loader,
         lm_loader,
@@ -153,7 +152,7 @@ def _train(built: BuiltExperiment, cuts, intervals) -> Dict[str, Any]:
         # provenance all describe the run that actually happened
         if spec.model.seq < 2:
             raise ValueError(
-                f'run mode="train" on LM arch {spec.model.arch!r} needs '
+                f'run mode="{rc.mode}" on LM arch {spec.model.arch!r} needs '
                 f"model.seq >= 2 (next-token loss); got {spec.model.seq}"
             )
         ds = make_lm_stream(
@@ -169,44 +168,63 @@ def _train(built: BuiltExperiment, cuts, intervals) -> Dict[str, Any]:
     )
     loader = mk_loader(parts)
     model = build_model(model_spec)
+    opt = {"sgd": sgd, "momentum": momentum, "adam": adam}[spec.model.optimizer](rc.lr)
+    return model, loader, opt, N
+
+
+def _participation_masks(built: BuiltExperiment, cuts) -> Optional[np.ndarray]:
+    """Deadline-driven per-round client masks sampled from the fleet trace
+    at the schedule actually trained (DESIGN.md §12); the trace replays
+    cyclically past its horizon.  ``None`` without a participation policy."""
+    if built.participation is None:
+        return None
+    from ..sim import participation_masks
+
+    return participation_masks(
+        built.trace, cuts, built.participation.deadline
+    ).masks
+
+
+def _make_step(built: BuiltExperiment, model, plan, opt, with_mask: bool):
+    """Jitted engine step for one tier plan (re-built on control switches)."""
+    import jax
+
+    from ..core.engine import build_train_step_a, build_train_step_b
+
+    builder = build_train_step_a if built.spec.run.engine == "a" else build_train_step_b
+    return jax.jit(
+        builder(
+            model, plan, opt, compressor=built.compressor, with_mask=with_mask
+        )
+    )
+
+
+def _train(built: BuiltExperiment, cuts, intervals) -> Dict[str, Any]:
+    """Real split training of the spec's model under the schedule."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..core.convergence import theorem1_bound
+    from ..core.engine import init_state_a, init_state_b
+    from ..core.tiers import TierPlan
+
+    spec = built.spec
+    rc = spec.run
+    model, loader, opt, N = _training_setup(built)
     plan = TierPlan(
-        n_units=model_spec.n_units,
+        n_units=built.model_spec.n_units,
         num_clients=N,
         cuts=tuple(cuts),
         intervals=tuple(intervals),
         entities=built.system.entities,
     )
-    opt = {"sgd": sgd, "momentum": momentum, "adam": adam}[spec.model.optimizer](rc.lr)
     key = jax.random.PRNGKey(rc.seed)
 
-    masks = None
-    if built.participation is not None:
-        # deadline-driven per-round client masks sampled from the fleet
-        # trace at the schedule actually trained (DESIGN.md §12); the
-        # trace replays cyclically past its horizon.
-        from ..sim import participation_masks
-
-        masks = participation_masks(
-            built.trace, cuts, built.participation.deadline
-        ).masks
-
+    masks = _participation_masks(built, cuts)
     with_mask = masks is not None
-    if rc.engine == "a":
-        state = init_state_a(model, plan, opt, key)
-        step = jax.jit(
-            build_train_step_a(
-                model, plan, opt, compressor=built.compressor,
-                with_mask=with_mask,
-            )
-        )
-    else:
-        state = init_state_b(model, plan, opt, key)
-        step = jax.jit(
-            build_train_step_b(
-                model, plan, opt, compressor=built.compressor,
-                with_mask=with_mask,
-            )
-        )
+    init = init_state_a if rc.engine == "a" else init_state_b
+    state = init(model, plan, opt, key)
+    step = _make_step(built, model, plan, opt, with_mask)
 
     losses = []
     for r in range(rc.rounds):
@@ -241,6 +259,174 @@ def _train(built: BuiltExperiment, cuts, intervals) -> Dict[str, Any]:
         )
         out["deadline"] = built.participation.deadline
     return out
+
+
+def _control(built: BuiltExperiment, cuts, intervals) -> Dict[str, Any]:
+    """Engine training under the online adaptive controller (DESIGN.md §13).
+
+    Each round the engine trains under the current schedule, the round's
+    telemetry is observed from the fleet trace and folded into the
+    controller's window, and a drift-triggered warm re-solve may switch
+    the schedule — at which point the tier plan is rebuilt, the engine
+    state (params + optimizer moments) is migrated without loss, the step
+    re-jitted, and participation masks re-sampled at the new cuts.  The
+    Theorem-1 bound is kept piecewise across the segments and collapses
+    bit-exactly to the static bound when no switch fires.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from ..control import (
+        BoundSegment,
+        Controller,
+        migrate_state,
+        observe_round,
+        piecewise_bound,
+    )
+    from ..core.convergence import theorem1_bound
+    from ..core.engine import init_state_a, init_state_b
+    from ..core.tiers import TierPlan
+    from .spec import ControlCfg
+
+    spec = built.spec
+    rc = spec.run
+    cc = spec.control if spec.control is not None else ControlCfg()
+    trace = built.trace
+    model, loader, opt, N = _training_setup(built)
+    cuts = tuple(int(c) for c in cuts)
+    intervals = tuple(int(i) for i in intervals)
+    init_cuts, init_intervals = cuts, intervals
+
+    def make_plan(c, i):
+        return TierPlan(
+            n_units=built.model_spec.n_units,
+            num_clients=N,
+            cuts=tuple(c),
+            intervals=tuple(i),
+            entities=built.system.entities,
+        )
+
+    plan = make_plan(cuts, intervals)
+    key = jax.random.PRNGKey(rc.seed)
+    masks = _participation_masks(built, cuts)
+    with_mask = masks is not None
+    init = init_state_a if rc.engine == "a" else init_state_b
+    state = init(model, plan, opt, key)
+    step = _make_step(built, model, plan, opt, with_mask)
+
+    controller = Controller(
+        built.problem,
+        cuts,
+        intervals,
+        window=cc.window,
+        check_every=cc.check_every,
+        rel_tol=cc.rel_tol,
+        cooldown=cc.cooldown,
+        min_window=cc.min_window,
+        quantile=cc.quantile,
+        warm_start=cc.warm_start,
+        backend=cc.backend,
+        max_switches=cc.max_switches,
+    )
+
+    omega = 0.0 if built.compression is None else built.compression.omega
+    segments = []
+    seg_rounds = 0
+    losses = []
+    for r in range(rc.rounds):
+        rr = r % trace.rounds
+        batch = {k: jnp.asarray(v) for k, v in loader.next_round().items()}
+        if with_mask:
+            mrow = masks[r % masks.shape[0]]
+            state, loss = step(state, batch, jnp.asarray(mrow, dtype=jnp.float32))
+        else:
+            mrow = None
+            state, loss = step(state, batch)
+        losses.append(float(loss))
+        seg_rounds += 1
+        if rc.log_every and ((r + 1) % rc.log_every == 0 or r == 0):
+            print(f"round {r+1:5d}  loss {losses[-1]:.4f}  "
+                  f"cuts {cuts} I{intervals}")
+
+        obs = observe_round(
+            trace, rr, cuts,
+            mask=None if mrow is None else np.asarray(mrow, dtype=bool),
+            loss=losses[-1],
+        )
+        controller.observe(obs)
+        dec = controller.maybe_replan(r)
+        if dec is not None and dec.switched:
+            segments.append(
+                BoundSegment(
+                    seg_rounds, intervals, cuts,
+                    omega=omega, participation=built.participation,
+                )
+            )
+            seg_rounds = 0
+            old_plan = plan
+            cuts, intervals = dec.new_cuts, dec.new_intervals
+            plan = make_plan(cuts, intervals)
+            state = migrate_state(
+                state, plan, opt, engine=rc.engine, model=model,
+                old_plan=old_plan,
+            )
+            step = _make_step(built, model, plan, opt, with_mask)
+            if with_mask:
+                masks = _participation_masks(built, cuts)
+            if rc.log_every:
+                print("  " + dec.describe())
+    if seg_rounds:
+        segments.append(
+            BoundSegment(
+                seg_rounds, intervals, cuts,
+                omega=omega, participation=built.participation,
+            )
+        )
+
+    bound = piecewise_bound(built.hyper, segments) if segments else None
+    static_bound = theorem1_bound(
+        built.hyper, max(1, rc.rounds), init_intervals, init_cuts,
+        omega=omega, participation=built.participation,
+    )
+    p50, p95 = controller.resolve_quantiles((0.5, 0.95))
+    return {
+        "engine": rc.engine,
+        "rounds": rc.rounds,
+        "first_loss": losses[0] if losses else None,
+        "final_loss": losses[-1] if losses else None,
+        "losses": losses,
+        "initial_cuts": list(init_cuts),
+        "initial_intervals": list(init_intervals),
+        "final_cuts": list(cuts),
+        "final_intervals": list(intervals),
+        "n_switches": controller.n_switches,
+        "n_resolves": len(controller.resolve_seconds),
+        "switches": [
+            {
+                "round": d.round_index,
+                "trigger": d.trigger,
+                "old_cuts": list(d.old_cuts),
+                "old_intervals": list(d.old_intervals),
+                "new_cuts": list(d.new_cuts),
+                "new_intervals": list(d.new_intervals),
+                "solve_ms": 1e3 * d.solve_seconds,
+            }
+            for d in controller.decisions
+            if d.switched
+        ],
+        "switch_log": [
+            d.describe() for d in controller.decisions if d.switched
+        ],
+        "segments": [
+            {"rounds": s.rounds, "cuts": list(s.cuts),
+             "intervals": list(s.intervals)}
+            for s in segments
+        ],
+        "piecewise_bound": None if bound is None else float(bound),
+        "static_bound": float(static_bound),
+        "resolve_p50_s": p50,
+        "resolve_p95_s": p95,
+    }
 
 
 def evaluate_schedule(
@@ -297,5 +483,9 @@ def run(
     elif spec.run.mode == "train":
         result = dataclasses.replace(
             result, train=_train(built, cuts, intervals)
+        )
+    elif spec.run.mode == "control":
+        result = dataclasses.replace(
+            result, control=_control(built, cuts, intervals)
         )
     return result

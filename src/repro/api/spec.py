@@ -220,6 +220,58 @@ class CompressionCfg:
 
 
 @dataclass(frozen=True)
+class ControlCfg:
+    """Online adaptive control knobs (``run.mode="control"``, DESIGN.md §13).
+
+    The controller watches a sliding window of observed round telemetry,
+    re-prices the system online (``repro.control.WindowedLatency`` +
+    windowed participation), and re-solves BCD warm-started when the
+    window drifts ``rel_tol`` away from the prices the current schedule
+    was solved for.  ``cooldown`` rounds must pass between re-solves;
+    ``max_switches=0`` means unlimited.  Requires a ``scenario`` section —
+    telemetry is observed from that fleet trace.
+    """
+
+    window: int = 8                # sliding telemetry window (rounds)
+    check_every: int = 1           # drift-check cadence (rounds)
+    rel_tol: float = 0.25          # relative drift that triggers a re-solve
+    cooldown: int = 8              # rounds between re-solves
+    min_window: int = 4            # observations before the first check
+    quantile: float = 0.5          # windowed robust-pricing level
+    warm_start: bool = True        # seed BCD/Dinkelbach at the current optimum
+    backend: str = "auto"          # re-solve lattice backend
+    max_switches: int = 0          # hard cap on schedule changes (0 = none)
+
+    def __post_init__(self):
+        if self.window < 2:
+            raise ValueError(f"control window must be >= 2: {self.window}")
+        if self.min_window < 2:
+            raise ValueError(
+                f"control min_window must be >= 2: {self.min_window}"
+            )
+        if not 0.0 < self.quantile <= 1.0:
+            raise ValueError(
+                f"control quantile must lie in (0, 1]: {self.quantile}"
+            )
+        if self.rel_tol <= 0.0:
+            raise ValueError(f"control rel_tol must be positive: {self.rel_tol}")
+        if self.cooldown < 0 or self.check_every < 1 or self.max_switches < 0:
+            raise ValueError(
+                "control needs cooldown >= 0, check_every >= 1, "
+                f"max_switches >= 0 (got {self.cooldown}, "
+                f"{self.check_every}, {self.max_switches})"
+            )
+        if self.backend not in ("auto", "scalar", "numpy", "jax"):
+            raise ValueError(
+                f"control backend must be auto|scalar|numpy|jax: {self.backend!r}"
+            )
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ControlCfg":
+        return cls(**d)
+
+
+@dataclass(frozen=True)
 class SolverCfg:
     """Which optimizer of problem (20) runs, with its budgets.
 
@@ -263,8 +315,10 @@ class RunCfg:
 
     ``mode``: "solve" (optimized schedule + analytic latency breakdown),
     "simulate" (schedule + per-round trace latency profile; needs a
-    ``scenario``), or "train" (real Engine-A/B split training with the
-    schedule).  Training knobs are ignored by the other modes.
+    ``scenario``), "train" (real Engine-A/B split training with the
+    schedule), or "control" (training under the online adaptive
+    controller — needs a ``scenario``; knobs come from the spec's
+    ``control`` section).  Training knobs are ignored by solve/simulate.
     """
 
     mode: str = "solve"
@@ -277,8 +331,10 @@ class RunCfg:
     log_every: int = 0             # 0 = silent
 
     def __post_init__(self):
-        if self.mode not in ("solve", "simulate", "train"):
-            raise ValueError(f"run mode must be solve|simulate|train: {self.mode!r}")
+        if self.mode not in ("solve", "simulate", "train", "control"):
+            raise ValueError(
+                f"run mode must be solve|simulate|train|control: {self.mode!r}"
+            )
         if self.engine not in ("a", "b"):
             raise ValueError(f"engine must be a|b: {self.engine!r}")
 
@@ -299,6 +355,7 @@ class ExperimentSpec:
     scenario: Optional[ScenarioCfg] = None
     compression: Optional[CompressionCfg] = None
     participation: Optional[ParticipationCfg] = None
+    control: Optional[ControlCfg] = None
     name: str = ""
 
     def to_dict(self) -> Dict[str, Any]:
@@ -310,6 +367,7 @@ class ExperimentSpec:
         scenario = d.get("scenario")
         compression = d.get("compression")
         participation = d.get("participation")
+        control = d.get("control")
         return cls(
             model=ModelCfg.from_dict(d.get("model", {})),
             system=SystemCfg.from_dict(d.get("system", {})),
@@ -325,6 +383,7 @@ class ExperimentSpec:
                 None if participation is None
                 else ParticipationCfg.from_dict(participation)
             ),
+            control=None if control is None else ControlCfg.from_dict(control),
             name=d.get("name", ""),
         )
 

@@ -1,1 +1,1 @@
-from .npz import load_checkpoint, save_checkpoint
+from .npz import check_schedule_meta, load_checkpoint, save_checkpoint

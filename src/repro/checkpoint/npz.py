@@ -57,10 +57,60 @@ def save_checkpoint(
             os.remove(tmp)
 
 
-def load_checkpoint(path: str, template: Any) -> Tuple[Any, int, Dict[str, Any]]:
-    """Restore into the structure of ``template``; returns (tree, step, meta)."""
+def check_schedule_meta(
+    meta: Dict[str, Any],
+    expect_cuts: Optional[Any] = None,
+    expect_intervals: Optional[Any] = None,
+) -> None:
+    """Fail loudly when a checkpoint's saved HSFL schedule metadata does not
+    match the schedule the caller is resuming under.
+
+    Resuming a tier-partitioned state under a different cut vector
+    silently mis-assigns units to tiers even when every leaf shape lines
+    up (Engine A states are client-stacked full models, so no shape check
+    catches it).  Callers that know their resume schedule pass it here —
+    a mismatch either needs an explicit migration
+    (``repro.control.migrate.migrate_state``) or a resume at the saved
+    schedule.
+    """
+    for name, expect in (("cuts", expect_cuts), ("intervals", expect_intervals)):
+        if expect is None:
+            continue
+        saved = meta.get(name)
+        if saved is None:
+            raise ValueError(
+                f"checkpoint has no {name!r} metadata to verify against "
+                f"expected {tuple(int(v) for v in expect)}; re-save with "
+                f"meta={{{name!r}: ...}} or load without the expectation"
+            )
+        saved_t = tuple(int(v) for v in saved)
+        expect_t = tuple(int(v) for v in expect)
+        if saved_t != expect_t:
+            raise ValueError(
+                f"checkpoint was saved under {name}={saved_t} but resume "
+                f"requests {name}={expect_t}; migrate the tier assignment "
+                f"explicitly (repro.control.migrate.migrate_state) or "
+                f"resume at the saved schedule"
+            )
+
+
+def load_checkpoint(
+    path: str,
+    template: Any,
+    expect_cuts: Optional[Any] = None,
+    expect_intervals: Optional[Any] = None,
+) -> Tuple[Any, int, Dict[str, Any]]:
+    """Restore into the structure of ``template``; returns (tree, step, meta).
+
+    ``expect_cuts`` / ``expect_intervals`` assert the saved schedule
+    metadata matches the resume schedule (``check_schedule_meta``): a cut
+    vector that moved between save and resume must fail loudly here, not
+    silently mis-partition tiers downstream.
+    """
     with np.load(path) as z:
         meta = json.loads(bytes(z["__meta__"]).decode())
+        check_schedule_meta(meta, expect_cuts, expect_intervals)
+        saved_cuts = meta.get("cuts")
         leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(template)
         new_leaves = []
         for path_keys, leaf in leaves_paths:
@@ -70,7 +120,17 @@ def load_checkpoint(path: str, template: Any) -> Tuple[Any, int, Dict[str, Any]]
             arr = z[key]
             want = np.asarray(leaf)
             if arr.shape != want.shape:
-                raise ValueError(f"{key}: shape {arr.shape} != template {want.shape}")
+                hint = (
+                    f" (checkpoint metadata says cuts={tuple(saved_cuts)}; a "
+                    f"template built for a different cut vector mis-shapes "
+                    f"tier-stacked leaves — pass expect_cuts= to catch this "
+                    f"up front)"
+                    if saved_cuts is not None
+                    else ""
+                )
+                raise ValueError(
+                    f"{key}: shape {arr.shape} != template {want.shape}{hint}"
+                )
             new_leaves.append(arr.astype(want.dtype))
     tree = jax.tree_util.tree_unflatten(treedef, new_leaves)
     step = int(meta.pop("step", 0))

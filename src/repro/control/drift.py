@@ -1,0 +1,60 @@
+"""Drift detection: windowed estimate vs. the currently-priced model.
+
+The controller snapshots the latency/participation values its current
+schedule was solved against; each check compares the windowed estimate of
+those same quantities *at the current schedule* and trips when any
+relative deviation exceeds ``rel_tol``.  Checking at the current operating
+point (rather than, say, table norms over the whole lattice) keeps the
+trigger cheap, scale-free, and aligned with what actually invalidates the
+schedule: the prices the solver believed when it chose it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DriftReport:
+    drifted: bool
+    trigger: str       # "", "latency", "participation", "latency+participation"
+    split_rel: float   # relative deviation of windowed T_S at current cuts
+    agg_rel: float     # max relative deviation of windowed T_{m,A}
+    q_rel: float       # relative deviation of windowed q_1
+
+
+def _rel(observed: float, priced: float, floor: float = 1e-12) -> float:
+    return abs(float(observed) - float(priced)) / max(abs(float(priced)), floor)
+
+
+def detect_drift(
+    split_obs: float,
+    split_priced: float,
+    agg_obs: np.ndarray,
+    agg_priced: np.ndarray,
+    q1_obs: float,
+    q1_priced: float,
+    rel_tol: float,
+) -> DriftReport:
+    """Compare windowed vs. priced system values at the current schedule."""
+    split_rel = _rel(split_obs, split_priced)
+    agg_rel = 0.0
+    for o, p in zip(np.atleast_1d(agg_obs), np.atleast_1d(agg_priced)):
+        if float(o) == 0.0 and float(p) == 0.0:
+            continue  # single-entity tier: no fed traffic on either side
+        agg_rel = max(agg_rel, _rel(o, p))
+    q_rel = _rel(q1_obs, q1_priced)
+    triggers = []
+    if split_rel > rel_tol or agg_rel > rel_tol:
+        triggers.append("latency")
+    if q_rel > rel_tol:
+        triggers.append("participation")
+    return DriftReport(
+        drifted=bool(triggers),
+        trigger="+".join(triggers),
+        split_rel=float(split_rel),
+        agg_rel=float(agg_rel),
+        q_rel=float(q_rel),
+    )

@@ -56,12 +56,20 @@ def solve_bcd(
     max_iters: int = 50,
     compression: Optional[CompressionSpec] = None,
     backend: str = "auto",
+    warm_start: bool = False,
 ) -> BcdResult:
     """``backend`` selects the block solvers' evaluation path (DESIGN.md
     §11): "scalar" is the historical per-cut walk (test oracle);
     "numpy"/"jax"/"auto" run the batched lattice core — the MS latency
     tables are built once per problem and shared across every Dinkelbach
-    step of every BCD iteration.  Results are bit-identical either way."""
+    step of every BCD iteration.  Results are bit-identical either way.
+
+    ``warm_start=True`` seeds every inner Dinkelbach at the current BCD
+    iterate (``warm_cuts``): starting from a previous optimum — the
+    adaptive controller's re-solve path — the whole BCD pass is then one
+    MA solve, one single-step MS solve, and a converged theta check, all
+    against the problem's memoized evaluator tables.  The fixpoint is
+    unchanged."""
     if compression is not None:
         problem = problem.with_compression(compression)
     M, U = problem.M, problem.n_units
@@ -77,7 +85,10 @@ def solve_bcd(
     for _ in range(max_iters):
         ma = solve_ma(problem, cuts, backend=backend)
         intervals = ma.intervals
-        ms = solve_ms(problem, intervals, backend=backend)
+        ms = solve_ms(
+            problem, intervals, backend=backend,
+            warm_cuts=cuts if warm_start else None,
+        )
         cuts = ms.cuts
         new_theta = problem.theta(intervals, cuts)
         history.append(new_theta)

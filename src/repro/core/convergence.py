@@ -112,6 +112,34 @@ def tier_G2_sums(G2: np.ndarray, cuts: Sequence[int]) -> np.ndarray:
     )
 
 
+def bound_round_terms(
+    hp: HyperSpec,
+    intervals: Sequence[int],
+    cuts: Sequence[int],
+    omega: float = 0.0,
+    participation: Union[None, float, Sequence[float], ParticipationSpec] = None,
+) -> Tuple[float, float]:
+    """The two R-independent (per-round) terms of Eq. (8): (variance, drift).
+
+    Factored out of ``theorem1_bound`` so the piecewise composition of the
+    bound across mid-run control switches (``repro.control.bound``) prices
+    each segment's schedule with the *identical* arithmetic — that is what
+    makes the single-segment composition collapse bit-exactly to the
+    static bound.
+    """
+    g, b = hp.gamma, hp.beta
+    M = len(intervals)
+    q = participation_rates(participation, M)
+    d = tier_G2_sums(hp.G2, cuts)
+    term2 = b * g * (1.0 + omega) * hp.sigma2_sum / (hp.num_clients * q[0])
+    term3 = 4.0 * b**2 * g**2 * sum(
+        (I**2) * (dm / qm)
+        for I, dm, qm in zip(intervals[:-1], d[:-1], q[:-1])
+        if I > 1
+    )
+    return term2, term3
+
+
 def theorem1_bound(
     hp: HyperSpec,
     R: int,
@@ -134,17 +162,8 @@ def theorem1_bound(
     tier's drift term by 1/q_m (syncs only land on the participating
     fraction of entities).  None recovers full participation exactly.
     """
-    g, b = hp.gamma, hp.beta
-    M = len(intervals)
-    q = participation_rates(participation, M)
-    d = tier_G2_sums(hp.G2, cuts)
-    term1 = 2.0 * hp.theta0 / (g * R)
-    term2 = b * g * (1.0 + omega) * hp.sigma2_sum / (hp.num_clients * q[0])
-    term3 = 4.0 * b**2 * g**2 * sum(
-        (I**2) * (dm / qm)
-        for I, dm, qm in zip(intervals[:-1], d[:-1], q[:-1])
-        if I > 1
-    )
+    term1 = 2.0 * hp.theta0 / (hp.gamma * R)
+    term2, term3 = bound_round_terms(hp, intervals, cuts, omega, participation)
     return term1 + term2 + term3
 
 

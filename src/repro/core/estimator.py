@@ -86,13 +86,27 @@ def _global_sq_norm(tree) -> jax.Array:
 
 @dataclass
 class HyperEstimator:
-    """Accumulates probe-run statistics into a HyperSpec."""
+    """Accumulates probe-run statistics into a HyperSpec.
+
+    ``window=None`` (the default) keeps running sums over the whole probe —
+    the offline estimation mode.  ``window=W`` keeps only the last W
+    observations in ring buffers, which is the online mode the adaptive
+    controller (``repro.control``) consumes: the emitted ``HyperSpec``
+    tracks the *current* regime instead of a lifetime average, and stale
+    rounds age out as the window wraps.
+    """
 
     n_units: int
     num_clients: int
     gamma: float
+    window: Optional[int] = None
 
     def __post_init__(self):
+        if self.window is not None and self.window < 2:
+            raise ValueError(
+                f"window must be >= 2 (beta needs consecutive observations), "
+                f"got {self.window}"
+            )
         self._g2_sum = np.zeros(self.n_units)
         self._var_sum = np.zeros(self.n_units)
         self._steps = 0
@@ -101,18 +115,28 @@ class HyperEstimator:
         self._prev_params: Optional[Params] = None
         self._f0: Optional[float] = None
         self._fmin = float("inf")
+        if self.window is not None:
+            from collections import deque
+
+            self._g2_hist = deque(maxlen=self.window)    # [U] per round
+            self._var_hist = deque(maxlen=self.window)   # [U] per round
+            self._beta_hist = deque(maxlen=self.window)  # ratio or None
+            self._loss_hist = deque(maxlen=self.window)  # float
 
     # ------------------------------------------------------------------ #
     def observe(self, params: Params, grads: Params, loss: float) -> None:
         """Feed one probe round: client-stacked params/grads + mean loss."""
         sq = np.asarray(_unit_sq_norms(grads, self.n_units))  # [N, U]
-        self._g2_sum += sq.mean(axis=0)
+        g2_round = sq.mean(axis=0)
+        self._g2_sum += g2_round
         mean_grad = jax.tree.map(
             lambda g: jnp.mean(g.astype(jnp.float32), axis=0, keepdims=True), grads
         )
         # Var_n[g] per unit = E_n ||g_n||² − ||ḡ||² (per-unit decomposition)
         mean_sq = np.asarray(_unit_sq_norms(mean_grad, self.n_units))[0]
-        self._var_sum += np.maximum(sq.mean(axis=0) - mean_sq, 0.0)
+        var_round = np.maximum(g2_round - mean_sq, 0.0)
+        self._var_sum += var_round
+        ratio: Optional[float] = None
         if self._prev_mean_grad is not None:
             dg = jax.tree.map(
                 lambda a, b: a - b, mean_grad, self._prev_mean_grad
@@ -121,7 +145,8 @@ class HyperEstimator:
             num = float(jnp.sqrt(_global_sq_norm(dg)))
             den = float(jnp.sqrt(_global_sq_norm(dw)))
             if den > 1e-12:
-                self._beta = max(self._beta, num / den)
+                ratio = num / den
+                self._beta = max(self._beta, ratio)
         self._prev_mean_grad = mean_grad
         self._prev_params = jax.tree.map(lambda x: x, params)
         loss = float(loss)
@@ -129,11 +154,31 @@ class HyperEstimator:
             self._f0 = loss
         self._fmin = min(self._fmin, loss)
         self._steps += 1
+        if self.window is not None:
+            self._g2_hist.append(g2_round)
+            self._var_hist.append(var_round)
+            self._beta_hist.append(ratio)
+            self._loss_hist.append(loss)
 
     # ------------------------------------------------------------------ #
     def hyperspec(self, fstar_margin: float = 0.5) -> HyperSpec:
         if self._steps == 0:
             raise ValueError("no probe rounds observed")
+        if self.window is not None:
+            G2 = np.mean(np.stack(tuple(self._g2_hist)), axis=0)
+            sigma2 = np.mean(np.stack(tuple(self._var_hist)), axis=0)
+            ratios = [b for b in self._beta_hist if b is not None]
+            beta = max(max(ratios, default=0.0), 1e-3)
+            f0 = self._loss_hist[0]
+            theta0 = max(f0 - min(self._loss_hist), fstar_margin * f0, 1e-3)
+            return HyperSpec(
+                gamma=self.gamma,
+                beta=beta,
+                theta0=float(theta0),
+                num_clients=self.num_clients,
+                sigma2=sigma2,
+                G2=G2,
+            )
         G2 = self._g2_sum / self._steps
         sigma2 = self._var_sum / self._steps
         theta0 = max(self._f0 - self._fmin, fstar_margin * self._f0, 1e-3)

@@ -31,12 +31,18 @@ force over the full integer grid.
 from __future__ import annotations
 
 import itertools
+import math
 from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .problem import INFEASIBLE, HsflProblem
+
+# Newton stop threshold for _cubic_positive_root (hoisted: the controller's
+# warm re-solve path prices thousands of cubics per second and
+# ``np.finfo(...).eps`` is a surprisingly expensive constructor).
+_EPS4 = 4.0 * float(np.finfo(float).eps)
 
 
 @dataclass(frozen=True)
@@ -48,7 +54,37 @@ class MaSolution:
 def _cubic_positive_root(
     ka: float, kb: float, kc: float, max_doublings: int = 200
 ) -> float:
-    """Unique positive root of  ka·I³ + kb·I² − kc = 0  (ka, kb, kc > 0)."""
+    """Unique positive root of  ka·I³ + kb·I² − kc = 0  (ka, kb, kc > 0).
+
+    For positive coefficients f(I) = ka·I³ + kb·I² − kc is strictly
+    increasing and convex on I > 0 with f(0) = −kc < 0, so Newton from any
+    point above the root descends monotonically and converges
+    quadratically — orders of magnitude cheaper than the companion-matrix
+    eigensolve ``np.roots`` runs, which matters because the adaptive
+    controller (``repro.control``) prices this root on every warm re-solve.
+    The historical bisection fallback still guards degenerate coefficients.
+    """
+    ka, kb, kc = float(ka), float(kb), float(kc)
+    if ka > 0 and kb > 0 and kc > 0:
+        # each term alone overshoots kc at these points, so both are upper
+        # bounds; start at the tighter one
+        x = min((kc / ka) ** (1.0 / 3.0), (kc / kb) ** 0.5)
+        for _ in range(100):
+            f = (ka * x + kb) * x * x - kc
+            df = (3.0 * ka * x + 2.0 * kb) * x
+            if df <= 0:
+                break
+            step = f / df
+            x_new = x - step
+            if x_new <= 0 or x_new >= x:
+                break
+            x = x_new
+            if abs(step) <= _EPS4 * x:
+                break
+        else:
+            x = None
+        if x is not None and x > 0:
+            return float(x)
     roots = np.roots([ka, kb, 0.0, -kc])
     real = roots[np.abs(roots.imag) < 1e-9].real
     pos = real[real > 0]
@@ -89,30 +125,43 @@ def _newton_jacobi(
     pinned_b_sum: float,
     iters: int = 200,
     tol: float = 1e-10,
-) -> Optional[np.ndarray]:
+) -> Optional[List[float]]:
     """Solve the stationary system for the free tiers; None if c' ≤ 0 always
-    (the bound cannot reach ε with any finite interval)."""
-    I = np.full(len(free), 2.0)
+    (the bound cannot reach ε with any finite interval).
+
+    Pure-scalar sweeps: the free set is at most M−1 ≈ 2 tiers, where numpy
+    array dispatch costs more than the arithmetic itself — and this loop
+    sits on the adaptive controller's warm re-solve path.
+    """
+    bs = [float(b[m]) for m in free]
+    ds = [float(d[m]) for m in free]
+    n = len(free)
+    I = [2.0] * n
     for _ in range(iters):
-        new = I.copy()
-        for i, m in enumerate(free):
-            others = [j for j in range(len(free)) if j != i]
-            a_eff = a + pinned_b_sum + sum(b[free[j]] / I[j] for j in others)
-            c_eff = c - kappa * sum(d[free[j]] * I[j] ** 2 for j in others)
+        new = list(I)
+        for i in range(n):
+            a_eff = a + pinned_b_sum + sum(
+                bs[j] / I[j] for j in range(n) if j != i
+            )
+            c_eff = c - kappa * sum(
+                ds[j] * I[j] ** 2 for j in range(n) if j != i
+            )
             if c_eff <= 0:
                 return None
-            if d[m] <= 0:
+            if ds[i] <= 0:
                 # tier has no G² mass: Θ' strictly decreases in I_m → unbounded;
                 # cap at a large interval (aggregation is pure overhead here).
                 new[i] = 1e6
                 continue
-            ka = 2.0 * kappa * d[m] * a_eff
-            kb = 3.0 * kappa * d[m] * b[m]
-            kc = b[m] * c_eff
+            ka = 2.0 * kappa * ds[i] * a_eff
+            kb = 3.0 * kappa * ds[i] * bs[i]
+            kc = bs[i] * c_eff
             if kc <= 0:
                 return None
             new[i] = _cubic_positive_root(ka, kb, kc)
-        if np.max(np.abs(new - I)) < tol * (1.0 + np.max(np.abs(I))):
+        if max(abs(new[i] - I[i]) for i in range(n)) < tol * (
+            1.0 + max(abs(x) for x in I)
+        ):
             return new
         I = new
     return I
@@ -148,8 +197,8 @@ def _candidate_intervals(
         cands_per = [
             sorted(
                 {
-                    int(np.clip(np.floor(r), 1, i_max)),
-                    int(np.clip(np.ceil(r), 1, i_max)),
+                    min(max(int(math.floor(r)), 1), i_max),
+                    min(max(int(math.ceil(r)), 1), i_max),
                 }
             )
             for r in root

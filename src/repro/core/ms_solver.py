@@ -75,15 +75,24 @@ def _solve_ms_scalar(
     intervals: Sequence[int],
     tol: float,
     max_iters: int,
+    warm_cuts: Optional[Sequence[int]] = None,
 ) -> MsSolution:
     """The one-cut-at-a-time Dinkelbach walk (oracle path)."""
     feas = _feasible_cuts(problem, intervals)
     if not feas:
         raise ValueError(_INFEASIBLE_MSG)
-    # initial q from an arbitrary feasible point
-    n0, d0 = _nd(problem, intervals, feas[0])
+    # initial q from the warm-start point when given (and feasible),
+    # otherwise an arbitrary feasible point; Dinkelbach's fixpoint is the
+    # global optimum of the fraction either way — a warm q just lands the
+    # first parametric argmin near it, typically converging in one step
+    start = feas[0]
+    if warm_cuts is not None:
+        w = tuple(int(c) for c in warm_cuts)
+        if w in set(feas):
+            start = w
+    n0, d0 = _nd(problem, intervals, start)
     q = n0 / d0
-    best = feas[0]
+    best = start
     for it in range(1, max_iters + 1):
         # inner parametric problem: exact search over the feasible lattice
         vals = []
@@ -108,6 +117,7 @@ def solve_ms(
     tol: float = 1e-9,
     max_iters: int = 64,
     backend: str = "auto",
+    warm_cuts: Optional[Sequence[int]] = None,
 ) -> MsSolution:
     """Optimal cuts for fixed intervals via Dinkelbach over an exact backend.
 
@@ -115,9 +125,15 @@ def solve_ms(
     anything else evaluates the whole lattice through the problem's
     memoized ``BatchedEvaluator`` — identical iterates, identical optimum,
     to the last bit.
+
+    ``warm_cuts`` seeds the Dinkelbach ratio q at a known-good cut vector
+    (the adaptive controller passes the previous optimum): the fixpoint —
+    and hence the returned optimum — is unchanged, but a warm q lets the
+    first whole-lattice argmin land on (or next to) it, so a mid-run
+    re-solve typically terminates in a single parametric step.
     """
     if backend == "scalar":
-        return _solve_ms_scalar(problem, intervals, tol, max_iters)
+        return _solve_ms_scalar(problem, intervals, tol, max_iters, warm_cuts)
     ev = problem.evaluator(backend)
     nums = ev.numerator(intervals)
     dens = ev.denominator(intervals)
@@ -125,8 +141,15 @@ def solve_ms(
     if feas.size == 0:
         raise ValueError(_INFEASIBLE_MSG)
     n, d = nums[feas], dens[feas]
-    q = n[0] / d[0]
-    best_i = feas[0]
+    start = 0
+    if warm_cuts is not None:
+        w = np.flatnonzero((ev.lattice == np.asarray(warm_cuts)).all(axis=1))
+        if w.size:
+            hit = np.flatnonzero(feas == w[0])
+            if hit.size:
+                start = int(hit[0])
+    q = n[start] / d[start]
+    best_i = feas[start]
     for it in range(1, max_iters + 1):
         vals = n - q * d  # whole-lattice parametric step: one argmin
         j = int(np.argmin(vals))

@@ -150,18 +150,36 @@ class HsflProblem:
     # ------------------------------------------------------------------ #
     def constants(self) -> Tuple[float, float]:
         """(c, κ) of the bound denominator (ω-inflated under compression,
-        1/q_1-inflated under partial participation)."""
-        q1 = 1.0 if self.participation is None else self.q[0]
-        return bound_constants(self.hyper, self.eps, omega=self.omega, q1=q1)
+        1/q_1-inflated under partial participation).
+
+        Memoized on the instance: every input is a frozen field, and the
+        scalar solvers re-read (c, κ) at each coordinate step — which the
+        adaptive controller turns into a per-round hot path."""
+        cached = self.__dict__.get("_constants_cache")
+        if cached is None:
+            q1 = 1.0 if self.participation is None else self.q[0]
+            cached = bound_constants(
+                self.hyper, self.eps, omega=self.omega, q1=q1
+            )
+            self.__dict__["_constants_cache"] = cached
+        return cached
 
     def tier_d(self, cuts: Sequence[int]) -> np.ndarray:
         """d_m(μ) = Σ_{l ∈ tier m} G_l² for all tiers — inflated to d_m/q_m
         under partial participation (DESIGN.md §12; the batched lattice
         core applies the identical per-tier division, so scalar and
-        batched denominators stay bit-equal)."""
-        d = tier_G2_sums(self.hyper.G2, cuts)
-        if self.participation is not None:
-            d = d / self.q
+        batched denominators stay bit-equal).
+
+        Memoized per cut vector (depends only on frozen fields); treat the
+        returned array as read-only."""
+        cache = self.__dict__.setdefault("_tier_d_cache", {})
+        key = tuple(int(c) for c in cuts)
+        d = cache.get(key)
+        if d is None:
+            d = tier_G2_sums(self.hyper.G2, cuts)
+            if self.participation is not None:
+                d = d / self.q
+            cache[key] = d
         return d
 
     def split_T(self, cuts: Sequence[int]) -> float:
@@ -242,7 +260,15 @@ class HsflProblem:
     # constraints
     # ------------------------------------------------------------------ #
     def memory_feasible(self, cuts: Sequence[int]) -> bool:
-        return memory_ok(self.profile, self.system, cuts)
+        """C5, memoized per cut vector — a pure function of the frozen
+        profile/system, re-asked for the same few cuts thousands of times
+        by the scalar walk and the controller's warm re-solves."""
+        cache = self.__dict__.setdefault("_memory_cache", {})
+        key = tuple(int(c) for c in cuts)
+        ok = cache.get(key)
+        if ok is None:
+            ok = cache[key] = memory_ok(self.profile, self.system, cuts)
+        return ok
 
     def valid_cuts(self, cuts: Sequence[int]) -> bool:
         """C2–C4: M−1 non-decreasing boundaries within [0, U]."""
@@ -282,6 +308,15 @@ class HsflProblem:
         Built once per (problem instance, resolved backend): BCD's
         repeated MS solves share one latency-table build.  Results are
         bit-identical across backends and to the scalar walk.
+
+        The memo assumes a frozen problem — which holds for the static
+        latency models (``TraceLatency``/``DeadlineLatency`` never mutate
+        after construction).  A *mutable* model (the controller's
+        ``WindowedLatency``, whose tables change every observed round)
+        must advertise a monotone ``version`` attribute: the memo stores
+        the version the tables were built against and rebuilds when it
+        has moved, so a mid-run control step never reads stale split/agg
+        tables.  Models without ``version`` keep the frozen fast path.
         """
         from .batched import BatchedEvaluator, resolve_backend
 
@@ -289,11 +324,28 @@ class HsflProblem:
             backend,
             work_elems=self.cut_lattice().shape[0] * self.system.num_clients,
         )
+        token = getattr(self.latency_model, "version", None)
         cache = self.__dict__.setdefault("_evaluator_cache", {})
-        ev = cache.get(be)
-        if ev is None:
-            ev = cache[be] = BatchedEvaluator(self, backend=be)
+        hit = cache.get(be)
+        if hit is not None and hit[1] == token:
+            return hit[0]
+        ev = BatchedEvaluator(self, backend=be)
+        cache[be] = (ev, token)
         return ev
+
+    def invalidate_caches(self) -> None:
+        """Explicitly drop the memoized lattice and evaluator tables.
+
+        For callers that replace or mutate the attached system/latency
+        model in place and cannot (or do not want to) rely on the
+        ``version`` protocol above — after this, the next ``evaluator()``
+        or ``cut_lattice()`` call rebuilds from the live model.
+        """
+        self.__dict__.pop("_evaluator_cache", None)
+        self.__dict__.pop("_lattice_cache", None)
+        self.__dict__.pop("_constants_cache", None)
+        self.__dict__.pop("_tier_d_cache", None)
+        self.__dict__.pop("_memory_cache", None)
 
     def iter_cut_vectors(
         self, min_tier_units: int = 1

@@ -148,7 +148,8 @@ def simulate_lattice_rounds(
     be = _resolve_backend(backend)
     R = trace.rounds if rounds is None else min(rounds, trace.rounds)
     system, profile = trace.system, trace.profile
-    M, N, K = system.M, system.num_clients, lattice.shape[0]
+    M = system.M
+    K = lattice.shape[0]
     works = split_work_tensor(profile, lattice, trace.compression)   # [K, S]
     lam = model_bits_lattice(profile, lattice, trace.compression)    # [K, M-1]
     meta = stage_meta(M)
@@ -157,62 +158,91 @@ def simulate_lattice_rounds(
     agg = np.zeros((K, M - 1, R))
     for r in range(R):
         state = trace.round_state(r)
-        rates = []
-        for kind, idx in meta:
-            if kind in ("compute_fwd", "compute_bwd"):
-                rates.append(system.compute[idx] * state.compute_mult[idx])
-            elif kind == "uplink":
-                rates.append(system.act_up[idx] * state.link_up_mult[idx])
-            else:
-                rates.append(system.act_down[idx] * state.link_down_mult[idx])
-        avail = state.available
-        part = None  # [K, N] per-row participants (deadline pricing only)
-        if not avail.any():
-            pass  # a round with zero participants has split 0 (events.py)
-        elif be == "jax":
-            with enable_x64():
-                t = jnp.zeros((K, N))
-                for s, rt in enumerate(rates):
-                    t = t + jnp.asarray(works[:, s])[:, None] / jnp.asarray(rt)[None, :]
-                av = jnp.asarray(avail)
-                masked = jnp.where(av, t, -jnp.inf)
-                top = jnp.max(masked, axis=1)
-                if deadline is not None:
-                    d_eff = jnp.maximum(
-                        deadline, jnp.min(jnp.where(av, t, jnp.inf), axis=1)
-                    )
-                    part = np.asarray(av[None, :] & (t <= d_eff[:, None]))
-                    top = jnp.minimum(d_eff, top)
-                split[:, r] = np.asarray(top)
-        else:
-            t = np.zeros((K, N))
-            for s, rt in enumerate(rates):
-                t = t + works[:, s][:, None] / rt[None, :]
-            top = t[:, avail].max(axis=1)
-            if deadline is not None:
-                d_eff = np.maximum(deadline, t[:, avail].min(axis=1))
-                part = avail[None, :] & (t <= d_eff[:, None])
-                top = np.minimum(d_eff, top)
-            split[:, r] = top
-        for m in range(M - 1):
-            if system.entities[m] <= 1:
-                continue
-            up_rate = system.model_up[m] * state.fed_up_mult[m]
-            down_rate = system.model_down[m] * state.fed_down_mult[m]
-            up = lam[:, m][:, None] / up_rate[None, :]
-            down = lam[:, m][:, None] / down_rate[None, :]
-            if up.shape[1] == N:  # clients host tier m: absent ones don't sync
-                if part is not None:
-                    any_part = part.any(axis=1)
-                    up_m = np.where(part, up, -np.inf).max(axis=1)
-                    down_m = np.where(part, down, -np.inf).max(axis=1)
-                    agg[:, m, r] = np.where(any_part, up_m + down_m, 0.0)
-                    continue
-                up, down = up[:, avail], down[:, avail]
-                if up.shape[1] == 0:
-                    continue
-            agg[:, m, r] = up.max(axis=1) + down.max(axis=1)
+        split[:, r], agg[:, :, r] = price_lattice_round(
+            system, works, lam, meta, state, deadline=deadline, backend=be
+        )
     return split, agg
+
+
+def price_lattice_round(
+    system,
+    works: np.ndarray,
+    lam: np.ndarray,
+    meta,
+    state,
+    deadline: Optional[float] = None,
+    backend: str = "auto",
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Price one round's ``RoundState`` against a whole cut lattice:
+    returns (split ``[K]``, agg ``[K, M-1]``).
+
+    The single per-round pricing kernel behind ``simulate_lattice_rounds``
+    — also consumed incrementally by the adaptive controller's windowed
+    system estimate (``repro.control.window.WindowedLatency``), which is
+    what makes the windowed tables bit-identical to ``TraceLatency`` over
+    the same states.  ``works``/``lam``/``meta`` are the precomputed
+    ``core.batched`` tensors for the lattice.
+    """
+    be = _resolve_backend(backend)
+    M, N, K = system.M, system.num_clients, works.shape[0]
+    split_col = np.zeros(K)
+    agg_col = np.zeros((K, M - 1))
+    rates = []
+    for kind, idx in meta:
+        if kind in ("compute_fwd", "compute_bwd"):
+            rates.append(system.compute[idx] * state.compute_mult[idx])
+        elif kind == "uplink":
+            rates.append(system.act_up[idx] * state.link_up_mult[idx])
+        else:
+            rates.append(system.act_down[idx] * state.link_down_mult[idx])
+    avail = state.available
+    part = None  # [K, N] per-row participants (deadline pricing only)
+    if not avail.any():
+        pass  # a round with zero participants has split 0 (events.py)
+    elif be == "jax":
+        with enable_x64():
+            t = jnp.zeros((K, N))
+            for s, rt in enumerate(rates):
+                t = t + jnp.asarray(works[:, s])[:, None] / jnp.asarray(rt)[None, :]
+            av = jnp.asarray(avail)
+            masked = jnp.where(av, t, -jnp.inf)
+            top = jnp.max(masked, axis=1)
+            if deadline is not None:
+                d_eff = jnp.maximum(
+                    deadline, jnp.min(jnp.where(av, t, jnp.inf), axis=1)
+                )
+                part = np.asarray(av[None, :] & (t <= d_eff[:, None]))
+                top = jnp.minimum(d_eff, top)
+            split_col[:] = np.asarray(top)
+    else:
+        t = np.zeros((K, N))
+        for s, rt in enumerate(rates):
+            t = t + works[:, s][:, None] / rt[None, :]
+        top = t[:, avail].max(axis=1)
+        if deadline is not None:
+            d_eff = np.maximum(deadline, t[:, avail].min(axis=1))
+            part = avail[None, :] & (t <= d_eff[:, None])
+            top = np.minimum(d_eff, top)
+        split_col[:] = top
+    for m in range(M - 1):
+        if system.entities[m] <= 1:
+            continue
+        up_rate = system.model_up[m] * state.fed_up_mult[m]
+        down_rate = system.model_down[m] * state.fed_down_mult[m]
+        up = lam[:, m][:, None] / up_rate[None, :]
+        down = lam[:, m][:, None] / down_rate[None, :]
+        if up.shape[1] == N:  # clients host tier m: absent ones don't sync
+            if part is not None:
+                any_part = part.any(axis=1)
+                up_m = np.where(part, up, -np.inf).max(axis=1)
+                down_m = np.where(part, down, -np.inf).max(axis=1)
+                agg_col[:, m] = np.where(any_part, up_m + down_m, 0.0)
+                continue
+            up, down = up[:, avail], down[:, avail]
+            if up.shape[1] == 0:
+                continue
+        agg_col[:, m] = up.max(axis=1) + down.max(axis=1)
+    return split_col, agg_col
 
 
 def simulate_rounds(

@@ -217,29 +217,44 @@ def flaky_wan(
     jitter_sigma: float = 0.25,
     outage_p: float = 0.05,
     outage_mult: float = 0.1,
+    outage_len: int = 1,
 ) -> SystemTrace:
     """Per-round WAN weather: lognormal jitter on every link, plus rare deep
-    outages that cut a link to ``outage_mult`` of nominal for the round."""
+    outages that cut a link to ``outage_mult`` of nominal for the round.
+
+    ``outage_len > 1`` makes outages *persistent weather*: the outage
+    indicators are drawn once per block of ``outage_len`` consecutive
+    rounds (jitter stays per-round), so a hit link stays degraded long
+    enough for a sliding-window estimate to see it — the regime the
+    adaptive controller (``repro.control``) exploits.  The default
+    ``outage_len=1`` reproduces the original per-round-iid stream
+    bit-for-bit.
+    """
     N, M = system.num_clients, system.M
     tag = _TAGS["flaky-wan"]
     base = _ones_state(system)
 
-    def link(rng: np.random.Generator, n: int) -> np.ndarray:
+    def link(rng: np.random.Generator, n: int,
+             orng: Optional[np.random.Generator] = None) -> np.ndarray:
         mult = np.exp(rng.normal(0.0, jitter_sigma, n))
-        return np.where(rng.random(n) < outage_p, mult * outage_mult, mult)
+        hit = (orng if orng is not None else rng).random(n) < outage_p
+        return np.where(hit, mult * outage_mult, mult)
 
     def gen(r: int) -> RoundState:
         rng = _rng(seed, r, tag)
+        # block stream for persistent outages; same draw order as the
+        # per-round calls below, so every round of a block sees one weather
+        orng = None if outage_len <= 1 else _rng(seed, r // outage_len, tag + 16)
         return RoundState(
             available=base.available,
             compute_mult=base.compute_mult,
-            link_up_mult=tuple(link(rng, N) for _ in range(M - 1)),
-            link_down_mult=tuple(link(rng, N) for _ in range(M - 1)),
+            link_up_mult=tuple(link(rng, N, orng) for _ in range(M - 1)),
+            link_down_mult=tuple(link(rng, N, orng) for _ in range(M - 1)),
             fed_up_mult=tuple(
-                link(rng, len(system.model_up[m])) for m in range(M - 1)
+                link(rng, len(system.model_up[m]), orng) for m in range(M - 1)
             ),
             fed_down_mult=tuple(
-                link(rng, len(system.model_down[m])) for m in range(M - 1)
+                link(rng, len(system.model_down[m]), orng) for m in range(M - 1)
             ),
         )
 

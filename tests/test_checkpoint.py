@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.checkpoint import check_schedule_meta, load_checkpoint, save_checkpoint
 
 
 def tree(key=0):
@@ -41,6 +41,63 @@ def test_shape_mismatch_fails(tmp_path):
     p = str(tmp_path / "ck.npz")
     save_checkpoint(p, {"a": jnp.ones(3)}, step=1)
     with pytest.raises(ValueError):
+        load_checkpoint(p, {"a": jnp.ones(4)})
+
+
+# --------------------------------------------------------------------------- #
+# schedule-metadata verification (resume under a moved cut vector)
+# --------------------------------------------------------------------------- #
+
+
+def test_resume_with_matching_schedule_loads(tmp_path):
+    t = tree()
+    p = str(tmp_path / "ck.npz")
+    save_checkpoint(p, t, step=7, meta={"cuts": [3, 8], "intervals": [4, 2, 1]})
+    t2, step, meta = load_checkpoint(
+        p, tree(key=1), expect_cuts=(3, 8), expect_intervals=(4, 2, 1)
+    )
+    assert step == 7 and meta["cuts"] == [3, 8]
+    for a, b in zip(jax.tree.leaves(t2), jax.tree.leaves(t)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resume_with_changed_cuts_fails_loudly(tmp_path):
+    """A cut vector that moved between save and resume must not load —
+    Engine A leaves are shape-compatible across cuts, so only the
+    metadata check can catch the silent tier mis-assignment."""
+    p = str(tmp_path / "ck.npz")
+    save_checkpoint(p, tree(), step=3, meta={"cuts": [3, 8], "intervals": [4, 2, 1]})
+    with pytest.raises(ValueError, match="migrate the tier assignment"):
+        load_checkpoint(p, tree(), expect_cuts=(2, 7))
+    with pytest.raises(ValueError, match="migrate the tier assignment"):
+        load_checkpoint(
+            p, tree(), expect_cuts=(3, 8), expect_intervals=(8, 2, 1)
+        )
+
+
+def test_expectation_against_missing_meta_fails(tmp_path):
+    p = str(tmp_path / "ck.npz")
+    save_checkpoint(p, tree(), step=1)  # no schedule metadata at all
+    with pytest.raises(ValueError, match="no 'cuts' metadata"):
+        load_checkpoint(p, tree(), expect_cuts=(3, 8))
+    # without the expectation the same checkpoint loads fine
+    _, step, _ = load_checkpoint(p, tree())
+    assert step == 1
+
+
+def test_check_schedule_meta_direct():
+    check_schedule_meta({"cuts": [3, 8]}, expect_cuts=(3, 8))
+    check_schedule_meta({"cuts": [3, 8]})  # no expectation -> no-op
+    with pytest.raises(ValueError, match="cuts"):
+        check_schedule_meta({"cuts": [3, 8]}, expect_cuts=(1, 2))
+
+
+def test_shape_mismatch_hint_mentions_expect_cuts(tmp_path):
+    """When schedule metadata is present, a shape mismatch points the user
+    at the expect_cuts= guard."""
+    p = str(tmp_path / "ck.npz")
+    save_checkpoint(p, {"a": jnp.ones(3)}, step=1, meta={"cuts": [2, 5]})
+    with pytest.raises(ValueError, match="pass expect_cuts="):
         load_checkpoint(p, {"a": jnp.ones(4)})
 
 

@@ -1,0 +1,742 @@
+"""Online adaptive control loop (DESIGN.md §13).
+
+Contracts pinned here:
+
+* ``WindowedLatency`` fed W ``RoundState``s is BIT-EXACT with a
+  ``TraceLatency`` built over a trace of exactly those rounds (scalar and
+  batch protocols), and the ring buffer keeps exactly the last W rounds;
+* ``observe_round`` → ``reconstruct_state`` round-trips the fleet state:
+  the window priced from reconstructed telemetry matches the window
+  priced from the ground-truth states to float round-off, and absent
+  clients report NaN durations;
+* ``HsflProblem.evaluator`` rebuilds its memoized ``BatchedEvaluator``
+  when the windowed model's ``version`` moves (the stale-table bugfix)
+  and ``invalidate_caches`` drops it explicitly;
+* ``piecewise_bound`` with one segment is bit-identical to
+  ``theorem1_bound``; a constant-schedule split matches the static bound;
+  mixed segments interpolate the per-schedule penalties, and the
+  ε-progress ledger reproduces Corollary 1 for static schedules;
+* warm-started BCD on the windowed problem finds the identical optimum a
+  cold trace re-price + from-scratch solve finds;
+* state migration (Engines A and B) preserves the global client-mean
+  iterate and carries momentum/Adam moments through the same re-grouping;
+  ``resume_with_migration`` applies it on checkpoint cut mismatch;
+* ``Controller`` gating: min-window, cooldown, max-switches, and the
+  no-drift fast path never fire the solver; real drift does;
+* ``ControlCfg`` validation + spec JSON roundtrip, and the ``control``
+  run mode end-to-end (slow).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.vgg16_cifar10 import SPEC as VGG
+from repro.control import (
+    BoundSegment,
+    Controller,
+    WindowedLatency,
+    migrate_params_a,
+    migrate_state,
+    migrate_state_a,
+    migrate_state_b,
+    observe_round,
+    piecewise_bound,
+    progress_per_round,
+    progress_target,
+    reconstruct_state,
+    resume_with_migration,
+)
+from repro.core import (
+    HsflProblem,
+    SystemSpec,
+    build_profile,
+    solve_bcd,
+    synthetic_hyperspec,
+    theorem1_bound,
+)
+from repro.core.convergence import corollary1_rounds
+from repro.core.tiers import default_plan
+from repro.sim import TraceLatency, make_trace
+from repro.sim.scenarios import SystemTrace
+
+CUTS = (3, 8)
+
+
+def small_problem(seed=0, num_clients=8, num_edges=2):
+    prof = build_profile(VGG, batch=2)
+    system = SystemSpec.paper_three_tier(
+        num_clients=num_clients, num_edges=num_edges, seed=seed
+    )
+    hp = synthetic_hyperspec(VGG.n_units, num_clients, seed=seed)
+    eps = theorem1_bound(hp, 500, (2, 2, 1), CUTS)
+    return HsflProblem(prof, system, hp, eps)
+
+
+def windowed(problem, trace, rounds, window=None, quantile=0.5):
+    win = WindowedLatency(
+        problem.profile, problem.system, problem.cut_lattice(),
+        window=window or rounds, quantile=quantile,
+    )
+    for r in range(rounds):
+        win.push(trace.round_state(r))
+    return win
+
+
+# --------------------------------------------------------------------------- #
+# windowed system estimate
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("scenario", ["flaky-wan", "diurnal-churn"])
+def test_windowed_bit_exact_vs_trace_latency(scenario):
+    """The online window fed the same RoundStates as an offline trace
+    prices the whole lattice bit-identically (batch and scalar paths)."""
+    p = small_problem()
+    trace = make_trace(scenario, p.profile, p.system, rounds=6, seed=1)
+    win = windowed(p, trace, 6)
+    tl = TraceLatency(trace, quantile=0.5, backend="numpy")
+    lat = p.cut_lattice()
+    np.testing.assert_array_equal(win.split_T_batch(lat), tl.split_T_batch(lat))
+    np.testing.assert_array_equal(win.agg_T_batch(lat), tl.agg_T_batch(lat))
+    for k in (0, len(lat) // 2, len(lat) - 1):
+        cuts = tuple(int(c) for c in lat[k])
+        assert win.split_T(cuts) == tl.split_T(cuts)
+        for m in range(p.M - 1):
+            assert win.agg_T(cuts, m) == tl.agg_T(cuts, m)
+
+
+def test_window_keeps_exactly_last_w_rounds():
+    """Pushing T > W rounds leaves the tables of the last W alone — the
+    ring buffer ages old rounds out bit-exactly."""
+    p = small_problem()
+    trace = make_trace("flaky-wan", p.profile, p.system, rounds=7, seed=2)
+    win = windowed(p, trace, 7, window=4)
+    fresh = WindowedLatency(
+        p.profile, p.system, p.cut_lattice(), window=4, quantile=0.5
+    )
+    for r in range(3, 7):
+        fresh.push(trace.round_state(r))
+    lat = p.cut_lattice()
+    assert win.n_obs == fresh.n_obs == 4
+    np.testing.assert_array_equal(
+        win.split_T_batch(lat), fresh.split_T_batch(lat)
+    )
+    np.testing.assert_array_equal(win.agg_T_batch(lat), fresh.agg_T_batch(lat))
+    assert len(win.states()) == 4
+    assert all(
+        np.array_equal(a.available, b.available)
+        for a, b in zip(win.states(), [trace.round_state(r) for r in range(3, 7)])
+    )
+
+
+def test_windowed_guards():
+    p = small_problem()
+    win = WindowedLatency(
+        p.profile, p.system, p.cut_lattice(), window=4, quantile=0.5
+    )
+    with pytest.raises(ValueError, match="no observed rounds"):
+        win.split_T(CUTS)
+    with pytest.raises(ValueError, match="window must be"):
+        WindowedLatency(p.profile, p.system, p.cut_lattice(), window=0)
+    trace = make_trace("flaky-wan", p.profile, p.system, rounds=1, seed=0)
+    win.push(trace.round_state(0))
+    with pytest.raises(KeyError, match="not on the priced lattice"):
+        win.split_T((0, 0))
+    with pytest.raises(ValueError, match="lattice mismatch"):
+        win.split_T_batch(p.cut_lattice()[:3])
+
+
+# --------------------------------------------------------------------------- #
+# telemetry
+# --------------------------------------------------------------------------- #
+
+
+def test_telemetry_reconstruction_roundtrip():
+    """Windows priced from reconstructed telemetry match windows priced
+    from ground-truth states to float round-off, and absent clients
+    report NaN durations."""
+    p = small_problem()
+    trace = make_trace(
+        "diurnal-churn", p.profile, p.system, rounds=8, seed=3, p_min=0.4
+    )
+    truth = WindowedLatency(
+        p.profile, p.system, p.cut_lattice(), window=8, quantile=0.5
+    )
+    recon = WindowedLatency(
+        p.profile, p.system, p.cut_lattice(), window=8, quantile=0.5
+    )
+    saw_absent = False
+    for r in range(8):
+        state = trace.round_state(r)
+        obs = observe_round(trace, r, CUTS)
+        absent = ~state.available
+        if absent.any():
+            saw_absent = True
+            for d in obs.stage_durations:
+                assert np.isnan(d[absent]).all()
+        truth.push(state)
+        recon.push(reconstruct_state(obs, p.profile, p.system))
+    assert saw_absent, "scenario never dropped a client; test is vacuous"
+    lat = p.cut_lattice()
+    np.testing.assert_allclose(
+        recon.split_T_batch(lat), truth.split_T_batch(lat), rtol=1e-9
+    )
+    np.testing.assert_allclose(
+        recon.agg_T_batch(lat), truth.agg_T_batch(lat), rtol=1e-9
+    )
+
+
+def test_observation_carries_mask_and_loss():
+    p = small_problem()
+    trace = make_trace("flaky-wan", p.profile, p.system, rounds=2, seed=0)
+    mask = np.zeros(p.system.num_clients, dtype=bool)
+    mask[::2] = True
+    obs = observe_round(trace, 0, CUTS, mask=mask, loss=1.5)
+    assert obs.loss == 1.5
+    np.testing.assert_array_equal(obs.mask, mask)
+    win = WindowedLatency(
+        p.profile, p.system, p.cut_lattice(), window=2, quantile=0.5
+    )
+    win.push(reconstruct_state(obs, p.profile, p.system), mask=obs.mask)
+    q = win.q_tiers()
+    assert q[0] == 0.5  # half the clients made the round
+    assert q[-1] == 1.0  # the cloud tier always has its single entity
+
+
+# --------------------------------------------------------------------------- #
+# evaluator cache invalidation (the satellite bugfix)
+# --------------------------------------------------------------------------- #
+
+
+def test_evaluator_rebuilds_when_window_moves():
+    p = small_problem()
+    trace = make_trace("flaky-wan", p.profile, p.system, rounds=4, seed=1)
+    win = windowed(p, trace, 2, window=4)
+    wp = dataclasses.replace(p, latency_model=win)
+    ev1 = wp.evaluator("numpy")
+    assert wp.evaluator("numpy") is ev1  # stable version -> cached
+    win.push(trace.round_state(2))
+    ev2 = wp.evaluator("numpy")
+    assert ev2 is not ev1  # version moved -> rebuilt
+    assert wp.evaluator("numpy") is ev2
+    wp.invalidate_caches()
+    assert wp.evaluator("numpy") is not ev2  # explicit drop -> rebuilt
+
+
+def test_evaluator_tables_track_the_window():
+    """The rebuilt evaluator must price the *current* window — solving
+    against a stale table is the bug the version token fixes."""
+    p = small_problem()
+    trace = make_trace("flaky-wan", p.profile, p.system, rounds=6, seed=1)
+    win = windowed(p, trace, 3, window=3)
+    wp = dataclasses.replace(p, latency_model=win)
+    wp.evaluator("numpy")
+    before = win.split_T_batch(p.cut_lattice()).copy()
+    for r in range(3, 6):
+        win.push(trace.round_state(r))
+    after_tables = win.split_T_batch(p.cut_lattice())
+    assert not np.array_equal(before, after_tables)
+    ev = wp.evaluator("numpy")
+    # the evaluator's pricing of the lattice matches the live window
+    res_win = solve_bcd(wp, backend="numpy")
+    fresh = dataclasses.replace(p, latency_model=win)
+    res_fresh = solve_bcd(fresh, backend="numpy")
+    assert (res_win.cuts, tuple(res_win.intervals)) == (
+        res_fresh.cuts, tuple(res_fresh.intervals),
+    )
+    assert ev is wp.evaluator("numpy")
+
+
+# --------------------------------------------------------------------------- #
+# piecewise Theorem 1
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("schedule", [
+    ((1, 1, 1), (3, 8), 10),
+    ((4, 2, 1), (3, 8), 200),
+    ((2, 5, 1), (5, 9), 1000),
+])
+def test_single_segment_collapses_bit_exact(schedule):
+    intervals, cuts, R = schedule
+    hp = synthetic_hyperspec(VGG.n_units, 8, seed=0)
+    seg = BoundSegment(R, intervals, cuts)
+    assert piecewise_bound(hp, [seg]) == theorem1_bound(hp, R, intervals, cuts)
+
+
+def test_constant_schedule_split_matches_static():
+    """Splitting a static run into segments at arbitrary points must not
+    change the bound (same schedule everywhere)."""
+    hp = synthetic_hyperspec(VGG.n_units, 8, seed=1)
+    static = theorem1_bound(hp, 300, (4, 2, 1), CUTS)
+    segs = [
+        BoundSegment(120, (4, 2, 1), CUTS),
+        BoundSegment(30, (4, 2, 1), CUTS),
+        BoundSegment(150, (4, 2, 1), CUTS),
+    ]
+    np.testing.assert_allclose(piecewise_bound(hp, segs), static, rtol=1e-12)
+
+
+def test_mixed_segments_interpolate_penalties():
+    """The composed bound lies between the static bounds of its schedules
+    (term1 is shared; term2+term3 is a convex combination)."""
+    hp = synthetic_hyperspec(VGG.n_units, 8, seed=2)
+    R = 400
+    lo_sched, hi_sched = (1, 1, 1), (8, 4, 1)
+    lo = theorem1_bound(hp, R, lo_sched, CUTS)
+    hi = theorem1_bound(hp, R, hi_sched, CUTS)
+    mixed = piecewise_bound(hp, [
+        BoundSegment(250, lo_sched, CUTS),
+        BoundSegment(150, hi_sched, CUTS),
+    ])
+    assert min(lo, hi) <= mixed <= max(lo, hi)
+    with pytest.raises(ValueError, match="at least one segment"):
+        piecewise_bound(hp, [])
+    with pytest.raises(ValueError, match="positive"):
+        BoundSegment(0, (1, 1, 1), CUTS)
+
+
+def test_progress_ledger_reproduces_corollary1():
+    """Constant per-round progress crosses the 2θ0/γ target at exactly
+    Corollary 1's round count (static schedule, any participation)."""
+    hp = synthetic_hyperspec(VGG.n_units, 8, seed=3)
+    eps = theorem1_bound(hp, 500, (2, 2, 1), CUTS)
+    for part in (None, 0.7):
+        d = progress_per_round(hp, eps, (2, 2, 1), CUTS, participation=part)
+        r_corollary = corollary1_rounds(
+            hp, eps, (2, 2, 1), CUTS, participation=part
+        )
+        np.testing.assert_allclose(
+            progress_target(hp) / d, r_corollary, rtol=1e-12
+        )
+
+
+# --------------------------------------------------------------------------- #
+# warm re-solve == cold re-price + solve
+# --------------------------------------------------------------------------- #
+
+
+def test_warm_resolve_matches_cold_from_scratch():
+    """The control-step path (memoized windowed tables + warm-seeded BCD) and
+    the naive path (re-simulate the window into a TraceLatency, solve
+    from the default anchor) find the identical optimum."""
+    p = small_problem()
+    trace = make_trace("flaky-wan", p.profile, p.system, rounds=8, seed=4)
+    win = windowed(p, trace, 8)
+    wp = dataclasses.replace(p, latency_model=win)
+    anchor = solve_bcd(wp, backend="numpy")
+    # warm-seed from a deliberately perturbed schedule
+    init_i = tuple(max(1, i - 1) for i in anchor.intervals)
+    warm = solve_bcd(
+        wp, init_cuts=anchor.cuts, init_intervals=init_i,
+        backend="numpy", warm_start=True,
+    )
+    states = list(win.states())
+    mini = SystemTrace("window", p.profile, p.system, 8, 0, lambda r: states[r])
+    cold = solve_bcd(
+        dataclasses.replace(
+            p, latency_model=TraceLatency(mini, quantile=0.5, backend="numpy")
+        ),
+        backend="numpy",
+    )
+    assert (warm.cuts, tuple(warm.intervals)) == (cold.cuts, tuple(cold.intervals))
+    np.testing.assert_allclose(warm.theta, cold.theta, rtol=1e-12)
+
+
+# --------------------------------------------------------------------------- #
+# state migration
+# --------------------------------------------------------------------------- #
+
+N_MIG, U_MIG = 4, 6
+
+
+def _stacked(key, N=N_MIG, U=U_MIG, d=4):
+    ks = jax.random.split(key, 3)
+    return {
+        "frontend": {"embed": jax.random.normal(ks[0], (N, 8, d))},
+        "units": {"w": jax.random.normal(ks[1], (N, U, d, d))},
+        "head": {"norm": jax.random.normal(ks[2], (N, d))},
+    }
+
+
+def _client_mean(tree):
+    return jax.tree.map(lambda x: np.asarray(jnp.mean(x, axis=0)), tree)
+
+
+def _plan(cuts, intervals=(2, 2, 1)):
+    return default_plan(
+        U_MIG, N_MIG, cuts=cuts, intervals=intervals, entities=(N_MIG, 2, 1)
+    )
+
+
+def test_migrate_a_preserves_client_mean_and_is_idempotent():
+    params = _stacked(jax.random.PRNGKey(0))
+    new_plan = _plan((1, 4))
+    out = migrate_params_a(params, new_plan)
+    for a, b in zip(
+        jax.tree.leaves(_client_mean(out)), jax.tree.leaves(_client_mean(params))
+    ):
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+    # re-applying the same plan's consistency op changes nothing (group
+    # sizes are powers of two, so the means are exact)
+    again = migrate_params_a(out, new_plan)
+    for a, b in zip(jax.tree.leaves(again), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("opt_name", ["sgd", "momentum", "adam"])
+def test_migrate_a_carries_optimizer_moments(opt_name):
+    from repro.core.engine import TrainState
+    from repro.optim import adam, momentum, sgd
+
+    opt = {"sgd": sgd, "momentum": momentum, "adam": adam}[opt_name](1e-2)
+    params = _stacked(jax.random.PRNGKey(1))
+    if opt_name == "sgd":
+        opt_state = ()
+    elif opt_name == "momentum":
+        opt_state = _stacked(jax.random.PRNGKey(2))
+    else:
+        opt_state = {
+            "m": _stacked(jax.random.PRNGKey(3)),
+            "v": jax.tree.map(jnp.abs, _stacked(jax.random.PRNGKey(4))),
+            "t": jnp.asarray(5, jnp.int32),
+        }
+    state = TrainState(params=params, opt_state=opt_state, step=7)
+    new_plan = _plan((2, 3))
+    out = migrate_state_a(state, new_plan, opt)
+    assert out.step == 7
+    for leaf_a, leaf_b in zip(
+        jax.tree.leaves(out.params),
+        jax.tree.leaves(migrate_params_a(params, new_plan)),
+    ):
+        np.testing.assert_array_equal(np.asarray(leaf_a), np.asarray(leaf_b))
+    if opt_name == "momentum":
+        for leaf_a, leaf_b in zip(
+            jax.tree.leaves(out.opt_state),
+            jax.tree.leaves(migrate_params_a(opt_state, new_plan)),
+        ):
+            np.testing.assert_array_equal(np.asarray(leaf_a), np.asarray(leaf_b))
+    elif opt_name == "adam":
+        for key in ("m", "v"):
+            for leaf_a, leaf_b in zip(
+                jax.tree.leaves(out.opt_state[key]),
+                jax.tree.leaves(migrate_params_a(opt_state[key], new_plan)),
+            ):
+                np.testing.assert_array_equal(
+                    np.asarray(leaf_a), np.asarray(leaf_b)
+                )
+        assert int(out.opt_state["t"]) == 5  # step counter untouched
+    else:
+        assert out.opt_state == ()
+
+
+def test_migrate_b_preserves_client_mean():
+    from repro.core.engine import engine_b_to_full, init_state_b
+    from repro.models.vgg import VggModel
+    from repro.optim import sgd
+
+    spec = dataclasses.replace(
+        VGG, conv_channels=(8, 16, 16), pool_after=(0, 1), fc_dims=(32, 10),
+        name="vgg-tiny",
+    )
+    model = VggModel(spec)
+    N = 4
+    plan1 = default_plan(
+        spec.n_units, N, cuts=(2, 3), intervals=(2, 1, 1), entities=(N, 2, 1)
+    )
+    plan2 = default_plan(
+        spec.n_units, N, cuts=(1, 4), intervals=(1, 2, 1), entities=(N, 2, 1)
+    )
+    opt = sgd(1e-2)
+    state = init_state_b(model, plan1, opt, jax.random.PRNGKey(0))
+    migrated = migrate_state_b(state, model, plan1, plan2, opt)
+    full_before = engine_b_to_full(model, plan1, state.params)
+    full_after = engine_b_to_full(model, plan2, migrated.params)
+    for a, b in zip(
+        jax.tree.leaves(_client_mean(full_after)),
+        jax.tree.leaves(_client_mean(full_before)),
+    ):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+    # dispatching wrapper demands the engine-b extras
+    with pytest.raises(ValueError, match="model and old_plan"):
+        migrate_state(state, plan2, opt, engine="b")
+
+
+def test_resume_with_migration(tmp_path):
+    from repro.checkpoint import save_checkpoint
+
+    params = _stacked(jax.random.PRNGKey(5))
+    path = str(tmp_path / "ck.npz")
+    save_checkpoint(path, params, step=3, meta={"cuts": [1, 4]})
+    same_plan = _plan((1, 4))
+    tree, step, meta = resume_with_migration(path, params, same_plan)
+    assert step == 3
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # a moved cut vector migrates instead of silently mis-partitioning
+    moved_plan = _plan((2, 3))
+    tree2, _, _ = resume_with_migration(path, params, moved_plan)
+    expect = migrate_params_a(
+        jax.tree.map(lambda x: jnp.asarray(np.asarray(x)), params), moved_plan
+    )
+    for a, b in zip(jax.tree.leaves(tree2), jax.tree.leaves(expect)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+# --------------------------------------------------------------------------- #
+# controller gating
+# --------------------------------------------------------------------------- #
+
+
+def _slowed(state, factor):
+    return dataclasses.replace(
+        state, compute_mult=tuple(c * factor for c in state.compute_mult)
+    )
+
+
+def test_controller_gates_and_drift_trigger():
+    p = small_problem()
+    res = solve_bcd(p, backend="numpy")
+    trace = make_trace("homogeneous-paper", p.profile, p.system, rounds=16, seed=0)
+    ctrl = Controller(
+        p, res.cuts, res.intervals,
+        window=4, min_window=4, cooldown=3, rel_tol=0.25, backend="numpy",
+    )
+    # 1) no-drift fast path: homogeneous telemetry matches nominal pricing
+    for r in range(6):
+        ctrl.observe(observe_round(trace, r, ctrl.cuts))
+        assert ctrl.maybe_replan(r) is None
+    assert ctrl.resolve_seconds == []  # the solver never ran
+    assert ctrl.windowed_problem().participation is None  # full availability
+
+    # 2) genuine drift (4x compute slowdown) fires exactly once, then the
+    #    cooldown and the re-anchored snapshot keep the solver quiet
+    slow = SystemTrace(
+        "slow", p.profile, p.system, 16, 0,
+        lambda r: _slowed(trace.round_state(r), 0.25),
+    )
+    dec = None
+    for r in range(6, 12):
+        ctrl.observe(observe_round(slow, r - 6, ctrl.cuts))
+        got = ctrl.maybe_replan(r)
+        if got is not None:
+            dec = got
+            break
+    assert dec is not None and "latency" in dec.trigger
+    assert dec.drift.split_rel > 0.25
+    assert len(ctrl.resolve_seconds) == 1
+    assert ctrl.decisions[-1] is dec
+    for r in range(dec.round_index + 1, dec.round_index + 1 + ctrl.cooldown):
+        ctrl.observe(observe_round(slow, r % 16, ctrl.cuts))
+        assert ctrl.maybe_replan(r) is None  # cooldown window
+    # post-cooldown the snapshot matches the window: still quiet
+    r = dec.round_index + 1 + ctrl.cooldown
+    ctrl.observe(observe_round(slow, r % 16, ctrl.cuts))
+    assert ctrl.maybe_replan(r) is None
+
+
+def test_controller_min_window_and_max_switches():
+    p = small_problem()
+    res = solve_bcd(p, backend="numpy")
+    trace = make_trace("homogeneous-paper", p.profile, p.system, rounds=8, seed=0)
+    slow = SystemTrace(
+        "slow", p.profile, p.system, 8, 0,
+        lambda r: _slowed(trace.round_state(r), 0.2),
+    )
+    ctrl = Controller(
+        p, res.cuts, res.intervals,
+        window=6, min_window=5, cooldown=0, rel_tol=0.25, backend="numpy",
+        max_switches=1,
+    )
+    for r in range(4):  # drifted telemetry, but the window is too thin
+        ctrl.observe(observe_round(slow, r, ctrl.cuts))
+        assert ctrl.maybe_replan(r) is None
+    ctrl.observe(observe_round(slow, 4, ctrl.cuts))
+    assert ctrl.maybe_replan(4) is not None  # min_window reached -> fires
+    # exhaust the switch budget: further drift must not re-solve
+    ctrl._n_switches = ctrl.max_switches
+    n_resolves = len(ctrl.resolve_seconds)
+    fast = SystemTrace(
+        "fast", p.profile, p.system, 8, 0,
+        lambda r: _slowed(trace.round_state(r), 4.0),
+    )
+    for r in range(5, 8):
+        ctrl.observe(observe_round(fast, r, ctrl.cuts))
+        assert ctrl.maybe_replan(r) is None
+    assert len(ctrl.resolve_seconds) == n_resolves
+
+
+# --------------------------------------------------------------------------- #
+# ControlCfg + the control run mode
+# --------------------------------------------------------------------------- #
+
+
+def test_controlcfg_validation_and_spec_roundtrip():
+    import json
+
+    from repro.api import ControlCfg, ExperimentSpec
+    from repro.api.spec import RunCfg, ScenarioCfg, SolverCfg
+
+    with pytest.raises(ValueError, match="window"):
+        ControlCfg(window=1)
+    with pytest.raises(ValueError, match="quantile"):
+        ControlCfg(quantile=0.0)
+    with pytest.raises(ValueError, match="rel_tol"):
+        ControlCfg(rel_tol=0.0)
+    with pytest.raises(ValueError, match="backend"):
+        ControlCfg(backend="cuda")
+    with pytest.raises(ValueError, match="mode"):
+        RunCfg(mode="adapt")
+
+    spec = ExperimentSpec(
+        name="ctrl",
+        scenario=ScenarioCfg(name="flaky-wan", rounds=8, quantile=0.5),
+        solver=SolverCfg(kind="fixed", cuts=(3, 8), intervals=(4, 2, 1)),
+        run=RunCfg(mode="control", rounds=4),
+        control=ControlCfg(window=4, min_window=4, rel_tol=0.1, cooldown=2),
+    )
+    back = ExperimentSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
+    assert back == spec
+    assert back.control == spec.control
+
+
+def test_control_mode_requires_scenario():
+    from repro.api import ControlCfg, ExperimentSpec, build
+    from repro.api.spec import RunCfg, SolverCfg
+
+    spec = ExperimentSpec(
+        solver=SolverCfg(kind="fixed", cuts=(3, 8), intervals=(4, 2, 1)),
+        run=RunCfg(mode="control", rounds=2),
+        control=ControlCfg(),
+    )
+    with pytest.raises(ValueError, match="scenario"):
+        build(spec)
+
+
+@pytest.mark.slow
+def test_control_mode_end_to_end():
+    """run(mode="control") trains, observes, (maybe) switches, and emits a
+    piecewise bound that collapses to the static bound when no switch
+    fires; the result survives the JSON roundtrip."""
+    import json
+
+    from repro.api import (
+        ControlCfg,
+        ExperimentResult,
+        ExperimentSpec,
+        run,
+    )
+    from repro.api.spec import ModelCfg, RunCfg, ScenarioCfg, SolverCfg, SystemCfg
+
+    spec = ExperimentSpec(
+        name="control-smoke",
+        model=ModelCfg(
+            arch="smollm-135m", variant="reduced", num_layers=6, batch=4, seq=32
+        ),
+        system=SystemCfg(
+            preset="paper-three-tier", num_clients=8, num_edges=4, seed=0
+        ),
+        scenario=ScenarioCfg(name="flaky-wan", rounds=16, seed=0, quantile=0.5),
+        solver=SolverCfg(kind="fixed", cuts=(2, 4), intervals=(4, 2, 1)),
+        run=RunCfg(mode="control", rounds=8, lr=0.1, log_every=0),
+        control=ControlCfg(window=4, min_window=4, cooldown=2, rel_tol=0.05,
+                           backend="numpy"),
+    )
+    res = run(spec)
+    ctrl = res.control
+    assert ctrl is not None
+    assert ctrl["rounds"] == 8 and len(ctrl["losses"]) == 8
+    assert np.isfinite(ctrl["final_loss"])
+    assert ctrl["n_resolves"] >= ctrl["n_switches"] >= 0
+    assert sum(s["rounds"] for s in ctrl["segments"]) == 8
+    assert np.isfinite(ctrl["piecewise_bound"])
+    if ctrl["n_switches"] == 0:
+        assert ctrl["piecewise_bound"] == ctrl["static_bound"]
+        assert len(ctrl["segments"]) == 1
+    else:
+        assert len(ctrl["switch_log"]) == ctrl["n_switches"]
+    back = ExperimentResult.from_dict(json.loads(json.dumps(res.to_dict())))
+    assert back.control["n_switches"] == ctrl["n_switches"]
+
+
+# --------------------------------------------------------------------------- #
+# the piecewise bound upper-envelopes a real migrated run
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.slow
+def test_piecewise_bound_upper_envelopes_masked_run():
+    """A real Engine-A masked training run that switches schedule mid-run:
+    the measured average ||grad f(w_bar)||^2 sits below the piecewise
+    Theorem-1 bound composed across the two segments (the bound_check
+    methodology, plus a migration at the switch point)."""
+    from repro.core import build_train_step_a, init_state_a
+    from repro.core.estimator import HyperEstimator
+    from repro.data import image_loader, make_cifar10_like, partition_iid
+    from repro.models.vgg import VggModel
+    from repro.optim import sgd
+
+    spec = dataclasses.replace(
+        VGG, conv_channels=(8, 16, 16), pool_after=(0, 1), fc_dims=(32, 10),
+        name="vgg-tiny",
+    )
+    N, gamma, seed = 4, 0.01, 3
+    r1, r2 = 8, 8
+    q = 0.75  # 3 of 4 clients make every round
+    sched1 = ((2, 3), (4, 1, 1))
+    sched2 = ((1, 3), (2, 1, 1))
+    ds = make_cifar10_like(256, noise=0.4, seed=seed)
+    loader = image_loader(
+        ds, partition_iid(len(ds), N, seed), batch=8, seed=seed
+    )
+    model = VggModel(spec)
+    opt = sgd(gamma)
+    eval_batch = {"images": jnp.asarray(ds.images[:192]),
+                  "labels": jnp.asarray(ds.labels[:192])}
+    gbar_fn = jax.jit(lambda p, b: jax.grad(model.loss_fn)(p, b))
+    grad_fn = jax.jit(
+        lambda p, b: jax.vmap(jax.value_and_grad(model.loss_fn))(p, b)
+    )
+
+    def plan_of(sched):
+        cuts, intervals = sched
+        return default_plan(
+            spec.n_units, N, cuts=cuts, intervals=intervals, entities=(N, 2, 1)
+        )
+
+    plan = plan_of(sched1)
+    state = init_state_a(model, plan, opt, jax.random.PRNGKey(seed))
+    step = jax.jit(build_train_step_a(model, plan, opt, with_mask=True))
+    est = HyperEstimator(spec.n_units, N, gamma)
+    sq_norms = []
+    for r in range(r1 + r2):
+        if r == r1:  # the control switch: migrate, re-jit
+            plan = plan_of(sched2)
+            state = migrate_state(state, plan, opt, engine="a")
+            step = jax.jit(build_train_step_a(model, plan, opt, with_mask=True))
+        mask = np.ones(N, np.float32)
+        mask[r % N] = 0.0  # rotating 3-of-4 participation
+        batch = {k: jnp.asarray(v) for k, v in loader.next_round().items()}
+        losses, grads = grad_fn(state.params, batch)
+        est.observe(state.params, grads, float(jnp.mean(losses)))
+        wbar = jax.tree.map(lambda x: jnp.mean(x, axis=0), state.params)
+        g = gbar_fn(wbar, eval_batch)
+        sq_norms.append(float(sum(jnp.sum(x * x) for x in jax.tree.leaves(g))))
+        state, _ = step(state, batch, jnp.asarray(mask))
+    hp = est.hyperspec()
+    measured = float(np.mean(sq_norms))
+    bound = piecewise_bound(hp, [
+        BoundSegment(r1, sched1[1], sched1[0], participation=q),
+        BoundSegment(r2, sched2[1], sched2[0], participation=q),
+    ])
+    assert measured <= bound, (measured, bound)
+    # and the composed bound is tighter than naively pricing the whole run
+    # at the worst segment's penalty
+    worst = max(
+        theorem1_bound(hp, r1 + r2, s[1], s[0], participation=q)
+        for s in (sched1, sched2)
+    )
+    assert bound <= worst + 1e-12

@@ -60,3 +60,112 @@ def test_estimator_requires_observations():
     est = HyperEstimator(4, 2, 1e-3)
     with pytest.raises(ValueError):
         est.hyperspec()
+
+
+# --------------------------------------------------------------------------- #
+# sliding-window mode (the adaptive controller's online estimator)
+# --------------------------------------------------------------------------- #
+
+
+def _round_trees(key, N=4, U=5, d=3):
+    """One round's (params, grads) client-stacked trees."""
+    kp, kg = jax.random.split(key)
+    mk = lambda k: {
+        "frontend": {"e": jax.random.normal(jax.random.fold_in(k, 0), (N, d))},
+        "units": {"w": jax.random.normal(jax.random.fold_in(k, 1), (N, U, d))},
+        "head": {"h": jax.random.normal(jax.random.fold_in(k, 2), (N, d))},
+    }
+    return mk(kp), mk(kg)
+
+
+def _feed(est, rounds, seed=0, loss_of=lambda t: 2.0 - 0.1 * t):
+    for t in rounds:
+        params, grads = _round_trees(jax.random.fold_in(jax.random.PRNGKey(seed), t))
+        est.observe(params, grads, loss_of(t))
+
+
+def test_window_wraps_to_exactly_last_w():
+    """A windowed estimator fed T > W rounds reports the same G2/sigma2/
+    theta0 as a fresh windowed estimator fed only the last W rounds —
+    stale rounds age out of the moment statistics bit-exactly.  beta is
+    the one one-sided quantity: the full stream also saw the ratio at the
+    window's left edge (against the pre-window round), so it can only be
+    >= the fresh estimate."""
+    T, W = 10, 4
+    full = HyperEstimator(5, 4, 1e-2, window=W)
+    _feed(full, range(T))
+    fresh = HyperEstimator(5, 4, 1e-2, window=W)
+    _feed(fresh, range(T - W, T))
+    hp_full, hp_fresh = full.hyperspec(), fresh.hyperspec()
+    np.testing.assert_array_equal(hp_full.G2, hp_fresh.G2)
+    np.testing.assert_array_equal(hp_full.sigma2, hp_fresh.sigma2)
+    assert hp_full.theta0 == hp_fresh.theta0
+    assert hp_full.beta >= hp_fresh.beta
+
+
+def test_window_requires_two_rounds():
+    with pytest.raises(ValueError, match="window must be >= 2"):
+        HyperEstimator(5, 4, 1e-2, window=1)
+
+
+def test_windowed_tracks_regime_change_unwindowed_averages():
+    """After a regime shift in gradient scale, the windowed G2 matches the
+    new regime exactly while the lifetime average sits in between."""
+    W = 3
+    win = HyperEstimator(5, 4, 1e-2, window=W)
+    life = HyperEstimator(5, 4, 1e-2)
+    scale_of = lambda t: 1.0 if t < 5 else 10.0
+    for t in range(8):
+        params, grads = _round_trees(jax.random.fold_in(jax.random.PRNGKey(7), t))
+        grads = jax.tree.map(lambda x: scale_of(t) * x, grads)
+        win.observe(params, grads, 2.0)
+        life.observe(params, grads, 2.0)
+    late = HyperEstimator(5, 4, 1e-2, window=W)
+    for t in range(5, 8):
+        params, grads = _round_trees(jax.random.fold_in(jax.random.PRNGKey(7), t))
+        grads = jax.tree.map(lambda x: 10.0 * x, grads)
+        late.observe(params, grads, 2.0)
+    np.testing.assert_array_equal(win.hyperspec().G2, late.hyperspec().G2)
+    assert np.all(life.hyperspec().G2 < win.hyperspec().G2)
+
+
+def test_constant_stream_converges_to_single_round_stats():
+    """A constant (params drifting, grads fixed) stream: windowed moments
+    equal the single round's values for any stream length, and beta hits
+    its floor (the mean gradient never moves)."""
+    params0, grads0 = _round_trees(jax.random.PRNGKey(11))
+    for est in (HyperEstimator(5, 4, 1e-2, window=3),
+                HyperEstimator(5, 4, 1e-2)):
+        for t in range(6):
+            params_t = jax.tree.map(lambda x: x + 0.1 * t, params0)
+            est.observe(params_t, grads0, 1.0)
+        hp = est.hyperspec()
+        one = HyperEstimator(5, 4, 1e-2)
+        one.observe(params0, grads0, 1.0)
+        hp1 = one.hyperspec()
+        np.testing.assert_allclose(hp.G2, hp1.G2, rtol=1e-6)
+        np.testing.assert_allclose(hp.sigma2, hp1.sigma2, rtol=1e-7, atol=1e-12)
+        assert hp.beta == 1e-3  # dg = 0 every step -> floor
+
+
+def test_client_duplication_invariance():
+    """Duplicating every client leaves G2/sigma2 unchanged (both are
+    client means; windowed and lifetime modes alike).  beta is out of
+    scope: its denominator is the global norm over the client stack, so
+    it scales with fleet size by construction."""
+    for window in (None, 4):
+        a = HyperEstimator(5, 4, 1e-2, window=window)
+        b = HyperEstimator(5, 8, 1e-2, window=window)
+        for t in range(5):
+            params, grads = _round_trees(jax.random.fold_in(jax.random.PRNGKey(3), t))
+            dup = lambda tree: jax.tree.map(
+                lambda x: jnp.concatenate([x, x], axis=0), tree
+            )
+            a.observe(params, grads, 1.0)
+            b.observe(dup(params), dup(grads), 1.0)
+        hp_a, hp_b = a.hyperspec(), b.hyperspec()
+        np.testing.assert_allclose(hp_b.G2, hp_a.G2, rtol=1e-6)
+        np.testing.assert_allclose(hp_b.sigma2, hp_a.sigma2, rtol=1e-6, atol=1e-12)
+        # beta's Δw norm runs over the stacked tree: doubling the fleet
+        # scales it by exactly sqrt(2) — a deterministic artifact, not noise
+        assert hp_b.beta == pytest.approx(hp_a.beta / np.sqrt(2.0), rel=1e-6)
