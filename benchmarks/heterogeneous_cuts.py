@@ -1,0 +1,162 @@
+"""Per-class cut assignment (DESIGN.md §14): heterogeneity pays, uniformity
+collapses.
+
+Three asserted claims:
+
+1. **Collapse** — on a homogeneous system (tpu-pod: every client identical)
+   the per-class BCD with C=2 classes must land on the single-cut BCD
+   optimum *bit-exactly*: same theta, every class on the same cuts, same
+   intervals.  Heterogeneity machinery must cost nothing when there is
+   no heterogeneity.
+
+2. **Strict improvement** — on the statically heterogeneous
+   ``lognormal-fleet`` system (per-device lognormal compute and link
+   multipliers; each device's fed link shares its access-link draw),
+   banding clients by fed-uplink rate and giving each band its own split
+   vector strictly lowers Θ′: the slow-link band pushes its cut earlier
+   (smaller fed payload on the bottleneck uplink) while only paying the
+   drift increase weighted by its class share.  Asserted: Θ′ is
+   non-increasing in C, C=1 equals the single-cut optimum bit-exactly,
+   and C=2 / C=4 are strictly below it.
+
+3. **Ragged wire** — mixed-cut client groups make the tier-aggregation
+   membership ragged (clients in one entity group disagree on which units
+   are client-side).  The ragged q8 fused kernel must be bit-exact vs the
+   tile-mirroring oracle for every (do_entity, do_global) flag combination,
+   and collapse bit-exactly to the dense q8 kernel under all-ones
+   membership.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from .common import emit, record
+
+
+# --------------------------------------------------------------------------- #
+# 1. homogeneous collapse: per-class == single-cut, bit-exact
+# --------------------------------------------------------------------------- #
+
+
+def collapse_case(quick: bool, seed: int) -> List[Tuple]:
+    from repro.api import ClassesCfg, run, tpu_pod_spec
+
+    base = tpu_pod_spec(seed=seed)
+    single = record(run(base))
+    N = 16  # tpu-pod preset client count
+    assign = tuple(i % 2 for i in range(N))
+    classy = record(run(base.replace(
+        name="tpu-pod-hetcuts-c2",
+        classes=ClassesCfg(num_classes=2, by="explicit", assign=assign),
+    )))
+
+    assert classy.theta == single.theta, (
+        "homogeneous per-class optimum must equal the single-cut optimum "
+        f"bit-exactly: {classy.theta} vs {single.theta}"
+    )
+    assert classy.intervals == single.intervals, (
+        f"intervals must collapse: {classy.intervals} vs {single.intervals}"
+    )
+    for c, cuts in enumerate(classy.classes["class_cuts"]):
+        assert tuple(cuts) == single.cuts, (
+            f"class {c} must land on the single-cut optimum: "
+            f"{cuts} vs {single.cuts}"
+        )
+    print(f"tpu-pod: C=2 collapses bit-exactly to single-cut "
+          f"theta {single.theta:.6f} at cuts {single.cuts} ✓")
+    return [
+        ("tpu-pod", "single", f"{single.theta:.6f}", str(single.cuts), ""),
+        ("tpu-pod", "C=2", f"{classy.theta:.6f}",
+         str(classy.classes["class_cuts"]), "+0.00%"),
+    ]
+
+
+# --------------------------------------------------------------------------- #
+# 2. lognormal-fleet: strict improvement from per-class cuts
+# --------------------------------------------------------------------------- #
+
+
+def improvement_case(quick: bool, seed: int) -> List[Tuple]:
+    from repro.api import hetcuts_spec, run
+
+    single = record(run(hetcuts_spec(num_classes=1, seed=seed)
+                        .replace(classes=None, name="lognormal-single")))
+    rows = [("lognormal-fleet", "single", f"{single.theta:.6f}",
+             str(single.cuts), "")]
+
+    prev = single.theta
+    thetas = {}
+    for C in (1, 2, 4):
+        res = record(run(hetcuts_spec(num_classes=C, seed=seed)))
+        thetas[C] = res.theta
+        gain = 100.0 * (single.theta - res.theta) / single.theta
+        rows.append((
+            "lognormal-fleet", f"C={C}", f"{res.theta:.6f}",
+            str(res.classes["class_cuts"]), f"{gain:+.2f}%",
+        ))
+        assert res.theta <= prev + 0.0, (
+            f"theta must be non-increasing in C: C={C} gives {res.theta} "
+            f"after {prev}"
+        )
+        prev = res.theta
+
+    assert thetas[1] == single.theta, (
+        "C=1 must collapse bit-exactly to the single-cut optimum: "
+        f"{thetas[1]} vs {single.theta}"
+    )
+    for C in (2, 4):
+        assert thetas[C] < single.theta, (
+            f"per-class cuts must strictly beat the best single cut on the "
+            f"lognormal fleet: C={C} gives {thetas[C]} vs single "
+            f"{single.theta}"
+        )
+    g2 = 100.0 * (single.theta - thetas[2]) / single.theta
+    g4 = 100.0 * (single.theta - thetas[4]) / single.theta
+    print(f"lognormal-fleet: single {single.theta:.1f} -> "
+          f"C=2 {thetas[2]:.1f} ({g2:+.2f}%), "
+          f"C=4 {thetas[4]:.1f} ({g4:+.2f}%) ✓")
+    return rows
+
+
+# --------------------------------------------------------------------------- #
+# 3. ragged q8 kernel: bit-exact vs oracle, dense collapse
+# --------------------------------------------------------------------------- #
+
+
+def ragged_kernel_case(quick: bool, seed: int) -> List[Tuple]:
+    from repro.kernels.tiered_aggregate.check import (
+        assert_ragged_q8_matches_oracle,
+    )
+
+    shapes = [(16, 4, 300, 128)]
+    if not quick:
+        shapes += [(8, 2, 1000, 128), (16, 16, 257, 128)]
+    for N, J, P, tile in shapes:
+        assert_ragged_q8_matches_oracle(N, J, P, tile, seed=seed)
+    print(f"ragged q8 kernel: {len(shapes)} shape(s) x 4 flag combos "
+          f"bit-exact vs oracle + dense collapse ✓")
+    return [
+        ("ragged-q8", f"N{N}xJ{J}xP{P}", "4", "flag-combos", "bit-exact")
+        for N, J, P, tile in shapes
+    ]
+
+
+def main(quick: bool = False, seed: int = 0) -> list:
+    rows = []
+    rows += collapse_case(quick, seed)
+    rows += improvement_case(quick, seed)
+    rows += ragged_kernel_case(quick, seed)
+    emit(rows, ("system", "arm", "theta", "cuts", "vs_single"))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    a = ap.parse_args()
+    main(a.quick, seed=a.seed)

@@ -25,6 +25,9 @@ Harness -> paper artifact map (details in DESIGN.md §7):
     control_drift         (ours)     online adaptive control: time-to-eps vs every
                                      static schedule on drifting fleets + warm
                                      re-solve latency (>=10x over cold)
+    heterogeneous_cuts    (ours)     per-class cut assignment: strict theta
+                                     improvement on the lognormal fleet, bit-exact
+                                     collapse when homogeneous, ragged q8 oracle
     compress_sweep        (ours)     compression ratio/omega priced through BCD,
                                      Thm 1 + the fused q8 kernel oracle
     participation_sweep   (ours)     straggler deadline: round-time vs
@@ -44,7 +47,8 @@ def _registry(args):
     from . import (
         ablations, bound_check, compress_sweep, control_drift,
         fig2_latency_vs_cut, fig45_benchmarks, fig67_resources,
-        participation_sweep, roofline, sim_scale, solver_scale,
+        heterogeneous_cuts, participation_sweep, roofline, sim_scale,
+        solver_scale,
     )
 
     return [
@@ -61,6 +65,8 @@ def _registry(args):
          lambda: solver_scale.main(args.quick, seed=args.seed)),
         ("control_drift", "analytic",
          lambda: control_drift.main(args.quick, seed=args.seed)),
+        ("heterogeneous_cuts", "analytic",
+         lambda: heterogeneous_cuts.main(args.quick, seed=args.seed)),
         ("ablations", "training",
          lambda: ablations.main(args.quick, seed=args.seed)),
         ("bound_check", "training",

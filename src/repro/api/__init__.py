@@ -6,6 +6,7 @@
 # solvers, the fleet simulator, or Engine A/B training and returns a
 # uniform ExperimentResult whose provenance is the resolved spec.
 from .spec import (
+    ClassesCfg,
     CompressionCfg,
     ControlCfg,
     ExperimentSpec,
@@ -34,6 +35,7 @@ from .presets import (
     EXPERIMENTS,
     compressed_spec,
     get_experiment,
+    hetcuts_spec,
     paper_spec,
     participation_spec,
     quickstart_spec,

@@ -54,6 +54,7 @@ class BuiltExperiment:
     base_problem: HsflProblem
     problem: HsflProblem
     participation: Optional[ParticipationSpec] = None  # resolved q_m/deadline
+    class_spec: Optional[object] = None     # core.classes.CutClassSpec
 
 
 def resolve_compression(
@@ -91,6 +92,15 @@ def build(spec: ExperimentSpec) -> BuiltExperiment:
             'run mode="control" needs a scenario section: the controller '
             "observes round telemetry from that fleet trace (add scenario=, "
             'e.g. ScenarioCfg(name="flaky-wan"))'
+        )
+    if spec.classes is not None and (
+        spec.scenario is not None or spec.participation is not None
+    ):
+        raise ValueError(
+            "a classes section needs nominal pricing: per-class cuts are "
+            "priced on the system's rate arrays, not a trace latency model "
+            "(drop scenario=/participation=, and bake heterogeneity into "
+            'the system preset instead, e.g. SystemCfg(preset="lognormal-fleet"))'
         )
     model_spec = resolve_model(spec.model)
     profile = build_profile(
@@ -177,6 +187,32 @@ def build(spec: ExperimentSpec) -> BuiltExperiment:
             'ScenarioCfg(name="straggler-tail"))'
         )
 
+    class_spec = None
+    if spec.classes is not None:
+        from ..core.classes import CutClassSpec, banded_assignment
+
+        cc = spec.classes
+        if cc.by == "explicit":
+            class_of = cc.assign
+            if len(class_of) != system.num_clients:
+                raise ValueError(
+                    "classes.assign must give one class id per client: "
+                    f"{len(class_of)} != {system.num_clients}"
+                )
+        elif cc.by == "uplink":
+            class_of = banded_assignment(system.model_up[0], cc.num_classes)
+        else:  # "compute"
+            class_of = banded_assignment(system.compute[0], cc.num_classes)
+        # every class starts on BCD's evenly-spread anchor; the per-class
+        # MS step moves them apart where heterogeneity pays.
+        from ..core.bcd import default_init_cuts
+
+        anchor = default_init_cuts(model_spec.n_units, system.M)
+        num_classes = int(max(class_of)) + 1
+        class_spec = CutClassSpec(
+            class_of=tuple(class_of), cuts=(tuple(anchor),) * num_classes
+        )
+
     return BuiltExperiment(
         spec=spec,
         model_spec=model_spec,
@@ -190,4 +226,5 @@ def build(spec: ExperimentSpec) -> BuiltExperiment:
         base_problem=base,
         problem=problem,
         participation=participation,
+        class_spec=class_spec,
     )

@@ -9,6 +9,7 @@ from __future__ import annotations
 from typing import Callable, Dict, Optional, Tuple
 
 from .spec import (
+    ClassesCfg,
     CompressionCfg,
     ExperimentSpec,
     HyperCfg,
@@ -141,6 +142,35 @@ def quickstart_spec(seed: int = 0, rounds: int = 30) -> ExperimentSpec:
     )
 
 
+def hetcuts_spec(
+    num_classes: int = 2,
+    by: str = "uplink",
+    seed: int = 0,
+    eps_scale: float = 10.0,
+    compute_sigma: float = 0.5,
+    link_sigma: float = 0.6,
+) -> ExperimentSpec:
+    """Per-class cut assignment on the statically heterogeneous fleet
+    (DESIGN.md §14): clients banded by fed-uplink rate each get their own
+    split vector; ``num_classes=1`` collapses bit-exactly to the
+    single-cut BCD optimum."""
+    return ExperimentSpec(
+        name=f"hetcuts-c{num_classes}-{by}",
+        model=ModelCfg(arch="vgg16-cifar10", batch=16),
+        system=SystemCfg(
+            preset="lognormal-fleet",
+            num_clients=20,
+            num_edges=5,
+            seed=seed,
+            extras={"compute_sigma": compute_sigma, "link_sigma": link_sigma},
+        ),
+        hyper=HyperCfg(beta=3.0, seed=seed, eps_scale=eps_scale),
+        solver=SolverCfg(kind="bcd"),
+        run=RunCfg(mode="solve", seed=seed),
+        classes=ClassesCfg(num_classes=num_classes, by=by),
+    )
+
+
 def compressed_spec(
     codec: str = "int8",
     seed: int = 0,
@@ -166,6 +196,7 @@ EXPERIMENTS: Dict[str, Callable[[], ExperimentSpec]] = {
     "robust-straggler-tail": lambda: robust_spec("straggler-tail"),
     "participation-straggler-tail": lambda: participation_spec("straggler-tail"),
     "compressed-int8": lambda: compressed_spec("int8"),
+    "hetcuts-lognormal": hetcuts_spec,
 }
 
 

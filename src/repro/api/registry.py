@@ -149,6 +149,49 @@ def _two_tier(cfg: SystemCfg, kind: str) -> SystemSpec:
     )
 
 
+@register_system("lognormal-fleet")
+def _lognormal_fleet(cfg: SystemCfg) -> SystemSpec:
+    """Sec. VII system with a *statically* heterogeneous device tier.
+
+    The paper-three-tier arrays with per-device lognormal multipliers
+    drawn once — ``exp(N(0, compute_sigma))`` on tier-0 compute and
+    ``exp(N(0, link_sigma))`` on the tier-0 links.  Each device's fed
+    uplink/downlink shares its access-link draw (one radio), so slow-link
+    devices are slow on both the activation and the model wire — the
+    regime where per-class cut assignment pays (DESIGN.md §14).  Unlike
+    the ``lognormal-heterogeneous`` *scenario* (fresh draws per round),
+    this is a fixed system, so nominal pricing — and hence the per-class
+    solver — applies.  ``extras``: ``compute_sigma`` (0.5), ``link_sigma``
+    (0.6).
+    """
+    import dataclasses
+
+    extras = dict(cfg.extras)
+    compute_sigma = float(extras.pop("compute_sigma", 0.5))
+    link_sigma = float(extras.pop("link_sigma", 0.6))
+    base = SystemSpec.paper_three_tier(
+        num_clients=cfg.num_clients,
+        num_edges=cfg.num_edges,
+        seed=cfg.seed,
+        compute_scale=cfg.compute_scale,
+        comm_scale=cfg.comm_scale,
+        **extras,
+    )
+    rng = np.random.default_rng(cfg.seed + 777)
+    N = cfg.num_clients
+    dev = np.exp(rng.normal(0.0, compute_sigma, N))
+    up = np.exp(rng.normal(0.0, link_sigma, N))
+    down = np.exp(rng.normal(0.0, link_sigma, N))
+    return dataclasses.replace(
+        base,
+        compute=(base.compute[0] * dev,) + base.compute[1:],
+        act_up=(base.act_up[0] * up,) + base.act_up[1:],
+        act_down=(base.act_down[0] * down,) + base.act_down[1:],
+        model_up=(base.model_up[0] * up,) + base.model_up[1:],
+        model_down=(base.model_down[0] * down,) + base.model_down[1:],
+    )
+
+
 @register_system("four-tier-wan")
 def _four_tier_wan(cfg: SystemCfg) -> SystemSpec:
     """Client–edge–regional–cloud WAN hierarchy (M=4): the Sec. VII

@@ -42,6 +42,7 @@ class ExperimentResult:
     sim: Optional[Dict[str, Any]] = None   # per-round trace profile
     train: Optional[Dict[str, Any]] = None # real-training metrics
     control: Optional[Dict[str, Any]] = None  # adaptive-control run log
+    classes: Optional[Dict[str, Any]] = None  # per-class cut assignment
     provenance: Dict[str, Any] = field(default_factory=dict)  # resolved spec
 
     @property
@@ -61,6 +62,7 @@ class ExperimentResult:
                 "sim": self.sim,
                 "train": self.train,
                 "control": self.control,
+                "classes": self.classes,
                 "provenance": self.provenance,
             }
         )
@@ -78,5 +80,6 @@ class ExperimentResult:
             sim=d.get("sim"),
             train=d.get("train"),
             control=d.get("control"),
+            classes=d.get("classes"),
             provenance=dict(d.get("provenance", {})),
         )

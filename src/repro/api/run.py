@@ -62,6 +62,66 @@ def _schedule(built: BuiltExperiment) -> Tuple[Tuple[int, ...], Tuple[int, ...]]
     return tuple(s.cuts), tuple(s.intervals)
 
 
+def _run_classes(built: BuiltExperiment) -> ExperimentResult:
+    """Per-class cut assignment solve (DESIGN.md §14).
+
+    ``result.cuts`` reports class 0's vector (with one class this IS the
+    single-cut schedule and the whole result collapses bit-exactly to the
+    classless run); the full assignment lives in ``result.classes``.
+    """
+    from ..core.classes import solve_bcd_classes
+
+    s = built.spec.solver
+    if s.kind != "bcd":
+        raise ValueError(
+            'a classes section needs solver kind="bcd": the per-class '
+            f"optimizer is the BCD loop (got kind={s.kind!r})"
+        )
+    if built.spec.run.mode != "solve":
+        raise ValueError(
+            'a classes section supports run mode="solve"; mixed-cut '
+            "training runs through core.engine.build_train_step_a("
+            f"class_members=...) directly (got mode={built.spec.run.mode!r})"
+        )
+    res = solve_bcd_classes(
+        built.problem,
+        built.class_spec,
+        init_intervals=s.intervals,
+        tol=s.tol,
+        max_iters=s.max_iters,
+        backend=s.backend,
+        product_budget=built.spec.classes.product_budget,
+    )
+    p = built.problem
+    cs = res.spec
+    latency = {
+        "split_T": float(p.class_split_T(cs)),
+        "agg_T": [float(t) for t in p.class_agg_T(cs)],
+        "pricing": "nominal",
+    }
+    payload = {
+        "num_classes": cs.num_classes,
+        "by": built.spec.classes.by,
+        "class_of": [int(c) for c in cs.class_of],
+        "class_cuts": [list(c) for c in cs.cuts],
+        "class_sizes": [int(n) for n in cs.class_sizes()],
+        "product_budget": built.spec.classes.product_budget,
+    }
+    return ExperimentResult(
+        mode="solve",
+        cuts=tuple(cs.cuts[0]),
+        intervals=tuple(res.intervals),
+        theta=float(res.theta),
+        rounds_to_eps=float(res.rounds) if res.rounds is not None else None,
+        total_latency=(
+            float(res.total_latency) if res.total_latency is not None else None
+        ),
+        latency=latency,
+        classes=payload,
+        provenance=jsonify(built.spec.to_dict()),
+    )
+
+
 def _latency_breakdown(built: BuiltExperiment, cuts, intervals) -> Dict[str, Any]:
     p = built.problem
     if built.spec.scenario is None:
@@ -473,6 +533,8 @@ def run(
     if spec.run.mode == "simulate" and built.trace is None:
         # fail before the (expensive) solve, not after
         raise ValueError('run mode="simulate" needs a scenario section')
+    if built.class_spec is not None:
+        return _run_classes(built)
     cuts, intervals = _schedule(built)
     result = evaluate_schedule(built, cuts, intervals, mode=spec.run.mode)
 

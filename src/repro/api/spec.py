@@ -272,6 +272,52 @@ class ControlCfg:
 
 
 @dataclass(frozen=True)
+class ClassesCfg:
+    """Heterogeneity-aware per-class cut assignment (DESIGN.md §14).
+
+    Clients are banded into ``num_classes`` classes that each hold their
+    own split vector; the per-class BCD (``core.classes``) optimizes the
+    product of cut lattices.  ``by`` picks the banding signal:
+    "compute" (tier-0 device rates), "uplink" (tier-0 fed-server model
+    uplink rates — the channel whose stragglers per-class cuts relieve),
+    or "explicit" with ``assign`` giving the class id per client.
+    ``product_budget`` caps the exhaustively enumerated assignment rows
+    (``K^C``); larger products fall back to coordinate descent seeded at
+    the single-cut optimum.  Requires nominal pricing — a ``scenario`` or
+    ``participation`` section (trace latency models) conflicts.
+    """
+
+    num_classes: int = 2
+    by: str = "compute"            # "compute" | "uplink" | "explicit"
+    assign: Optional[Tuple[int, ...]] = None
+    product_budget: int = 200_000
+
+    def __post_init__(self):
+        if self.num_classes < 1:
+            raise ValueError(
+                f"classes.num_classes must be >= 1: {self.num_classes}"
+            )
+        if self.by not in ("compute", "uplink", "explicit"):
+            raise ValueError(
+                f"classes.by must be compute|uplink|explicit: {self.by!r}"
+            )
+        if (self.by == "explicit") != (self.assign is not None):
+            raise ValueError(
+                "classes.assign must be given exactly when by='explicit' "
+                f"(got by={self.by!r}, assign={self.assign!r})"
+            )
+        if self.product_budget < 1:
+            raise ValueError(
+                f"classes.product_budget must be >= 1: {self.product_budget}"
+            )
+        object.__setattr__(self, "assign", _int_tuple(self.assign))
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ClassesCfg":
+        return cls(**d)
+
+
+@dataclass(frozen=True)
 class SolverCfg:
     """Which optimizer of problem (20) runs, with its budgets.
 
@@ -356,6 +402,7 @@ class ExperimentSpec:
     compression: Optional[CompressionCfg] = None
     participation: Optional[ParticipationCfg] = None
     control: Optional[ControlCfg] = None
+    classes: Optional[ClassesCfg] = None
     name: str = ""
 
     def to_dict(self) -> Dict[str, Any]:
@@ -368,6 +415,7 @@ class ExperimentSpec:
         compression = d.get("compression")
         participation = d.get("participation")
         control = d.get("control")
+        classes = d.get("classes")
         return cls(
             model=ModelCfg.from_dict(d.get("model", {})),
             system=SystemCfg.from_dict(d.get("system", {})),
@@ -384,6 +432,7 @@ class ExperimentSpec:
                 else ParticipationCfg.from_dict(participation)
             ),
             control=None if control is None else ControlCfg.from_dict(control),
+            classes=None if classes is None else ClassesCfg.from_dict(classes),
             name=d.get("name", ""),
         )
 

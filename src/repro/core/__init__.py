@@ -4,6 +4,7 @@
 from .convergence import (
     HyperSpec,
     ParticipationSpec,
+    class_weighted_G2_sums,
     corollary1_rounds,
     synthetic_hyperspec,
     theorem1_bound,
@@ -14,8 +15,25 @@ from .batched import BatchedEvaluator, cut_lattice
 from .ma_solver import MaSolution, solve_ma, solve_ma_bruteforce
 from .ms_solver import MsSolution, solve_ms, solve_ms_bruteforce
 from .bcd import BcdResult, solve_bcd
+from .classes import (
+    ClassBatchedEvaluator,
+    ClassBcdResult,
+    ClassMsSolution,
+    CutClassSpec,
+    banded_assignment,
+    solve_bcd_classes,
+    solve_ma_classes,
+    solve_ms_classes,
+)
 from .estimator import HyperEstimator, estimate_from_probe
-from .tiers import TierPlan, default_plan, synchronize, tier_subtrees
+from .tiers import (
+    TierPlan,
+    class_tier_members,
+    default_plan,
+    ragged_synchronize,
+    synchronize,
+    tier_subtrees,
+)
 from .engine import (
     TrainState,
     build_train_step_a,

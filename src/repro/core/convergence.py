@@ -112,6 +112,27 @@ def tier_G2_sums(G2: np.ndarray, cuts: Sequence[int]) -> np.ndarray:
     )
 
 
+def class_weighted_G2_sums(
+    G2: np.ndarray,
+    class_cuts: Sequence[Sequence[int]],
+    weights: Sequence[float],
+) -> np.ndarray:
+    """Class-weighted tier drift mass d̄_m = Σ_c (n_c/N) · d_m(μ_c).
+
+    Under per-class split points (DESIGN.md §14) the Theorem-1 drift term
+    averages each class's tier-m G² mass by its client share: tier m's
+    divergence accumulates per client over *that client's* tier-m units,
+    and the round averages clients uniformly.  Accumulated in class order
+    with one multiply-add per class, so a single class (w = [1.0]) is
+    bit-identical to ``tier_G2_sums`` and power-of-two equal shares
+    collapse exactly when all classes hold the same cuts.
+    """
+    d = weights[0] * tier_G2_sums(G2, class_cuts[0])
+    for w, cc in zip(weights[1:], class_cuts[1:]):
+        d = d + w * tier_G2_sums(G2, cc)
+    return d
+
+
 def bound_round_terms(
     hp: HyperSpec,
     intervals: Sequence[int],

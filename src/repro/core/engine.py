@@ -24,7 +24,13 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..optim import Optimizer
-from .tiers import TierPlan, synchronize, tier_subtrees, combine_tiers
+from .tiers import (
+    TierPlan,
+    combine_tiers,
+    ragged_synchronize,
+    synchronize,
+    tier_subtrees,
+)
 
 Params = Dict[str, Any]
 
@@ -99,6 +105,7 @@ def masked_mean_loss(losses: jax.Array, w: jax.Array) -> jax.Array:
 def build_train_step_a(
     model, plan: TierPlan, opt: Optimizer, *, sync_opt_state: bool = False,
     fed_round=None, compressor=None, with_mask: bool = False,
+    class_members=None,
 ) -> Callable[..., Tuple[TrainState, jax.Array]]:
     """Engine-A step: vmapped per-client update + hierarchical aggregation.
 
@@ -130,11 +137,30 @@ def build_train_step_a(
     averages participants only (``tiers.synchronize`` mask semantics,
     DESIGN.md §12).  The reported loss is the participation-weighted mean.
     An all-ones mask is bit-identical to the unmasked step.
+
+    ``class_members`` (the ``tiers.class_tier_members`` matrices for a
+    per-class cut assignment, DESIGN.md §14) switches every aggregation —
+    params and, under ``sync_opt_state``, the optimizer moments — to
+    ``tiers.ragged_synchronize``: tier m's levels average each unit only
+    over the clients whose class holds it there.  With identical classes
+    the member matrices are the plan's tier slices and the step is
+    bit-identical to the dense path.
     """
     compress_fn = (
         None if compressor is None
         else lambda x: jax.vmap(lambda v: compressor.transform(v))(x)
     )
+
+    def _sync(tree, step, *, compress=None, mask=None):
+        if class_members is not None:
+            return ragged_synchronize(
+                tree, plan, class_members, step, fed_round=fed_round,
+                compress_fn=compress, mask=mask,
+            )
+        return synchronize(
+            tree, plan, step, fed_round=fed_round, compress_fn=compress,
+            mask=mask,
+        )
 
     def _step(state: TrainState, batch: Params, mask) -> Tuple[TrainState, jax.Array]:
         losses, grads = jax.vmap(jax.value_and_grad(model.loss_fn))(
@@ -148,9 +174,8 @@ def build_train_step_a(
             new_params = _masked_select(new_params, state.params, w)
             new_opt = _masked_select(new_opt, state.opt_state, w)
             loss = masked_mean_loss(losses, w)
-        new_params = synchronize(
-            new_params, plan, state.step, fed_round=fed_round,
-            compress_fn=compress_fn, mask=mask,
+        new_params = _sync(
+            new_params, state.step, compress=compress_fn, mask=mask
         )
         if sync_opt_state and jax.tree.leaves(new_opt):
             new_opt = jax.tree.map(
@@ -159,17 +184,11 @@ def build_train_step_a(
             # momentum/adam moments are client-stacked like params: apply the
             # same schedule so replicas stay consistent after aggregation.
             if opt.name == "momentum":
-                new_opt = synchronize(
-                    new_opt, plan, state.step, fed_round=fed_round, mask=mask
-                )
+                new_opt = _sync(new_opt, state.step, mask=mask)
             elif opt.name == "adam":
                 new_opt = dict(new_opt)
-                new_opt["m"] = synchronize(
-                    new_opt["m"], plan, state.step, fed_round=fed_round, mask=mask
-                )
-                new_opt["v"] = synchronize(
-                    new_opt["v"], plan, state.step, fed_round=fed_round, mask=mask
-                )
+                new_opt["m"] = _sync(new_opt["m"], state.step, mask=mask)
+                new_opt["v"] = _sync(new_opt["v"], state.step, mask=mask)
         return TrainState(new_params, new_opt, state.step + 1), loss
 
     if with_mask:
@@ -201,7 +220,7 @@ def init_state_b(model, plan: TierPlan, opt: Optimizer, key) -> TrainState:
 
 def build_train_step_b(
     model, plan: TierPlan, opt: Optimizer, *, compressor=None,
-    with_mask: bool = False,
+    with_mask: bool = False, class_members=None,
 ) -> Callable[..., Tuple[TrainState, jax.Array]]:
     """Engine-B step: literal split execution.
 
@@ -230,6 +249,14 @@ def build_train_step_b(
     N = plan.num_clients
     M = plan.M
     spec = model.spec
+    if class_members is not None:
+        raise NotImplementedError(
+            "Engine B physically places each tier's units on its hosts — a "
+            "per-class cut assignment has no single placement (clients "
+            "disagree on which units are client-side).  Use Engine A with "
+            "class_members (ragged sync-groups), the production path for "
+            "DESIGN.md §14."
+        )
     if with_mask and getattr(spec, "moe", None) is not None:
         raise NotImplementedError(
             "masked Engine B does not support MoE specs: the aux-loss "
@@ -373,6 +400,8 @@ def build_train_step_b(
                 J = plan.entities[m]
 
                 def agg(t, J=J):
+                    original = t  # zero-participant fallback must be the
+                    # entities' last synced params, never a compressed copy
                     if compressor is not None:
                         # lossy fed-server upload, per entity (axis 0)
                         t = jax.tree.map(
@@ -395,7 +424,7 @@ def build_train_step_b(
                     wj = w.reshape(J, N // J).sum(axis=1)
                     s = jnp.sum(wj)
 
-                    def wm(x):
+                    def wm(x, k):
                         ww = wj.reshape((J,) + (1,) * (x.ndim - 1))
                         tot = jnp.sum(
                             x * ww.astype(x.dtype), axis=0, keepdims=True,
@@ -403,10 +432,10 @@ def build_train_step_b(
                         )
                         mn = (tot / jnp.maximum(s, 1.0)).astype(x.dtype)
                         return jnp.where(
-                            s > 0.0, jnp.broadcast_to(mn, x.shape), x
+                            s > 0.0, jnp.broadcast_to(mn, x.shape), k
                         )
 
-                    return jax.tree.map(wm, t)
+                    return jax.tree.map(wm, t, original)
 
                 p = lax.cond(do, agg, lambda t: t, p)
             out.append(p)

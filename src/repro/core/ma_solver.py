@@ -85,7 +85,22 @@ def _cubic_positive_root(
             x = None
         if x is not None and x > 0:
             return float(x)
-    roots = np.roots([ka, kb, 0.0, -kc])
+    if kb > 0 and kc > 0:
+        # Degenerate-leading-coefficient deflation: when ka ≈ 0 the cubic
+        # collapses to  kb·I² − kc = 0.  ``np.roots`` cannot handle this
+        # regime — its companion matrix divides by the leading coefficient,
+        # so a subnormal ka yields inf/garbage eigenvalues and an empty (or
+        # spurious) positive-root set.  Deflate explicitly whenever the
+        # cubic term is negligible at the quadratic root: at I = r₂ the
+        # cubic contributes ka·r₂³ against kb·r₂², i.e. the test ka·r₂ ≪ kb.
+        r2 = math.sqrt(kc / kb)
+        if ka <= 0.0 or ka * r2 <= _EPS4 * kb:
+            return float(r2)
+    try:
+        roots = np.roots([ka, kb, 0.0, -kc])
+    except np.linalg.LinAlgError:
+        roots = np.empty(0, dtype=complex)
+    roots = roots[np.isfinite(roots)]
     real = roots[np.abs(roots.imag) < 1e-9].real
     pos = real[real > 0]
     if len(pos) == 0:  # numerical fallback: bisection

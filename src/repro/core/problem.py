@@ -333,6 +333,32 @@ class HsflProblem:
         cache[be] = (ev, token)
         return ev
 
+    # ------------------------------------------------------------------ #
+    # per-class cut assignment (DESIGN.md §14)
+    # ------------------------------------------------------------------ #
+    def class_theta(self, spec, intervals: Sequence[int]) -> float:
+        """Exact Θ'(I, {μ_c}) for a ``classes.CutClassSpec`` — delegates to
+        the per-class oracle (``core.classes``), which mirrors this
+        problem's single-cut arithmetic term for term."""
+        from .classes import class_theta
+
+        return class_theta(self, spec, intervals)
+
+    def class_split_T(self, spec) -> float:
+        from .classes import class_split_T
+
+        return class_split_T(self, spec)
+
+    def class_agg_T(self, spec) -> np.ndarray:
+        from .classes import class_agg_T
+
+        return class_agg_T(self, spec)
+
+    def class_tier_d(self, spec) -> np.ndarray:
+        from .classes import class_tier_d
+
+        return class_tier_d(self, spec)
+
     def invalidate_caches(self) -> None:
         """Explicitly drop the memoized lattice and evaluator tables.
 

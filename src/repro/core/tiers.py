@@ -36,16 +36,44 @@ class TierPlan:
     num_pods: int = 1
 
     def __post_init__(self):
+        # User-facing invariants raise ValueError (not ``assert``): plans are
+        # built from config files / API specs, and asserts vanish under
+        # ``python -O``, silently admitting invalid plans.
         M = len(self.intervals)
-        assert len(self.cuts) == M - 1, (self.cuts, self.intervals)
-        assert all(
-            self.cuts[i] <= self.cuts[i + 1] for i in range(len(self.cuts) - 1)
-        ), f"cuts must be non-decreasing (C4): {self.cuts}"
-        assert all(0 <= c <= self.n_units for c in self.cuts)
-        assert self.intervals[-1] == 1, "top tier is always synchronized"
-        assert len(self.entities) == M
+        if len(self.cuts) != M - 1:
+            raise ValueError(
+                f"TierPlan needs exactly M-1 = {M - 1} cuts for "
+                f"{M} intervals, got {len(self.cuts)}: "
+                f"cuts={self.cuts!r}, intervals={self.intervals!r}"
+            )
+        if any(
+            self.cuts[i] > self.cuts[i + 1] for i in range(len(self.cuts) - 1)
+        ):
+            raise ValueError(
+                f"cuts must be non-decreasing (C4): {self.cuts!r}"
+            )
+        if any(not 0 <= c <= self.n_units for c in self.cuts):
+            raise ValueError(
+                f"every cut must lie in [0, n_units={self.n_units}]: "
+                f"{self.cuts!r}"
+            )
+        if self.intervals[-1] != 1:
+            raise ValueError(
+                "top tier is always synchronized: intervals[-1] must be 1, "
+                f"got {self.intervals!r}"
+            )
+        if len(self.entities) != M:
+            raise ValueError(
+                f"entities must list J_m for each of the {M} tiers, got "
+                f"{len(self.entities)}: {self.entities!r}"
+            )
         for j in self.entities:
-            assert self.num_clients % j == 0, (self.entities, self.num_clients)
+            if j <= 0 or self.num_clients % j != 0:
+                raise ValueError(
+                    f"each tier's entity count must evenly divide "
+                    f"num_clients={self.num_clients}: entities="
+                    f"{self.entities!r} (offending J_m={j})"
+                )
 
     @property
     def M(self) -> int:
@@ -157,7 +185,9 @@ def _group_mean(tree: Params, groups: int) -> Params:
     return jax.tree.map(f, tree)
 
 
-def _group_mean_masked(tree: Params, groups: int, w: jax.Array) -> Params:
+def _group_mean_masked(
+    tree: Params, groups: int, w: jax.Array, keep: Params = None
+) -> Params:
     """Participation-weighted group mean, broadcast back (DESIGN.md §12).
 
     ``w`` is the per-client participation mask [N] (0/1 float32).  Each
@@ -176,12 +206,22 @@ def _group_mean_masked(tree: Params, groups: int, w: jax.Array) -> Params:
     s_g.  With w ≡ 1 the arithmetic (f32 multiply-by-one, same sum
     reduction, divide by the group size) is bit-identical to
     ``_group_mean``.
+
+    ``keep`` (optional pytree matching ``tree``) supplies the fallback
+    values a zero-participant group retains.  It defaults to ``tree``
+    itself, which is right whenever the input *is* the clients' current
+    state — but a compressed fed-server upload must pass the
+    pre-compression params here, otherwise a silent group "keeps" a
+    lossy-coded copy it never uploaded (DESIGN.md §9/§12).
     """
     w = w.astype(jnp.float32)
+    if keep is None:
+        keep = tree
 
-    def f(x):
+    def f(x, k):
         n = x.shape[0]
         g = x.reshape(groups, n // groups, *x.shape[1:])
+        gk = k.reshape(groups, n // groups, *x.shape[1:])
         wg = w.reshape(groups, n // groups)
         ww = wg.reshape(wg.shape + (1,) * (g.ndim - 2))
         s = jnp.sum(wg, axis=1).reshape((groups,) + (1,) * (g.ndim - 1))
@@ -189,10 +229,10 @@ def _group_mean_masked(tree: Params, groups: int, w: jax.Array) -> Params:
             g * ww.astype(g.dtype), axis=1, keepdims=True, dtype=jnp.float32
         )
         m = (tot / jnp.maximum(s, 1.0)).astype(x.dtype)
-        out = jnp.where(s > 0.0, jnp.broadcast_to(m, g.shape), g)
+        out = jnp.where(s > 0.0, jnp.broadcast_to(m, g.shape), gk)
         return out.reshape(x.shape)
 
-    return jax.tree.map(f, tree)
+    return jax.tree.map(f, tree, keep)
 
 
 def synchronize(
@@ -253,10 +293,14 @@ def synchronize(
             )
 
             def level_mean(p, groups=groups, fed=fed):
+                # keep the *pre-compression* tree as the zero-participant
+                # fallback: a silent group uploads nothing, so it must
+                # retain its last synced params, not a lossy-coded copy.
+                original = p
                 if fed:
                     p = jax.tree.map(compress_fn, p)
                 if mask is not None:
-                    return _group_mean_masked(p, groups, mask)
+                    return _group_mean_masked(p, groups, mask, keep=original)
                 return _group_mean(p, groups)
 
             if interval <= 1:
@@ -269,6 +313,203 @@ def synchronize(
             # fed_round[m] is False -> skip tier m's fed-server level
         out_parts.append(part)
     return combine_tiers(out_parts, params)
+
+
+# --------------------------------------------------------------------------- #
+# ragged synchronization: per-class cut assignments (DESIGN.md §14)
+# --------------------------------------------------------------------------- #
+
+
+def class_tier_members(
+    n_units: int,
+    class_cuts: Sequence[Sequence[int]],
+    class_of: Sequence[int],
+) -> List[jnp.ndarray]:
+    """Per-tier membership matrices ``[M][N, U]`` (float32 0/1).
+
+    ``members[m][i, u] == 1`` iff unit u lies in tier m *for client i's
+    class* — clients in different classes disagree on which units are
+    client-side, which is exactly the raggedness ``ragged_synchronize``
+    aggregates over.  Every (client, unit) pair belongs to exactly one
+    tier, so the per-tier member matrices partition the unit axis per
+    client.
+    """
+    class_of = [int(c) for c in class_of]
+    M = len(class_cuts[0]) + 1
+    C = len(class_cuts)
+    bounds = [[0, *[int(x) for x in cc], n_units] for cc in class_cuts]
+    u = jnp.arange(n_units)
+    out: List[jnp.ndarray] = []
+    for m in range(M):
+        rows = []
+        for c in range(C):
+            lo, hi = bounds[c][m], bounds[c][m + 1]
+            rows.append(((u >= lo) & (u < hi)).astype(jnp.float32))
+        table = jnp.stack(rows)  # [C, U]
+        out.append(table[jnp.asarray(class_of)])  # [N, U]
+    return out
+
+
+def _ragged_units_mean(units, keep, mem, groups, mask):
+    """Per-unit member-weighted group mean over a units container.
+
+    ``mem`` [N, U] gates both the average (a unit's tier-m mean only
+    reads replicas from clients whose class holds it in tier m) and the
+    receive side (non-members keep their value — that unit is synced by
+    its own tier's levels).  With ``mem`` all-ones the arithmetic
+    (f32 multiply-by-weight, same sum reduction, divide by
+    ``max(count, 1)``) is bit-identical to ``_group_mean_masked`` — and
+    through it to ``_group_mean`` when ``mask`` is None — which is what
+    collapses identical-class ragged sync onto ``synchronize`` exactly.
+    """
+    cw = mem if mask is None else mem * mask.astype(jnp.float32)[:, None]
+
+    def one_unit(x, k, m_col, w_col):
+        # x, k: [N, ...]; m_col/w_col: [N]
+        n = x.shape[0]
+        g = x.reshape(groups, n // groups, *x.shape[1:])
+        gk = k.reshape(g.shape)
+        wg = w_col.reshape(groups, n // groups)
+        mg = m_col.reshape(groups, n // groups)
+        ww = wg.reshape(wg.shape + (1,) * (g.ndim - 2))
+        mm = mg.reshape(ww.shape)
+        s = jnp.sum(wg, axis=1).reshape((groups,) + (1,) * (g.ndim - 1))
+        tot = jnp.sum(
+            g * ww.astype(g.dtype), axis=1, keepdims=True, dtype=jnp.float32
+        )
+        mean = (tot / jnp.maximum(s, 1.0)).astype(x.dtype)
+        out = jnp.where(
+            (mm > 0.0) & (s > 0.0), jnp.broadcast_to(mean, g.shape), gk
+        )
+        return out.reshape(x.shape)
+
+    if isinstance(units, (list, tuple)):
+        return [
+            jax.tree.map(
+                lambda x, k, u=u: one_unit(x, k, mem[:, u], cw[:, u]),
+                unit,
+                keep[u],
+            )
+            for u, unit in enumerate(units)
+        ]
+    if isinstance(units, dict) and set(units) == {"enc", "dec"}:
+        raise NotImplementedError(
+            "ragged per-class sync over enc/dec unit stacks is not "
+            "implemented — use a flat unit stack or per-unit list"
+        )
+
+    # stacked leaves [N, U, ...]: broadcast the member/weight columns
+    def f(x, k):
+        n, U = x.shape[0], x.shape[1]
+        g = x.reshape(groups, n // groups, U, *x.shape[2:])
+        gk = k.reshape(g.shape)
+        wg = cw.reshape(groups, n // groups, U)
+        mg = mem.reshape(groups, n // groups, U)
+        ww = wg.reshape(wg.shape + (1,) * (g.ndim - 3))
+        mm = mg.reshape(ww.shape)
+        s = jnp.sum(ww, axis=1, keepdims=True)  # [G, 1, U, 1...]
+        tot = jnp.sum(
+            g * ww.astype(g.dtype), axis=1, keepdims=True, dtype=jnp.float32
+        )
+        mean = (tot / jnp.maximum(s, 1.0)).astype(x.dtype)
+        out = jnp.where(
+            (mm > 0.0) & (s > 0.0), jnp.broadcast_to(mean, g.shape), gk
+        )
+        return out.reshape(x.shape)
+
+    return jax.tree.map(f, units, keep)
+
+
+def ragged_synchronize(
+    params: Params,
+    plan: TierPlan,
+    members: Sequence[jax.Array],
+    step: jax.Array,
+    *,
+    fed_round=None,
+    compress_fn=None,
+    mask=None,
+) -> Params:
+    """``synchronize`` for per-class cut assignments (DESIGN.md §14).
+
+    ``members`` is the ``class_tier_members`` output: tier m's levels
+    average unit u only over the clients whose class holds u in tier m,
+    and only those clients receive the broadcast — the rest keep their
+    replica untouched for their own tier's schedule.  The entity topology,
+    interval gating, ``fed_round`` specialization, fed-wire compression
+    and participation ``mask`` semantics are exactly those of
+    ``synchronize`` (including the zero-participant keep-last fallback
+    and the pre-compression ``keep`` tree).  The frontend always joins
+    tier 0 and the head tier M−1, for every class.
+
+    Unlike ``synchronize`` this operates on the *unsliced* params: the
+    unit → tier map varies per client, so there is no common
+    ``tier_subtrees`` partition to slice.  When every class holds the
+    same cuts the member matrices are exactly the plan's tier slices and
+    the result is bit-identical to ``synchronize``.
+    """
+    if isinstance(params["units"], dict) and set(params["units"]) == {
+        "enc",
+        "dec",
+    }:
+        raise NotImplementedError(
+            "ragged per-class sync over enc/dec unit stacks is not "
+            "implemented"
+        )
+    if len(members) != plan.M:
+        raise ValueError(
+            f"need one member matrix per tier: got {len(members)} for "
+            f"M={plan.M}"
+        )
+    if fed_round is not None and not isinstance(fed_round, (tuple, list)):
+        fed_round = (bool(fed_round),) * plan.M
+
+    out = params
+    for m in range(plan.M):
+        mem = members[m]
+        levels = plan.levels(m)
+        for li, (groups, interval) in enumerate(levels):
+            fed = (
+                compress_fn is not None
+                and m < plan.M - 1
+                and li == len(levels) - 1
+                and plan.entities[m] > 1
+            )
+
+            def level_fn(
+                p,
+                groups=groups,
+                fed=fed,
+                mem=mem,
+                front=(m == 0),
+                head=(m == plan.M - 1),
+            ):
+                original = p
+                if fed:
+                    p = jax.tree.map(compress_fn, p)
+                new = dict(original)
+                new["units"] = _ragged_units_mean(
+                    p["units"], original["units"], mem, groups, mask
+                )
+                for name, join in (("frontend", front), ("head", head)):
+                    if not join:
+                        continue
+                    if mask is not None:
+                        new[name] = _group_mean_masked(
+                            p[name], groups, mask, keep=original[name]
+                        )
+                    else:
+                        new[name] = _group_mean(p[name], groups)
+                return new
+
+            if interval <= 1:
+                out = level_fn(out)
+            elif fed_round is None:
+                do = (step + 1) % interval == 0
+                out = lax.cond(do, level_fn, lambda p: p, out)
+            elif fed_round[m]:
+                out = level_fn(out)
+    return out
 
 
 def default_plan(

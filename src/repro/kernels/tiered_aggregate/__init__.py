@@ -1,2 +1,11 @@
-from .ops import aggregate_tree, tiered_aggregate, tiered_aggregate_q8
-from .ref import quantized_tiered_aggregate_ref, tiered_aggregate_ref
+from .ops import (
+    aggregate_tree,
+    ragged_tiered_aggregate_q8,
+    tiered_aggregate,
+    tiered_aggregate_q8,
+)
+from .ref import (
+    quantized_tiered_aggregate_ref,
+    ragged_quantized_tiered_aggregate_ref,
+    tiered_aggregate_ref,
+)

@@ -11,9 +11,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from ...compress.quantize import q8_quantize
-from .ops import tiered_aggregate_q8
-from .ref import quantized_tiered_aggregate_ref
-from .tiered_aggregate import quantized_tiered_aggregate_pallas
+from .ops import ragged_tiered_aggregate_q8, tiered_aggregate_q8
+from .ref import (
+    quantized_tiered_aggregate_ref,
+    ragged_quantized_tiered_aggregate_ref,
+)
+from .tiered_aggregate import (
+    quantized_tiered_aggregate_pallas,
+    ragged_quantized_tiered_aggregate_pallas,
+)
 
 
 def assert_q8_matches_oracle(
@@ -50,4 +56,72 @@ def assert_q8_matches_oracle(
             )
             assert np.array_equal(np.asarray(a), np.asarray(b)), (
                 "entry branches", N, J, P, tile, de, dg,
+            )
+
+
+def assert_ragged_q8_matches_oracle(
+    N: int, J: int, P: int, tile: int, seed: int = 0, density: float = 0.6
+) -> None:
+    """The ragged (per-class membership) analogue of
+    ``assert_q8_matches_oracle``: at every flag combination, (a) the
+    interpret-mode ragged Pallas kernel equals its tile-mirroring ref
+    oracle bit-for-bit on one shared wire payload, (b) the jit'd ragged
+    entry's pallas and fallback branches agree bit-for-bit, and (c) with
+    all-ones membership the ragged kernel reproduces the dense kernel
+    bit-for-bit on the same payload (uniform 1/N weights, so every
+    division the two kernels take is over identical operands)."""
+    key = jax.random.PRNGKey(seed * 7919 + N * P + 1)
+    x = jax.random.normal(key, (N, P))
+    w = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 1), (N,)))
+    member = (
+        jax.random.uniform(jax.random.fold_in(key, 2), (N,)) < density
+    ).astype(jnp.float32)
+    ones = jnp.ones((N,), jnp.float32)
+    uw = jnp.full((N,), 1.0 / N, jnp.float32)
+    # the dense kernel's global mean never divides (weights sum to 1) while
+    # the ragged one divides by the summed member-weights, and its entity
+    # mean (jnp.mean) may divide differently than the ragged sum/count —
+    # the collapse is bit-exact only when the member-weight f32 sum is
+    # exactly 1.0 AND the group size is a power of two (every division is
+    # then exact); skip the leg otherwise.
+    per = N // J
+    check_collapse = (
+        per & (per - 1) == 0 and float(jnp.sum(uw)) == 1.0
+    )
+    q, s = q8_quantize(x, tile)  # one shared wire payload for all paths
+    for de in (0, 1):
+        for dg in (0, 1):
+            out = ragged_quantized_tiered_aggregate_pallas(
+                q, s, w, member, jnp.array(de), jnp.array(dg), J,
+                tile_p=tile, interpret=True,
+            )
+            ref = ragged_quantized_tiered_aggregate_ref(
+                q, s, w, member, jnp.array(de), jnp.array(dg), J, tile
+            )
+            assert np.array_equal(np.asarray(out), np.asarray(ref)), (
+                "ragged pallas vs oracle", N, J, P, tile, de, dg,
+            )
+            a = ragged_tiered_aggregate_q8(
+                x, w, member, jnp.array(de), jnp.array(dg), J, tile_p=tile,
+                use_pallas=True, interpret=True,
+            )
+            b = ragged_tiered_aggregate_q8(
+                x, w, member, jnp.array(de), jnp.array(dg), J, tile_p=tile,
+                use_pallas=False,
+            )
+            assert np.array_equal(np.asarray(a), np.asarray(b)), (
+                "ragged entry branches", N, J, P, tile, de, dg,
+            )
+            if not check_collapse:
+                continue
+            ragged = ragged_quantized_tiered_aggregate_pallas(
+                q, s, uw, ones, jnp.array(de), jnp.array(dg), J,
+                tile_p=tile, interpret=True,
+            )
+            dense = quantized_tiered_aggregate_pallas(
+                q, s, uw, jnp.array(de), jnp.array(dg), J,
+                tile_p=tile, interpret=True,
+            )
+            assert np.array_equal(np.asarray(ragged), np.asarray(dense)), (
+                "all-ones collapse to dense", N, J, P, tile, de, dg,
             )

@@ -21,10 +21,11 @@ import jax
 import jax.numpy as jnp
 
 from ...compress.quantize import q8_dequantize, q8_quantize
-from .ref import tiered_aggregate_ref
+from .ref import ragged_quantized_tiered_aggregate_ref, tiered_aggregate_ref
 from .tiered_aggregate import (
     TILE_P,
     quantized_tiered_aggregate_pallas,
+    ragged_quantized_tiered_aggregate_pallas,
     tiered_aggregate_pallas,
 )
 
@@ -90,6 +91,67 @@ def tiered_aggregate_q8(
         deq = q8_dequantize(q, scales, tile_p)
         out = tiered_aggregate_ref(
             deq, weights, do_entity, do_global, num_entities
+        )
+    return out[:, :P]
+
+
+@partial(
+    jax.jit, static_argnames=("num_entities", "tile_p", "use_pallas", "interpret")
+)
+def ragged_tiered_aggregate_q8(
+    x: jax.Array,
+    weights: jax.Array,
+    member: jax.Array,
+    do_entity: jax.Array,
+    do_global: jax.Array,
+    num_entities: int,
+    tile_p: int = TILE_P,
+    key: Optional[jax.Array] = None,
+    use_pallas: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    """Ragged (per-class cut) q8 aggregation of an [N, P] unit-range shard.
+
+    ``member`` [N] marks the clients whose class holds this shard's units
+    in the aggregating tier (``tiers.class_tier_members`` column); they
+    alone feed and receive the two reduction levels.  All-ones member with
+    normalized weights reproduces ``tiered_aggregate_q8`` bit-for-bit.
+    The ``use_pallas=False`` fallback dequantizes vectorized and applies
+    the member-masked reduction in one pass (the per-tile ``ref.py`` loop
+    stays the test oracle).
+    """
+    N, P = x.shape
+    do_entity = jnp.asarray(do_entity)
+    do_global = jnp.asarray(do_global)
+    q, scales = q8_quantize(x.astype(jnp.float32), tile_p, key=key)
+    if use_pallas:
+        out = ragged_quantized_tiered_aggregate_pallas(
+            q, scales, weights, member, do_entity, do_global, num_entities,
+            tile_p=tile_p, interpret=interpret,
+        )
+    else:
+        deq = q8_dequantize(q, scales, tile_p)
+        J = num_entities
+        per = N // J
+        m = member.astype(jnp.float32)[:, None]
+        grouped = deq.reshape(J, per, -1)
+        mg = m.reshape(J, per, 1)
+        sg = jnp.sum(mg, axis=1, keepdims=True)
+        emean = jnp.sum(grouped * mg, axis=1, keepdims=True) / jnp.maximum(
+            sg, 1.0
+        )
+        emean = jnp.broadcast_to(emean, grouped.shape).reshape(deq.shape)
+        sg_rows = jnp.broadcast_to(sg, grouped.shape).reshape(deq.shape)
+        y1 = jnp.where(do_entity & (m > 0.0) & (sg_rows > 0.0), emean, deq)
+        wm = weights.astype(jnp.float32)[:, None] * m
+        sw = jnp.sum(wm, axis=0, keepdims=True)
+        gmean = jnp.sum(y1 * wm, axis=0, keepdims=True) / jnp.where(
+            sw > 0.0, sw, 1.0
+        )
+        out = jnp.where(
+            do_global & (m > 0.0) & (sw > 0.0),
+            jnp.broadcast_to(gmean, y1.shape),
+            y1,
         )
     return out[:, :P]
 

@@ -58,3 +58,46 @@ def quantized_tiered_aggregate_ref(
         gmean = jnp.sum(y1 * w, axis=0, keepdims=True)
         outs.append(jnp.where(do_global, jnp.broadcast_to(gmean, y1.shape), y1))
     return jnp.concatenate(outs, axis=1)
+
+
+def ragged_quantized_tiered_aggregate_ref(
+    q, scales, weights, member, do_entity, do_global,
+    num_entities: int, tile_p: int,
+):
+    """Oracle for the ragged q8 path — per tile, in exactly the op order of
+    ``_ragged_q8_kernel`` (dequant, member-masked entity mean, member-
+    renormalized fed mean, member-gated receives), so interpret mode is
+    bit-identical.  ``member`` [N] marks clients whose class holds this
+    shard's units in the aggregating tier (DESIGN.md §14).
+    """
+    N, Pp = q.shape
+    assert Pp % tile_p == 0, (Pp, tile_p)
+    J = num_entities
+    per = N // J
+    m = member.astype(jnp.float32)[:, None]            # [N, 1]
+    wm = weights.astype(jnp.float32)[:, None] * m      # [N, 1]
+    sw = jnp.sum(wm, axis=0, keepdims=True)            # [1, 1]
+    outs = []
+    for t in range(Pp // tile_p):
+        s = scales[:, t].astype(jnp.float32)[:, None]
+        x = q[:, t * tile_p : (t + 1) * tile_p].astype(jnp.float32) * s
+        grouped = x.reshape(J, per, tile_p)
+        mg = m.reshape(J, per, 1)
+        sg = jnp.sum(mg, axis=1, keepdims=True)
+        emean = jnp.sum(grouped * mg, axis=1, keepdims=True) / jnp.maximum(
+            sg, 1.0
+        )
+        emean = jnp.broadcast_to(emean, grouped.shape).reshape(x.shape)
+        sg_rows = jnp.broadcast_to(sg, grouped.shape).reshape(x.shape)
+        y1 = jnp.where(do_entity & (m > 0.0) & (sg_rows > 0.0), emean, x)
+        gmean = jnp.sum(y1 * wm, axis=0, keepdims=True) / jnp.where(
+            sw > 0.0, sw, 1.0
+        )
+        outs.append(
+            jnp.where(
+                do_global & (m > 0.0) & (sw > 0.0),
+                jnp.broadcast_to(gmean, y1.shape),
+                y1,
+            )
+        )
+    return jnp.concatenate(outs, axis=1)

@@ -116,6 +116,60 @@ def _q8_kernel(flags_ref, w_ref, q_ref, s_ref, o_ref, *, num_entities: int):
     o_ref[...] = y2
 
 
+def _ragged_q8_kernel(
+    flags_ref, w_ref, m_ref, q_ref, s_ref, o_ref, *, num_entities: int
+):
+    """Ragged (per-class cut) variant of ``_q8_kernel`` (DESIGN.md §14).
+
+    ``m_ref`` (SMEM [N] f32, 0/1) marks the clients whose class holds this
+    shard's units in the aggregating tier.  Non-members neither contribute
+    to nor receive either reduction level — their replica of these units
+    belongs to a different tier and is aggregated by that tier's schedule:
+
+      entity:  em_g = Σ_{i∈g} member_i·x_i / max(Σ_{i∈g} member_i, 1)
+               y1_i = (do_entity ∧ member_i ∧ Σ_g > 0) ? em_g : x_i
+      global:  sw   = Σ_i w_i·member_i
+               gm   = Σ_i y1_i·(w_i·member_i) / (sw > 0 ? sw : 1)
+               y2_i = (do_global ∧ member_i ∧ sw > 0) ? gm : y1_i
+
+    With member ≡ 1 and weights already normalized (Σ w = 1, exact for
+    uniform 1/N at power-of-two N) every guard divide is by 1.0 or the
+    exact group size, so the result is bit-identical to ``_q8_kernel`` —
+    the collapse the interpret-mode tests pin.  Mirrored per tile by
+    ``ref.ragged_quantized_tiered_aggregate_ref``.
+    """
+    s = s_ref[...].astype(jnp.float32)            # [N, 1]
+    x = q_ref[...].astype(jnp.float32) * s        # dequantized [N, TP]
+    N = x.shape[0]
+    J = num_entities
+    per = N // J
+    do_entity = flags_ref[0] > 0
+    do_global = flags_ref[1] > 0
+    member = m_ref[...].astype(jnp.float32)[:, None]   # [N, 1]
+
+    grouped = x.reshape(J, per, x.shape[1])
+    mg = member.reshape(J, per, 1)
+    sg = jnp.sum(mg, axis=1, keepdims=True)            # [J, 1, 1]
+    emean = jnp.sum(grouped * mg, axis=1, keepdims=True) / jnp.maximum(
+        sg, 1.0
+    )
+    emean = jnp.broadcast_to(emean, grouped.shape).reshape(x.shape)
+    sg_rows = jnp.broadcast_to(sg, grouped.shape).reshape(x.shape)
+    y1 = jnp.where(do_entity & (member > 0.0) & (sg_rows > 0.0), emean, x)
+
+    wm = w_ref[...].astype(jnp.float32)[:, None] * member  # [N, 1]
+    sw = jnp.sum(wm, axis=0, keepdims=True)                # [1, 1]
+    gmean = jnp.sum(y1 * wm, axis=0, keepdims=True) / jnp.where(
+        sw > 0.0, sw, 1.0
+    )
+    y2 = jnp.where(
+        do_global & (member > 0.0) & (sw > 0.0),
+        jnp.broadcast_to(gmean, y1.shape),
+        y1,
+    )
+    o_ref[...] = y2
+
+
 def quantized_tiered_aggregate_pallas(
     q: jax.Array,          # [N, Pp] int8, Pp % tile_p == 0 (wire payload)
     scales: jax.Array,     # [N, Pp // tile_p] f32 per-tile scales
@@ -154,3 +208,54 @@ def quantized_tiered_aggregate_pallas(
         out_shape=jax.ShapeDtypeStruct((N, Pp), jnp.float32),
         interpret=interpret,
     )(flags, weights.astype(jnp.float32), q, scales.astype(jnp.float32))
+
+
+def ragged_quantized_tiered_aggregate_pallas(
+    q: jax.Array,          # [N, Pp] int8, Pp % tile_p == 0 (wire payload)
+    scales: jax.Array,     # [N, Pp // tile_p] f32 per-tile scales
+    weights: jax.Array,    # [N] f32, sums to 1 over the member set
+    member: jax.Array,     # [N] f32/bool, 1 = client's class holds these units
+    do_entity: jax.Array,  # scalar bool/int
+    do_global: jax.Array,  # scalar bool/int
+    num_entities: int,
+    tile_p: int = TILE_P,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused dequantize → member-masked two-level aggregate (q8 wire).
+
+    The per-class-cut sync path (``tiers.ragged_synchronize``) applied to
+    one unit-range shard whose tier membership is uniform across columns
+    but ragged across clients.  ``member`` rides SMEM scalar prefetch next
+    to the flags and weights — it is O(N), like them.  An all-ones member
+    is bit-identical to ``quantized_tiered_aggregate_pallas`` (see
+    ``_ragged_q8_kernel``).
+    """
+    N, Pp = q.shape
+    assert N % num_entities == 0, (N, num_entities)
+    assert Pp % tile_p == 0, (Pp, tile_p)
+    assert scales.shape == (N, Pp // tile_p), (scales.shape, q.shape, tile_p)
+    flags = jnp.stack(
+        [do_entity.astype(jnp.int32), do_global.astype(jnp.int32)]
+    )
+
+    grid = (Pp // tile_p,)
+    return pl.pallas_call(
+        functools.partial(_ragged_q8_kernel, num_entities=num_entities),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,  # flags, weights, member (all O(N))
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((N, tile_p), lambda i, *_: (0, i)),
+                pl.BlockSpec((N, 1), lambda i, *_: (0, i)),  # scale column
+            ],
+            out_specs=pl.BlockSpec((N, tile_p), lambda i, *_: (0, i)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((N, Pp), jnp.float32),
+        interpret=interpret,
+    )(
+        flags,
+        weights.astype(jnp.float32),
+        member.astype(jnp.float32),
+        q,
+        scales.astype(jnp.float32),
+    )

@@ -3,3 +3,50 @@ import sys
 
 # allow `pytest tests/` from the repo root without installing the package
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--durations-budget",
+        type=float,
+        default=None,
+        metavar="SECONDS",
+        help="fail the session if any test not marked 'slow' spends more "
+        "than SECONDS in its call phase (CI keeps the fast suite fast: "
+        "long-running tests must be marked slow and ride the nightly job)",
+    )
+
+
+# (nodeid, seconds) for every non-slow call phase; compared against the
+# budget at session end so one report lists every offender, not just the
+# first.
+_CALL_DURATIONS = []
+
+
+def pytest_runtest_logreport(report):
+    if report.when == "call" and "slow" not in report.keywords:
+        _CALL_DURATIONS.append((report.nodeid, report.duration))
+
+
+def pytest_sessionfinish(session, exitstatus):
+    budget = session.config.getoption("--durations-budget")
+    if budget is None:
+        return
+    offenders = sorted(
+        ((nid, sec) for nid, sec in _CALL_DURATIONS if sec > budget),
+        key=lambda kv: -kv[1],
+    )
+    if not offenders:
+        return
+    tr = session.config.pluginmanager.get_plugin("terminalreporter")
+    lines = [
+        f"duration budget exceeded ({budget:.1f}s per non-slow test):"
+    ] + [f"  {sec:8.2f}s  {nid}" for nid, sec in offenders] + [
+        "mark these @pytest.mark.slow (nightly job) or speed them up"
+    ]
+    msg = "\n".join(lines)
+    if tr is not None:
+        tr.write_line(msg, red=True)
+    else:
+        print(msg, file=sys.stderr)
+    session.exitstatus = max(int(exitstatus), 1)

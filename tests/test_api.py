@@ -400,3 +400,74 @@ def test_top_level_package_exports_api():
     import repro
 
     assert repro.api.ExperimentSpec is ExperimentSpec
+
+
+# --------------------------------------------------------------------------- #
+# 5. per-class cut assignment (DESIGN.md §14)
+# --------------------------------------------------------------------------- #
+
+
+def test_classes_cfg_validation():
+    from repro.api import ClassesCfg
+
+    with pytest.raises(ValueError, match="num_classes"):
+        ClassesCfg(num_classes=0)
+    with pytest.raises(ValueError, match="compute|uplink|explicit"):
+        ClassesCfg(by="nope")
+    with pytest.raises(ValueError, match="exactly when"):
+        ClassesCfg(by="compute", assign=(0, 1))
+    with pytest.raises(ValueError, match="exactly when"):
+        ClassesCfg(by="explicit")
+    with pytest.raises(ValueError, match="product_budget"):
+        ClassesCfg(product_budget=0)
+
+
+def test_classes_section_roundtrips():
+    from repro.api import ClassesCfg, hetcuts_spec
+
+    spec = hetcuts_spec(num_classes=4, by="uplink", seed=3)
+    rt = roundtrip(spec)
+    assert rt == spec
+    explicit = tpu_pod_spec().replace(
+        classes=ClassesCfg(
+            num_classes=2, by="explicit",
+            assign=tuple(i % 2 for i in range(16)),
+        )
+    )
+    rt = roundtrip(explicit)
+    assert rt == explicit
+    assert isinstance(rt.classes.assign, tuple)
+
+
+def test_classes_conflicts_and_guards():
+    from repro.api import ClassesCfg, ParticipationCfg, hetcuts_spec
+
+    cc = ClassesCfg(num_classes=2, by="compute")
+    with pytest.raises(ValueError, match="nominal pricing"):
+        build(paper_spec().replace(
+            classes=cc, scenario=ScenarioCfg(name="flaky-wan", rounds=4)
+        ))
+    with pytest.raises(ValueError, match="nominal pricing"):
+        build(paper_spec().replace(
+            classes=cc, participation=ParticipationCfg(target_rate=0.5)
+        ))
+    with pytest.raises(ValueError, match="per client"):
+        build(tpu_pod_spec().replace(
+            classes=ClassesCfg(num_classes=2, by="explicit", assign=(0, 1))
+        ))
+    spec = hetcuts_spec(num_classes=2)
+    with pytest.raises(ValueError, match="bcd"):
+        run(spec.replace(solver=SolverCfg(kind="ms")))
+    with pytest.raises(ValueError, match="solve"):
+        run(spec.replace(run=RunCfg(mode="train")))
+
+
+def test_classes_build_resolves_assignment():
+    from repro.api import hetcuts_spec
+    from repro.core.classes import banded_assignment
+
+    built = build(hetcuts_spec(num_classes=2, by="uplink", seed=0))
+    assert built.class_spec is not None
+    expect = banded_assignment(built.problem.system.model_up[0], 2)
+    assert built.class_spec.class_of == tuple(int(c) for c in expect)
+    assert built.class_spec.is_uniform()  # every class starts at the anchor

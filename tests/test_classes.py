@@ -1,0 +1,413 @@
+"""Per-class cut assignment (DESIGN.md §14): spec validation, the batched
+product evaluator vs the scalar oracle, solver collapse/improvement, and
+the ragged tier synchronization."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.vgg16_cifar10 import SPEC as VGG
+from repro.core import (
+    ClassBatchedEvaluator,
+    CutClassSpec,
+    HsflProblem,
+    SystemSpec,
+    banded_assignment,
+    build_profile,
+    class_tier_members,
+    default_plan,
+    ragged_synchronize,
+    solve_bcd,
+    solve_bcd_classes,
+    solve_ma,
+    solve_ma_classes,
+    solve_ms,
+    solve_ms_classes,
+    synchronize,
+    synthetic_hyperspec,
+)
+from repro.core.classes import (
+    class_agg_T,
+    class_split_T,
+    class_theta,
+    product_assignments,
+)
+from repro.core.convergence import class_weighted_G2_sums, theorem1_bound
+
+N_CLIENTS = 20
+
+
+def make_problem(seed=0, eps_scale=10.0, hetero=0.0):
+    """Paper three-tier problem; ``hetero`` > 1 slows the odd half of the
+    fleet's access links (activation and model wires) by that factor."""
+    prof = build_profile(VGG, batch=16)
+    system = SystemSpec.paper_three_tier(seed=seed)
+    if hetero:
+        slow = np.ones(N_CLIENTS)
+        slow[1::2] = 1.0 / float(hetero)
+
+        def scaled(tiers):
+            return (tiers[0] * slow,) + tuple(tiers[1:])
+
+        system = dataclasses.replace(
+            system,
+            act_up=scaled(system.act_up),
+            act_down=scaled(system.act_down),
+            model_up=scaled(system.model_up),
+            model_down=scaled(system.model_down),
+        )
+    hp = synthetic_hyperspec(VGG.n_units, N_CLIENTS, beta=3.0, seed=seed)
+    floor = theorem1_bound(hp, 10**9, [1, 1, 1], (3, 8))
+    return HsflProblem(prof, system, hp, eps=eps_scale * floor)
+
+
+# --------------------------------------------------------------------------- #
+# spec validation + constructors
+# --------------------------------------------------------------------------- #
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="at least one class"):
+        CutClassSpec(class_of=(), cuts=())
+    with pytest.raises(ValueError, match="contiguous"):
+        CutClassSpec(class_of=(0, 2), cuts=((1, 2), (1, 2), (1, 2)))
+    with pytest.raises(ValueError, match="contiguous"):  # class 1 empty
+        CutClassSpec(class_of=(0, 0), cuts=((1, 2), (1, 2)))
+    with pytest.raises(ValueError, match="same number of cuts"):
+        CutClassSpec(class_of=(0, 1), cuts=((1, 2), (1,)))
+    with pytest.raises(ValueError, match="non-decreasing"):
+        CutClassSpec(class_of=(0,), cuts=((4, 2),))
+    with pytest.raises(ValueError, match=">= 0"):
+        CutClassSpec(class_of=(0,), cuts=((-1, 2),))
+
+
+def test_spec_helpers():
+    spec = CutClassSpec(class_of=(0, 1, 1, 0), cuts=((1, 3), (2, 4)))
+    assert spec.num_classes == 2 and spec.num_clients == 4
+    assert spec.class_sizes() == (2, 2)
+    np.testing.assert_allclose(spec.weights(), [0.5, 0.5])
+    assert spec.weights().sum() == 1.0
+    np.testing.assert_array_equal(spec.members(1), [1, 2])
+    np.testing.assert_array_equal(
+        spec.client_cuts(), [[1, 3], [2, 4], [2, 4], [1, 3]]
+    )
+    assert not spec.is_uniform()
+    assert spec.with_cuts(((1, 3), (1, 3))).is_uniform()
+    uni = CutClassSpec.uniform(6, 3, (2, 5))
+    assert uni.is_uniform() and uni.class_sizes() == (2, 2, 2)
+    by_rate = CutClassSpec.from_rates([9.0, 1.0, 5.0, 7.0], 2, (2, 5))
+    # slowest band first: clients 1 and 2 (rates 1, 5) are class 0
+    np.testing.assert_array_equal(by_rate.class_of, (1, 0, 0, 1))
+
+
+def test_banded_assignment():
+    rates = np.array([5.0, 1.0, 5.0, 3.0, 2.0])
+    a = banded_assignment(rates, 2)
+    # 5 clients, 2 bands: slow band {1, 4, 3} then {0, 2} (stable ties)
+    np.testing.assert_array_equal(a, [1, 0, 1, 0, 0])
+    np.testing.assert_array_equal(a, banded_assignment(rates, 2))
+    np.testing.assert_array_equal(banded_assignment(rates, 1), np.zeros(5))
+    with pytest.raises(ValueError, match="num_classes"):
+        banded_assignment(rates, 0)
+    with pytest.raises(ValueError, match="num_classes"):
+        banded_assignment(rates, 6)
+
+
+# --------------------------------------------------------------------------- #
+# scalar oracle: collapse to the single-cut objective
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("C", [1, 2, 4])
+def test_scalar_oracle_collapses_uniform_classes(C):
+    """Identical per-class cuts reproduce the single-cut pieces bit-for-bit
+    for any class count — the heterogeneity machinery is free when there
+    is no heterogeneity."""
+    p = make_problem()
+    cuts = (3, 8)
+    intervals = (4, 2, 1)
+    spec = CutClassSpec.uniform(N_CLIENTS, C, cuts)
+    assert class_split_T(p, spec) == p.split_T(cuts)
+    np.testing.assert_array_equal(class_agg_T(p, spec), p.agg_T(cuts))
+    assert class_theta(p, spec, intervals) == p.theta(intervals, cuts)
+    assert p.class_theta(spec, intervals) == p.theta(intervals, cuts)
+
+
+def test_class_weighted_drift_mass():
+    """d̄_m = Σ_c w_c d_m(μ_c), and uniform classes give the plain tier
+    sums."""
+    p = make_problem()
+    g2 = p.hyper.G2
+    uni = CutClassSpec.uniform(N_CLIENTS, 2, (3, 8))
+    np.testing.assert_array_equal(
+        class_weighted_G2_sums(g2, uni.cuts, uni.weights()),
+        p.tier_d((3, 8)),
+    )
+    mixed = CutClassSpec(
+        class_of=tuple([0] * 15 + [1] * 5), cuts=((2, 6), (4, 9))
+    )
+    d = class_weighted_G2_sums(g2, mixed.cuts, mixed.weights())
+    expect = 0.75 * p.tier_d((2, 6)) + 0.25 * p.tier_d((4, 9))
+    np.testing.assert_allclose(d, expect, rtol=1e-12)
+
+
+def test_latency_model_pricing_rejected():
+    """Per-class cuts are nominal-only: trace tables price one cut vector
+    per row, so an attached latency_model must raise, not mis-price."""
+    p = dataclasses.replace(make_problem(), latency_model=object())
+    spec = CutClassSpec.uniform(N_CLIENTS, 2, (3, 8))
+    with pytest.raises(ValueError, match="nominally"):
+        class_split_T(p, spec)
+    with pytest.raises(ValueError, match="nominally"):
+        ClassBatchedEvaluator(p, spec)
+
+
+# --------------------------------------------------------------------------- #
+# batched product evaluator vs the scalar oracle
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_evaluator_matches_scalar_oracle(backend):
+    """The product evaluator's objective pieces over random assignment
+    matrices equal the scalar oracle bit-for-bit; Θ' itself agrees to the
+    last association (the evaluator reports the Dinkelbach order
+    ``scale·(N/D)``, the scalar the ``problem.theta`` order
+    ``(scale·N)/D`` — one ulp apart), and the infeasible set is
+    identical."""
+    p = make_problem(seed=1)
+    rng = np.random.default_rng(7)
+    assign_ids = tuple(int(x) for x in rng.integers(0, 2, N_CLIENTS))
+    # both ids present with overwhelming probability; pin it anyway
+    assign_ids = (0, 1) + assign_ids[2:]
+    spec = CutClassSpec(assign_ids, ((3, 8), (3, 8)))
+    ev = ClassBatchedEvaluator(p, spec, backend=backend)
+    intervals = (3, 2, 1)
+    rows = rng.integers(0, ev.K, size=(40, 2))
+    th = ev.theta_rows(rows, intervals)
+    split = ev.split_T(rows)
+    agg = ev.agg_T(rows)
+    num = ev.numerator(rows, intervals)
+    den = ev.denominator(rows, intervals)
+    for r in range(rows.shape[0]):
+        s = spec.with_cuts(ev.cuts_at(rows[r]))
+        assert split[r] == class_split_T(p, s)
+        np.testing.assert_array_equal(agg[r], class_agg_T(p, s))
+        scalar = class_theta(p, s, intervals)
+        if not np.isfinite(scalar):
+            assert th[r] == scalar  # inf == inf
+            continue
+        assert num[r] == (
+            class_split_T(p, s)
+            + float(np.sum(class_agg_T(p, s) / np.asarray(intervals[:2], float)))
+        )
+        np.testing.assert_allclose(th[r], scalar, rtol=1e-14)
+    assert np.all(np.isfinite(den[np.isfinite(th)]))
+
+
+def test_product_assignments_enumerate_lexicographically():
+    a = product_assignments(3, 2)
+    assert a.shape == (9, 2)
+    np.testing.assert_array_equal(a[:4], [[0, 0], [0, 1], [0, 2], [1, 0]])
+
+
+# --------------------------------------------------------------------------- #
+# solvers: collapse, descent, improvement
+# --------------------------------------------------------------------------- #
+
+
+def test_ms_classes_single_class_collapses_to_ms():
+    p = make_problem(seed=2)
+    intervals = (4, 2, 1)
+    ms = solve_ms(p, intervals, backend="numpy")
+    spec = CutClassSpec.uniform(N_CLIENTS, 1, (3, 8))
+    cls = solve_ms_classes(p, spec, intervals, backend="numpy")
+    assert cls.exhaustive
+    assert cls.cuts == (ms.cuts,)
+    assert cls.theta <= ms.theta * (1 + 1e-12)
+
+
+def test_ma_classes_uniform_collapses_to_ma():
+    p = make_problem(seed=2)
+    cuts = (3, 8)
+    ma = solve_ma(p, cuts)
+    spec = CutClassSpec.uniform(N_CLIENTS, 3, cuts)
+    cls = solve_ma_classes(p, spec)
+    assert cls.intervals == ma.intervals
+    assert cls.theta == ma.theta
+
+
+def test_coordinate_descent_never_worse_than_single_cut():
+    """product_budget=1 forces the CD fallback; seeded at the single-cut
+    optimum it can only descend, and the exhaustive product bounds it."""
+    p = make_problem(seed=3, hetero=8.0)
+    intervals = (2, 2, 1)
+    single = solve_ms(p, intervals, backend="numpy")
+    spec = CutClassSpec.from_rates(
+        p.system.model_up[0], 2, single.cuts
+    )
+    cd = solve_ms_classes(
+        p, spec, intervals, backend="numpy", product_budget=1
+    )
+    assert not cd.exhaustive
+    assert cd.theta <= single.theta * (1 + 1e-12)
+    full = solve_ms_classes(p, spec, intervals, backend="numpy")
+    assert full.exhaustive
+    assert full.theta <= cd.theta * (1 + 1e-12)
+
+
+def test_bcd_classes_uniform_fleet_collapses():
+    """On a homogeneous fleet (tpu-pod mapping: identical clients) the
+    per-class BCD lands every class on the single-cut BCD optimum."""
+    prof = build_profile(VGG, batch=16)
+    system = SystemSpec.tpu_pod_mapping()
+    N = system.num_clients
+    hp = synthetic_hyperspec(VGG.n_units, N, beta=3.0, seed=0)
+    floor = theorem1_bound(hp, 10**9, [1] * system.M, (3, 8))
+    p = HsflProblem(prof, system, hp, eps=10 * floor)
+    single = solve_bcd(p, backend="numpy")
+    spec = CutClassSpec.uniform(N, 2, single.cuts)
+    res = solve_bcd_classes(p, spec, backend="numpy")
+    assert res.theta == single.theta
+    assert tuple(res.intervals) == tuple(single.intervals)
+    assert all(c == single.cuts for c in res.class_cuts)
+
+
+def test_bcd_classes_strictly_improves_on_heterogeneous_fleet():
+    """With half the fleet 8x slower (compute + access links), giving the
+    slow band its own split vector strictly lowers Θ' — the tentpole's
+    acceptance claim at unit-test scale."""
+    p = make_problem(seed=0, hetero=8.0)
+    single = solve_bcd(p, backend="numpy")
+    spec = CutClassSpec.from_rates(p.system.model_up[0], 2, single.cuts)
+    res = solve_bcd_classes(p, spec, backend="numpy")
+    assert res.theta < single.theta
+    assert len(set(res.class_cuts)) > 1  # the classes actually split
+    # monotone descent, like the single-cut BCD
+    hist = list(res.history)
+    for a, b in zip(hist, hist[1:]):
+        assert b <= a * (1 + 1e-9)
+
+
+def test_spec_client_count_must_match_system():
+    p = make_problem()
+    bad = CutClassSpec.uniform(N_CLIENTS + 2, 2, (3, 8))
+    with pytest.raises(ValueError, match="clients"):
+        ClassBatchedEvaluator(p, bad)
+
+
+# --------------------------------------------------------------------------- #
+# ragged tier synchronization
+# --------------------------------------------------------------------------- #
+
+
+def _stacked(key, N, U, d=3):
+    ks = jax.random.split(key, 3)
+    return {
+        "frontend": {"embed": jax.random.normal(ks[0], (N, 4, d))},
+        "units": {"w": jax.random.normal(ks[1], (N, U, d, d))},
+        "head": {"norm": jax.random.normal(ks[2], (N, d))},
+    }
+
+
+def test_class_tier_members_partition_units():
+    members = class_tier_members(
+        6, [(1, 2), (2, 4)], [0, 0, 1, 1, 0, 1]
+    )
+    assert len(members) == 3
+    total = sum(np.asarray(m) for m in members)
+    np.testing.assert_array_equal(total, np.ones((6, 6)))
+    # client 0 (class 0): tiers [0,1) [1,2) [2,6)
+    np.testing.assert_array_equal(members[0][0], [1, 0, 0, 0, 0, 0])
+    np.testing.assert_array_equal(members[1][0], [0, 1, 0, 0, 0, 0])
+    # client 2 (class 1): tiers [0,2) [2,4) [4,6)
+    np.testing.assert_array_equal(members[0][2], [1, 1, 0, 0, 0, 0])
+    np.testing.assert_array_equal(members[1][2], [0, 0, 1, 1, 0, 0])
+
+
+@pytest.mark.parametrize("step,masked", [(0, False), (1, False), (0, True)])
+def test_ragged_sync_identical_classes_matches_synchronize(step, masked):
+    """Same cuts in every class ⇒ the member matrices are the plan's tier
+    slices and ragged sync is bit-identical to ``synchronize`` — with and
+    without participation masks and the lossy fed wire."""
+    N, U = 8, 6
+    params = _stacked(jax.random.PRNGKey(21), N, U)
+    plan = default_plan(U, N, cuts=(2, 4), intervals=(1, 2, 1),
+                        entities=(N, 4, 1))
+    members = class_tier_members(U, [(2, 4)] * 2, [i % 2 for i in range(N)])
+    mask = (
+        jnp.ones((N,), jnp.float32).at[3].set(0.0) if masked else None
+    )
+    lossy = lambda x: jnp.round(x * 4.0) / 4.0
+    ref = synchronize(params, plan, jnp.int32(step),
+                      compress_fn=lossy, mask=mask)
+    out = ragged_synchronize(params, plan, members, jnp.int32(step),
+                             compress_fn=lossy, mask=mask)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_ragged_sync_matches_numpy_oracle():
+    """Mixed-cut classes against an independent numpy re-statement of the
+    schedule: per level, unit u averages over group members whose class
+    holds u in that tier, and only those clients receive the mean."""
+    N, U, d = 4, 4, 2
+    class_of = [0, 1, 0, 1]
+    class_cuts = [(1, 2), (2, 3)]
+    params = _stacked(jax.random.PRNGKey(22), N, U, d=d)
+    plan = default_plan(U, N, cuts=(1, 2), intervals=(1, 1, 1),
+                        entities=(N, 2, 1))
+    members = class_tier_members(U, class_cuts, class_of)
+    out = ragged_synchronize(params, plan, members, jnp.int32(0))
+
+    w = np.asarray(params["units"]["w"], dtype=np.float64)
+    mem = [np.asarray(m) for m in members]
+    # oracle: tiers in order; per tier the plan's levels (entity then fed)
+    for m in range(3):
+        for groups, _ in plan.levels(m):
+            per = N // groups
+            for g in range(groups):
+                idx = np.arange(g * per, (g + 1) * per)
+                for u in range(U):
+                    sel = idx[mem[m][idx, u] > 0]
+                    if sel.size:
+                        w[sel, u] = w[sel, u].mean(axis=0)
+    np.testing.assert_allclose(
+        np.asarray(out["units"]["w"]), w, rtol=1e-5, atol=1e-6
+    )
+    # frontend joins tier 0 (global fed at I=1): all clients equal
+    fe = np.asarray(out["frontend"]["embed"])
+    np.testing.assert_allclose(
+        fe, np.broadcast_to(fe.mean(0), fe.shape), rtol=1e-6
+    )
+
+
+def test_ragged_sync_fully_masked_round_is_identity():
+    """The zero-participant keep-last fallback survives the ragged path:
+    an all-masked round with a lossy fed wire changes nothing."""
+    N, U = 8, 6
+    params = _stacked(jax.random.PRNGKey(23), N, U)
+    plan = default_plan(U, N, cuts=(2, 4), intervals=(1, 1, 1),
+                        entities=(N, 4, 1))
+    members = class_tier_members(
+        U, [(2, 4), (1, 5)], [i % 2 for i in range(N)]
+    )
+    out = ragged_synchronize(
+        params, plan, members, jnp.int32(0),
+        compress_fn=lambda x: jnp.round(x * 4.0) / 4.0,
+        mask=jnp.zeros((N,), jnp.float32),
+    )
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_ragged_sync_guards():
+    N, U = 4, 4
+    params = _stacked(jax.random.PRNGKey(24), N, U)
+    plan = default_plan(U, N, cuts=(1, 2), intervals=(1, 1, 1),
+                        entities=(N, 2, 1))
+    members = class_tier_members(U, [(1, 2)], [0] * N)
+    with pytest.raises(ValueError, match="member matrix per tier"):
+        ragged_synchronize(params, plan, members[:2], jnp.int32(0))

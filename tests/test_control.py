@@ -132,6 +132,57 @@ def test_window_keeps_exactly_last_w_rounds():
     )
 
 
+def test_table_cache_invalidates_across_eviction_wrap():
+    """The memoized scalar tables must not survive the window wrap.
+
+    The W+1-th push is the first one that *evicts* (n_obs stops moving at
+    W, so a cache keyed on buffer length — instead of the version token —
+    would serve the pre-wrap tables forever).  After exactly W+1 pushes
+    the scalar ``split_T``/``agg_T`` must price the last W rounds, bit
+    identical to a fresh window fed only those rounds, and to a
+    ``TraceLatency`` over a trace of exactly those rounds."""
+    W = 3
+    p = small_problem()
+    trace = make_trace("flaky-wan", p.profile, p.system, rounds=W + 1, seed=5)
+    lat = p.cut_lattice()
+    probe = [tuple(int(c) for c in lat[k]) for k in (0, len(lat) // 2)]
+
+    win = windowed(p, trace, W, window=W)
+    # warm the memoized scalar tables at the pre-wrap version
+    for cuts in probe:
+        win.split_T(cuts)
+    before = win.split_T_batch(lat).copy()
+    v0 = win.version
+    assert win.n_obs == W
+
+    win.push(trace.round_state(W))  # W+1-th push: first eviction
+    assert win.version == v0 + 1
+    assert win.n_obs == W  # buffer length did NOT move — only the version
+
+    fresh = WindowedLatency(
+        p.profile, p.system, lat, window=W, quantile=0.5
+    )
+    for r in range(1, W + 1):
+        fresh.push(trace.round_state(r))
+    states = list(win.states())
+    mini = SystemTrace(
+        "window", p.profile, p.system, W, 0, lambda r: states[r]
+    )
+    tl = TraceLatency(mini, quantile=0.5, backend="numpy")
+    for cuts in probe:
+        assert win.split_T(cuts) == fresh.split_T(cuts) == tl.split_T(cuts)
+        for m in range(p.M - 1):
+            assert (
+                win.agg_T(cuts, m) == fresh.agg_T(cuts, m)
+                == tl.agg_T(cuts, m)
+            )
+    # teeth: evicting round 0 really changed the priced tables somewhere —
+    # serving the pre-wrap cache would be an observable bug
+    assert not np.array_equal(before, win.split_T_batch(lat)), (
+        "eviction left the whole split table unchanged; test is vacuous"
+    )
+
+
 def test_windowed_guards():
     p = small_problem()
     win = WindowedLatency(

@@ -28,6 +28,7 @@ def test_unit_sq_norms_partition():
     np.testing.assert_allclose(float(jnp.sum(sq)), total, rtol=1e-5)
 
 
+@pytest.mark.slow
 def test_estimator_on_probe_run():
     spec = get_reduced("smollm-135m")
     model = SplittableModel(spec)

@@ -78,6 +78,20 @@ def test_q8_kernel_bit_exact_vs_oracle(N, J, P, tile):
     assert_q8_matches_oracle(N, J, P, tile)
 
 
+@pytest.mark.parametrize(
+    "N,J,P,tile", [(16, 4, 300, 128), (6, 2, 257, 128), (20, 5, 999, 128)],
+)
+def test_ragged_q8_kernel_bit_exact_vs_oracle(N, J, P, tile):
+    """Per-class membership (DESIGN.md §14): the ragged fused kernel vs its
+    tile-mirroring oracle, the jit entry's branches, and the all-ones
+    collapse onto the dense kernel (where the divisions align)."""
+    from repro.kernels.tiered_aggregate.check import (
+        assert_ragged_q8_matches_oracle,
+    )
+
+    assert_ragged_q8_matches_oracle(N, J, P, tile)
+
+
 def test_q8_aggregation_close_to_lossless():
     """Quantize-then-aggregate deviates from the f32 aggregate by < 1 LSB."""
     key = jax.random.PRNGKey(9)

@@ -60,7 +60,14 @@ def test_forward_shapes_and_finite(arch):
     assert np.all(np.isfinite(np.asarray(logits[..., : spec.vocab_size], np.float32)))
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize(
+    "arch",
+    [  # jamba's 398B reduced variant still jits ~30s of hybrid blocks on CPU
+        pytest.param(a, marks=pytest.mark.slow) if a == "jamba-1.5-large-398b"
+        else a
+        for a in ARCH_IDS
+    ],
+)
 def test_one_train_step(arch):
     spec = get_reduced(arch)
     model = SplittableModel(spec)
@@ -154,6 +161,7 @@ def test_total_param_count_close_to_nominal():
         assert 0.5 * nom < got < 1.7 * nom, (arch, got / 1e9)
 
 
+@pytest.mark.slow
 def test_moe_grouped_gradients():
     """Grouped dispatch + scatter-add combine is differentiable and its
     gradients match the ungrouped path (no-drop capacity)."""

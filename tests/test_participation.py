@@ -87,6 +87,7 @@ def test_all_ones_mask_is_bit_exact(seed):
             np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 
+@pytest.mark.slow
 def test_masked_weights_sum_to_one_per_group():
     """The aggregate is the participant mean: weights w_i/Σw sum to 1 per
     group, so aggregating all-equal replicas is the identity and a mixed
@@ -544,6 +545,7 @@ def _tiny_batch(spec, N, b, seed):
     }
 
 
+@pytest.mark.slow
 def test_engine_a_masked_step_semantics():
     from repro.core import build_train_step_a, init_state_a
 
@@ -572,6 +574,7 @@ def test_engine_a_masked_step_semantics():
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+@pytest.mark.slow
 def test_api_train_with_participation_masks():
     """run(mode="train") under a participation policy drives the masked
     engine with trace-sampled masks and reports the realized rate."""

@@ -99,3 +99,51 @@ def test_cubic_bracket_expansion_capped():
         _cubic_positive_root(0.0, 0.0, 1.0)
     # tiny-but-valid coefficients still resolve through the fallback
     assert _cubic_positive_root(2.0, 3.0, 5.0) == pytest.approx(1.0)
+
+
+def test_cubic_root_degenerate_leading_coefficient():
+    """ka ≈ 0 collapses Proposition 1's cubic to kb·I² − kc = 0; np.roots
+    on the near-degenerate polynomial divides its companion matrix by the
+    subnormal leading coefficient and returns garbage.  The explicit
+    deflation, the scalar Newton path, and the bisection oracle must all
+    agree on the quadratic root."""
+    import math
+
+    from repro.core.ma_solver import _cubic_positive_root
+
+    def bisect(ka, kb, kc):
+        f = lambda x: ka * x**3 + kb * x**2 - kc
+        lo, hi = 1e-12, 1.0
+        while f(hi) < 0:
+            hi *= 2.0
+        for _ in range(200):
+            mid = 0.5 * (lo + hi)
+            if f(mid) < 0:
+                lo = mid
+            else:
+                hi = mid
+        return 0.5 * (lo + hi)
+
+    # degenerate / near-degenerate leading coefficients: exact zero, a
+    # subnormal, and a tiny normal — all must deflate to sqrt(kc/kb)
+    for ka in (0.0, 5e-324, 1e-320, 1e-300, 1e-30):
+        for kb, kc in ((3.0, 7.0), (1e-6, 2.5), (50.0, 1e-4)):
+            root = _cubic_positive_root(ka, kb, kc)
+            assert root == pytest.approx(math.sqrt(kc / kb), rel=1e-9), (
+                ka, kb, kc,
+            )
+            assert root == pytest.approx(bisect(ka, kb, kc), rel=1e-9), (
+                ka, kb, kc,
+            )
+
+    # non-degenerate coefficients: Newton, np.roots, and bisection agree
+    for ka, kb, kc in ((2.0, 3.0, 5.0), (0.5, 1e3, 10.0), (7.0, 1e-3, 0.4)):
+        root = _cubic_positive_root(ka, kb, kc)
+        pos = [
+            r.real
+            for r in np.roots([ka, kb, 0.0, -kc])
+            if abs(r.imag) < 1e-9 and r.real > 0
+        ]
+        assert len(pos) == 1
+        assert root == pytest.approx(pos[0], rel=1e-9), (ka, kb, kc)
+        assert root == pytest.approx(bisect(ka, kb, kc), rel=1e-9), (ka, kb, kc)

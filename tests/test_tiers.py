@@ -17,12 +17,50 @@ def _params(key, N, U, d=4):
 
 
 def test_plan_validation():
-    with pytest.raises(AssertionError):
+    # user-facing invariants raise ValueError (asserts would vanish under
+    # ``python -O`` — see test_plan_validation_without_assertions)
+    with pytest.raises(ValueError, match="non-decreasing"):
         TierPlan(8, 8, cuts=(5, 3), intervals=(2, 2, 1), entities=(8, 4, 1))
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="intervals"):
         TierPlan(8, 8, cuts=(2, 4), intervals=(2, 2, 2), entities=(8, 4, 1))
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="evenly divide"):
         TierPlan(8, 8, cuts=(2, 4), intervals=(2, 2, 1), entities=(8, 3, 1))
+    with pytest.raises(ValueError, match="cuts"):
+        TierPlan(8, 8, cuts=(2,), intervals=(2, 2, 1), entities=(8, 4, 1))
+    with pytest.raises(ValueError, match="n_units"):
+        TierPlan(8, 8, cuts=(2, 9), intervals=(2, 2, 1), entities=(8, 4, 1))
+    with pytest.raises(ValueError, match="tiers"):
+        TierPlan(8, 8, cuts=(2, 4), intervals=(2, 2, 1), entities=(8, 1))
+
+
+def test_plan_validation_without_assertions():
+    """Invalid plans must still raise under ``python -O`` (bare asserts are
+    stripped by the optimizer; the invariants are ValueError-backed)."""
+    import subprocess
+    import sys
+
+    code = (
+        "from repro.core.tiers import TierPlan\n"
+        "for bad in [\n"
+        "    dict(cuts=(5, 3), intervals=(2, 2, 1), entities=(8, 4, 1)),\n"
+        "    dict(cuts=(2, 4), intervals=(2, 2, 2), entities=(8, 4, 1)),\n"
+        "    dict(cuts=(2, 4), intervals=(2, 2, 1), entities=(8, 3, 1)),\n"
+        "]:\n"
+        "    try:\n"
+        "        TierPlan(8, 8, **bad)\n"
+        "    except ValueError:\n"
+        "        pass\n"
+        "    else:\n"
+        "        raise SystemExit(f'invalid plan accepted under -O: {bad}')\n"
+        "print('ok')\n"
+    )
+    proc = subprocess.run(
+        [sys.executable, "-O", "-c", code],
+        capture_output=True, text=True,
+        env={**__import__("os").environ, "JAX_PLATFORMS": "cpu"},
+    )
+    assert proc.returncode == 0, proc.stderr
+    assert "ok" in proc.stdout
 
 
 def test_tier_bounds_cover():
@@ -112,6 +150,74 @@ def test_pod_level_schedule():
     out2 = synchronize(params, plan, jnp.int32(2))  # (2+1) % 3 == 0
     w2 = out2["units"]["w"]
     np.testing.assert_allclose(w2[0, 1:], w2[7, 1:], rtol=1e-6)
+
+
+def _lossy(x):
+    """A visibly lossy wire transform (round to a 1/4 grid)."""
+    return jnp.round(x * 4.0) / 4.0
+
+
+@pytest.mark.parametrize("step", [0, 1])
+def test_sync_allones_mask_with_compression_matches_unmasked(step):
+    """An all-ones mask composed with a lossy fed wire is bit-identical to
+    the unmasked compressed path (DESIGN.md §9 + §12 compose exactly)."""
+    N, U = 8, 6
+    params = _params(jax.random.PRNGKey(11), N, U)
+    plan = default_plan(U, N, cuts=(2, 4), intervals=(1, 2, 1),
+                        entities=(N, 4, 1))
+    ref = synchronize(params, plan, jnp.int32(step), compress_fn=_lossy)
+    out = synchronize(params, plan, jnp.int32(step), compress_fn=_lossy,
+                      mask=jnp.ones((N,), jnp.float32))
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sync_zero_participant_group_keeps_exact_params():
+    """A zero-participant entity group keeps its members' *exact* current
+    params. Nothing was uploaded, so nothing may move — not even through
+    the lossy fed wire (the silent group must not 'keep' a lossy-coded
+    copy it never sent)."""
+    N, U = 8, 6
+    params = _params(jax.random.PRNGKey(12), N, U)
+    # tier 2 fed level at I=3 does not fire at step 0, so tier 2 is
+    # entity-level only this round; tier 1 (client units) feds every round.
+    plan = default_plan(U, N, cuts=(2, 4), intervals=(1, 3, 1),
+                        entities=(N, 4, 1))
+    mask = jnp.ones((N,), jnp.float32).at[0].set(0.0).at[1].set(0.0)
+    out = synchronize(params, plan, jnp.int32(0), compress_fn=_lossy,
+                      mask=mask)
+    w_in = np.asarray(params["units"]["w"])
+    w = np.asarray(out["units"]["w"])
+    # entity group {0,1} of tier 2 (units 2..4) has zero participants:
+    # bit-exact hold of the pre-sync params
+    np.testing.assert_array_equal(w[:2, 2:4], w_in[:2, 2:4])
+    # a participating group averages its participants (uncompressed Eq. 3)
+    np.testing.assert_allclose(
+        w[2, 2:4], w_in[2:4, 2:4].mean(0), rtol=1e-6
+    )
+    # the silent clients still *receive* levels whose group has
+    # participants (state lives at the server): tier-1 fed mean moved them
+    assert not np.array_equal(w[:2, :2], w_in[:2, :2])
+
+
+def test_sync_fully_masked_round_is_identity_despite_compression():
+    """With no participants anywhere, synchronize is a bit-exact identity
+    even though the lossy fed transform runs inside the graph — the
+    zero-participant fallback must be the pre-compression tree."""
+    N, U = 8, 6
+    params = _params(jax.random.PRNGKey(13), N, U)
+    plan = default_plan(U, N, cuts=(2, 4), intervals=(1, 1, 1),
+                        entities=(N, 4, 1))
+    out = synchronize(params, plan, jnp.int32(0), compress_fn=_lossy,
+                      mask=jnp.zeros((N,), jnp.float32))
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # teeth: the same round with full participation is NOT an identity
+    # (the wire really is lossy)
+    moved = synchronize(params, plan, jnp.int32(0), compress_fn=_lossy,
+                        mask=jnp.ones((N,), jnp.float32))
+    assert not np.array_equal(np.asarray(moved["units"]["w"]),
+                              np.asarray(params["units"]["w"]))
 
 
 @pytest.mark.parametrize("step", [0, 1, 3, 7])
