@@ -14,12 +14,11 @@ stand-in (see ablations.py) to show the trends hold off-paper.
 """
 from __future__ import annotations
 
-import warnings
 from typing import Callable, Dict, List, Tuple
 
 import numpy as np
 
-from repro.api import ExperimentResult, build, paper_spec
+from repro.api import ExperimentResult
 from repro.core import HsflProblem, solve_bcd, solve_ma, solve_ms
 from repro.core.latency import split_latency, total_latency
 
@@ -31,35 +30,6 @@ RESULTS: List[ExperimentResult] = []
 def record(res: ExperimentResult) -> ExperimentResult:
     RESULTS.append(res)
     return res
-
-
-def paper_problem(
-    seed: int = 0,
-    eps_scale: float = 6.0,
-    compute_scale: float = 1.0,
-    comm_scale: float = 1.0,
-    batch: int = 16,
-) -> HsflProblem:
-    """Deprecated shim: the Sec. VII problem, now built through repro.api.
-
-    Out-of-tree scripts keep working for one release; in-tree code uses
-    ``build(paper_spec(...)).problem`` (or ``run(spec)``) directly.
-    """
-    warnings.warn(
-        "benchmarks.common.paper_problem is deprecated; build the problem "
-        "through repro.api: build(paper_spec(...)).problem",
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    return build(
-        paper_spec(
-            seed=seed,
-            eps_scale=eps_scale,
-            compute_scale=compute_scale,
-            comm_scale=comm_scale,
-            batch=batch,
-        )
-    ).problem
 
 
 def converged_time(prob: HsflProblem, intervals, cuts) -> float:

@@ -32,6 +32,10 @@ Harness -> paper artifact map (details in DESIGN.md §7):
                                      Thm 1 + the fused q8 kernel oracle
     participation_sweep   (ours)     straggler deadline: round-time vs
                                      rounds-to-eps crossover + masked training
+    privacy_energy        (ours)     DP-noised uplinks + per-tier energy pricing:
+                                     bit-exact noiseless/free collapse, solver
+                                     retreat under (eps, delta) / joule budgets,
+                                     sigma^2-inflated Thm 1 vs a real noised run
     ablations             Figs. 8-9  MA / MS ablations (+ real training)
     bound_check           Thm 1      empirical gradient norms vs the bound
     roofline              §g         three-term roofline per (arch x shape)
@@ -47,8 +51,8 @@ def _registry(args):
     from . import (
         ablations, bound_check, compress_sweep, control_drift,
         fig2_latency_vs_cut, fig45_benchmarks, fig67_resources,
-        heterogeneous_cuts, participation_sweep, roofline, sim_scale,
-        solver_scale,
+        heterogeneous_cuts, participation_sweep, privacy_energy, roofline,
+        sim_scale, solver_scale,
     )
 
     return [
@@ -77,6 +81,9 @@ def _registry(args):
         # runs a (tiny) real masked training run off the sampled fleet masks
         ("participation_sweep", "training",
          lambda: participation_sweep.main(args.quick, seed=args.seed)),
+        # runs a (tiny) real DP-noised masked run for the sigma^2 envelope
+        ("privacy_energy", "training",
+         lambda: privacy_energy.main(args.quick, seed=args.seed)),
         ("roofline", "extracted", lambda: _roofline(roofline)),
     ]
 

@@ -14,12 +14,15 @@ _SUBMODULES = (
     "checkpoint",
     "compress",
     "configs",
+    "control",
     "core",
     "data",
+    "energy",
     "kernels",
     "launch",
     "models",
     "optim",
+    "privacy",
     "sim",
 )
 

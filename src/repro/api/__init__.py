@@ -9,10 +9,12 @@ from .spec import (
     ClassesCfg,
     CompressionCfg,
     ControlCfg,
+    EnergyCfg,
     ExperimentSpec,
     HyperCfg,
     ModelCfg,
     ParticipationCfg,
+    PrivacyCfg,
     RunCfg,
     ScenarioCfg,
     SolverCfg,
@@ -38,6 +40,7 @@ from .presets import (
     hetcuts_spec,
     paper_spec,
     participation_spec,
+    privacy_energy_spec,
     quickstart_spec,
     register_experiment,
     robust_spec,

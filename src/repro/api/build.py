@@ -20,6 +20,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Optional, Tuple
 
+import numpy as np
+
 from ..compress.base import CompressionSpec
 from ..core.convergence import (
     HyperSpec,
@@ -55,6 +57,10 @@ class BuiltExperiment:
     problem: HsflProblem
     participation: Optional[ParticipationSpec] = None  # resolved q_m/deadline
     class_spec: Optional[object] = None     # core.classes.CutClassSpec
+    privacy: Optional[object] = None        # privacy.PrivacySpec (analytic)
+    dp_mechanism: Optional[object] = None   # privacy.DPMechanism (engines);
+    #                                         None at z=0 — noiseless graph
+    energy: Optional[object] = None         # energy.EnergySpec
 
 
 def resolve_compression(
@@ -144,6 +150,65 @@ def build(spec: ExperimentSpec) -> BuiltExperiment:
     if compression is not None:
         base = base.with_compression(compression)
 
+    # privacy and energy also land on the base problem, so trace pricing
+    # (dataclasses.replace) carries them into the robust problem unchanged.
+    privacy_spec = None
+    dp_mechanism = None
+    if spec.privacy is not None:
+        from ..privacy import DPMechanism, PrivacySpec
+
+        pv = spec.privacy
+        # σ²-inflation dimension: total trainable parameter count — every
+        # noised coordinate contributes, so this keeps Theorem 1 an
+        # envelope of the noised run (DESIGN.md §15).
+        dim = max(
+            1,
+            int(
+                (
+                    float(np.sum(profile.param_bytes))
+                    + profile.frontend_param_bytes
+                    + profile.head_param_bytes
+                )
+                // 4
+            ),
+        )
+        privacy_spec = PrivacySpec(
+            noise_multiplier=pv.noise_multiplier,
+            clip=pv.clip,
+            delta=pv.delta,
+            epsilon_budget=pv.epsilon_budget,
+            dim=dim,
+        )
+        base = base.with_privacy(privacy_spec)
+        if pv.noise_multiplier > 0.0:
+            # z = 0 constructs NO mechanism: the engine graph stays
+            # bit-identical to the spec without a privacy section.
+            dp_mechanism = DPMechanism(
+                clip=pv.clip,
+                noise_multiplier=pv.noise_multiplier,
+                seed=spec.run.seed,
+            )
+
+    energy_spec = None
+    if spec.energy is not None:
+        from ..energy import EnergySpec
+
+        ec = spec.energy
+        M = system.M
+
+        def tiers(value, n: int) -> Tuple[float, ...]:
+            if isinstance(value, tuple):
+                return value
+            return (float(value),) * n
+
+        energy_spec = EnergySpec(
+            compute_j_per_flop=tiers(ec.compute_j_per_flop, M),
+            act_j_per_byte=tiers(ec.act_j_per_byte, M - 1),
+            model_j_per_byte=tiers(ec.model_j_per_byte, M - 1),
+            budget_j_per_round=ec.budget_j_per_round,
+        ).validate_for(M)
+        base = base.with_energy(energy_spec)
+
     trace = None
     problem = base
     participation = None
@@ -227,4 +292,7 @@ def build(spec: ExperimentSpec) -> BuiltExperiment:
         problem=problem,
         participation=participation,
         class_spec=class_spec,
+        privacy=privacy_spec,
+        dp_mechanism=dp_mechanism,
+        energy=energy_spec,
     )

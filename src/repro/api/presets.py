@@ -11,10 +11,12 @@ from typing import Callable, Dict, Optional, Tuple
 from .spec import (
     ClassesCfg,
     CompressionCfg,
+    EnergyCfg,
     ExperimentSpec,
     HyperCfg,
     ModelCfg,
     ParticipationCfg,
+    PrivacyCfg,
     RunCfg,
     ScenarioCfg,
     SolverCfg,
@@ -32,8 +34,8 @@ def paper_spec(
 ) -> ExperimentSpec:
     """The paper's Sec. VII setting: VGG-16 on the 20-client/5-edge WAN
     system, β=3 synthetic Theorem-1 constants, ε = eps_scale × the I=1
-    floor (exactly what ``benchmarks/common.paper_problem`` used to wire
-    by hand)."""
+    floor — the canonical problem every benchmark harness builds from
+    (``build(paper_spec(...)).problem``)."""
     return ExperimentSpec(
         name="paper-sec7",
         model=ModelCfg(arch="vgg16-cifar10", batch=batch),
@@ -189,6 +191,31 @@ def compressed_spec(
     )
 
 
+def privacy_energy_spec(
+    seed: int = 0,
+    eps_scale: float = 6.0,
+    noise_multiplier: float = 8.0,
+    clip: float = 1e-4,
+    epsilon_budget: Optional[float] = None,
+    budget_j_per_round: Optional[float] = None,
+) -> ExperimentSpec:
+    """Paper problem with DP-noised uplinks and per-tier energy pricing
+    (DESIGN.md §15): the Gaussian mechanism (z, C) noises the Engine-A
+    fed wire, the RDP accountant turns ``epsilon_budget`` into a round
+    cap the BCD solvers honour, and the energy tables price every
+    (I, μ) with ``budget_j_per_round`` as a feasibility constraint."""
+    base = paper_spec(seed=seed, eps_scale=eps_scale)
+    return base.replace(
+        name="privacy-energy",
+        privacy=PrivacyCfg(
+            noise_multiplier=noise_multiplier,
+            clip=clip,
+            epsilon_budget=epsilon_budget,
+        ),
+        energy=EnergyCfg(budget_j_per_round=budget_j_per_round),
+    )
+
+
 EXPERIMENTS: Dict[str, Callable[[], ExperimentSpec]] = {
     "paper-sec7": paper_spec,
     "tpu-pod": tpu_pod_spec,
@@ -197,6 +224,7 @@ EXPERIMENTS: Dict[str, Callable[[], ExperimentSpec]] = {
     "participation-straggler-tail": lambda: participation_spec("straggler-tail"),
     "compressed-int8": lambda: compressed_spec("int8"),
     "hetcuts-lognormal": hetcuts_spec,
+    "privacy-energy": privacy_energy_spec,
 }
 
 

@@ -43,6 +43,8 @@ class ExperimentResult:
     train: Optional[Dict[str, Any]] = None # real-training metrics
     control: Optional[Dict[str, Any]] = None  # adaptive-control run log
     classes: Optional[Dict[str, Any]] = None  # per-class cut assignment
+    privacy: Optional[Dict[str, Any]] = None  # (ε, δ) accountant report
+    energy: Optional[Dict[str, Any]] = None   # per-round / total joules
     provenance: Dict[str, Any] = field(default_factory=dict)  # resolved spec
 
     @property
@@ -63,6 +65,8 @@ class ExperimentResult:
                 "train": self.train,
                 "control": self.control,
                 "classes": self.classes,
+                "privacy": self.privacy,
+                "energy": self.energy,
                 "provenance": self.provenance,
             }
         )
@@ -81,5 +85,7 @@ class ExperimentResult:
             train=d.get("train"),
             control=d.get("control"),
             classes=d.get("classes"),
+            privacy=d.get("privacy"),
+            energy=d.get("energy"),
             provenance=dict(d.get("provenance", {})),
         )

@@ -254,7 +254,8 @@ def _make_step(built: BuiltExperiment, model, plan, opt, with_mask: bool):
     builder = build_train_step_a if built.spec.run.engine == "a" else build_train_step_b
     return jax.jit(
         builder(
-            model, plan, opt, compressor=built.compressor, with_mask=with_mask
+            model, plan, opt, compressor=built.compressor, with_mask=with_mask,
+            privacy=built.dp_mechanism,
         )
     )
 
@@ -304,6 +305,7 @@ def _train(built: BuiltExperiment, cuts, intervals) -> Dict[str, Any]:
     bound = theorem1_bound(
         built.hyper, max(1, rc.rounds), intervals, cuts, omega=omega,
         participation=built.participation,
+        dp_sigma2=built.problem.dp_sigma2,
     )
     out = {
         "engine": rc.engine,
@@ -313,6 +315,15 @@ def _train(built: BuiltExperiment, cuts, intervals) -> Dict[str, Any]:
         "losses": losses,
         "thm1_bound": float(bound),
     }
+    if built.privacy is not None:
+        q1 = float(built.problem.q[0])
+        out["privacy"] = {
+            "noise_multiplier": built.privacy.noise_multiplier,
+            "clip": built.privacy.clip,
+            "dp_sigma2": built.problem.dp_sigma2,
+            "epsilon_spent": built.privacy.accountant(q1).epsilon(rc.rounds),
+            "delta": built.privacy.delta,
+        }
     if with_mask:
         out["mean_participation"] = float(
             np.mean(masks[np.arange(rc.rounds) % masks.shape[0]])
@@ -420,6 +431,7 @@ def _control(built: BuiltExperiment, cuts, intervals) -> Dict[str, Any]:
                 BoundSegment(
                     seg_rounds, intervals, cuts,
                     omega=omega, participation=built.participation,
+                    dp_sigma2=built.problem.dp_sigma2,
                 )
             )
             seg_rounds = 0
@@ -440,6 +452,7 @@ def _control(built: BuiltExperiment, cuts, intervals) -> Dict[str, Any]:
             BoundSegment(
                 seg_rounds, intervals, cuts,
                 omega=omega, participation=built.participation,
+                dp_sigma2=built.problem.dp_sigma2,
             )
         )
 
@@ -447,6 +460,7 @@ def _control(built: BuiltExperiment, cuts, intervals) -> Dict[str, Any]:
     static_bound = theorem1_bound(
         built.hyper, max(1, rc.rounds), init_intervals, init_cuts,
         omega=omega, participation=built.participation,
+        dp_sigma2=built.problem.dp_sigma2,
     )
     p50, p95 = controller.resolve_quantiles((0.5, 0.95))
     return {
@@ -504,6 +518,38 @@ def evaluate_schedule(
     theta = float(p.theta(intervals, cuts))
     R = p.rounds(intervals, cuts)
     total = float(p.total_T(intervals, cuts, R)) if R is not None else None
+
+    privacy = None
+    if built.privacy is not None:
+        q1 = float(p.q[0])
+        acc = built.privacy.accountant(q1)
+        r_max = built.privacy.max_rounds(q1)
+        privacy = {
+            "noise_multiplier": built.privacy.noise_multiplier,
+            "clip": built.privacy.clip,
+            "delta": built.privacy.delta,
+            "dp_sigma2": p.dp_sigma2,
+            "epsilon_budget": built.privacy.epsilon_budget,
+            "max_rounds": r_max,
+            # ε actually spent by the schedule's R-to-target rounds
+            "epsilon_at_schedule": (
+                None if R is None or not np.isfinite(R)
+                else acc.epsilon(int(np.ceil(R)))
+            ),
+        }
+    energy = None
+    if built.energy is not None:
+        e = p.round_energy(intervals, cuts)
+        energy = {
+            "round_energy_j": e,
+            "budget_j_per_round": built.energy.budget_j_per_round,
+            "feasible": p.energy_feasible(intervals, cuts),
+            # total campaign energy to the ε target, when R is finite
+            "total_energy_j": (
+                None if R is None or not np.isfinite(R) else float(e * R)
+            ),
+        }
+
     return ExperimentResult(
         mode=mode,
         cuts=tuple(int(c) for c in cuts),
@@ -512,6 +558,8 @@ def evaluate_schedule(
         rounds_to_eps=float(R) if R is not None else None,
         total_latency=total,
         latency=_latency_breakdown(built, cuts, intervals),
+        privacy=privacy,
+        energy=energy,
         provenance=jsonify(built.spec.to_dict()),
     )
 

@@ -318,6 +318,82 @@ class ClassesCfg:
 
 
 @dataclass(frozen=True)
+class PrivacyCfg:
+    """Client-level DP on the fed-server uplink (DESIGN.md §15).
+
+    ``noise_multiplier`` (z) and ``clip`` (C) parameterize the Gaussian
+    mechanism the Engine-A wire applies per client replica; z = 0 keeps
+    the wire noiseless — ``build`` then constructs no mechanism at all, so
+    the training graph is bit-identical to a spec without this section.
+    ``epsilon_budget`` (with ``delta``) caps the RDP-accounted privacy
+    spend: the solvers turn it into a round cap R ≤ R_max(ε, δ) — i.e. a
+    denominator floor D ≥ 2θ₀/(γ R_max) — and retreat to schedules whose
+    bound reaches the target within the budget.  The mechanism dimension
+    (Theorem-1 σ²-inflation) is resolved by ``build`` from the model
+    profile; it is not a spec knob.
+    """
+
+    noise_multiplier: float = 0.0
+    clip: float = 1.0
+    delta: float = 1e-5
+    epsilon_budget: Optional[float] = None
+
+    def __post_init__(self):
+        if self.noise_multiplier < 0:
+            raise ValueError(
+                f"privacy.noise_multiplier must be >= 0: {self.noise_multiplier}"
+            )
+        if self.clip <= 0:
+            raise ValueError(f"privacy.clip must be positive: {self.clip}")
+        if not 0.0 < self.delta < 1.0:
+            raise ValueError(f"privacy.delta must lie in (0, 1): {self.delta}")
+        if self.epsilon_budget is not None and self.epsilon_budget <= 0:
+            raise ValueError(
+                f"privacy.epsilon_budget must be positive: {self.epsilon_budget}"
+            )
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "PrivacyCfg":
+        return cls(**d)
+
+
+@dataclass(frozen=True)
+class EnergyCfg:
+    """Per-tier energy pricing of the round (DESIGN.md §15).
+
+    Prices accept one scalar (uniform across tiers/links, the common case)
+    or one value per tier (``compute_j_per_flop``, len M) / per link
+    (``act_j_per_byte`` / ``model_j_per_byte``, len M−1).
+    ``budget_j_per_round`` caps the amortized fleet round energy
+    E(I, μ) = E_S + Σ E_{m,A}/I_m as a solver feasibility constraint;
+    without it the section is reporting-only.  All-zero prices with no
+    budget are an exact no-op on every optimum.
+    """
+
+    compute_j_per_flop: Union[float, Tuple[float, ...]] = 1e-11
+    act_j_per_byte: Union[float, Tuple[float, ...]] = 2e-7
+    model_j_per_byte: Union[float, Tuple[float, ...]] = 2e-7
+    budget_j_per_round: Optional[float] = None
+
+    def __post_init__(self):
+        for name in ("compute_j_per_flop", "act_j_per_byte", "model_j_per_byte"):
+            object.__setattr__(self, name, _ratio_tuple(getattr(self, name)))
+            v = getattr(self, name)
+            vals = (v,) if isinstance(v, float) else v
+            if any(x < 0 for x in vals):
+                raise ValueError(f"energy.{name} has a negative price")
+        if self.budget_j_per_round is not None and self.budget_j_per_round <= 0:
+            raise ValueError(
+                f"energy.budget_j_per_round must be positive: "
+                f"{self.budget_j_per_round}"
+            )
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "EnergyCfg":
+        return cls(**d)
+
+
+@dataclass(frozen=True)
 class SolverCfg:
     """Which optimizer of problem (20) runs, with its budgets.
 
@@ -403,6 +479,8 @@ class ExperimentSpec:
     participation: Optional[ParticipationCfg] = None
     control: Optional[ControlCfg] = None
     classes: Optional[ClassesCfg] = None
+    privacy: Optional[PrivacyCfg] = None
+    energy: Optional[EnergyCfg] = None
     name: str = ""
 
     def to_dict(self) -> Dict[str, Any]:
@@ -416,6 +494,8 @@ class ExperimentSpec:
         participation = d.get("participation")
         control = d.get("control")
         classes = d.get("classes")
+        privacy = d.get("privacy")
+        energy = d.get("energy")
         return cls(
             model=ModelCfg.from_dict(d.get("model", {})),
             system=SystemCfg.from_dict(d.get("system", {})),
@@ -433,6 +513,8 @@ class ExperimentSpec:
             ),
             control=None if control is None else ControlCfg.from_dict(control),
             classes=None if classes is None else ClassesCfg.from_dict(classes),
+            privacy=None if privacy is None else PrivacyCfg.from_dict(privacy),
+            energy=None if energy is None else EnergyCfg.from_dict(energy),
             name=d.get("name", ""),
         )
 

@@ -48,6 +48,7 @@ class BoundSegment:
     cuts: Tuple[int, ...]
     omega: float = 0.0
     participation: Union[None, float, Sequence[float], ParticipationSpec] = None
+    dp_sigma2: float = 0.0         # DP noise power (privacy.PrivacySpec)
 
     def __post_init__(self):
         if self.rounds <= 0:
@@ -70,7 +71,8 @@ def piecewise_bound(hp: HyperSpec, segments: Sequence[BoundSegment]) -> float:
     for s in segments:
         w = s.rounds / R
         term2, term3 = bound_round_terms(
-            hp, s.intervals, s.cuts, s.omega, s.participation
+            hp, s.intervals, s.cuts, s.omega, s.participation,
+            dp_sigma2=s.dp_sigma2,
         )
         acc = acc + w * term2
         acc = acc + w * term3

@@ -379,6 +379,26 @@ class BatchedEvaluator:
             self.d = self.d / problem.q[: M - 1][None, :]
         self.c, self.kappa = problem.constants()
         self.scale = 2.0 * problem.hyper.theta0 / problem.hyper.gamma
+        # privacy budget as a denominator floor (0.0 unconstrained, so the
+        # feasibility compare below is bit-identical to D > 0) and energy
+        # prices over the lattice (DESIGN.md §15; masks only, never Θ')
+        self.d_min = problem.d_min()
+        en = problem.energy
+        self.energy_budget = None if en is None else en.budget_j_per_round
+        if en is not None:
+            from ..energy import agg_energy_lattice, split_energy_lattice
+
+            self.e_split = split_energy_lattice(
+                problem.profile, problem.system, en, lattice,
+                problem.compression,
+            )
+            self.e_agg = agg_energy_lattice(
+                problem.profile, problem.system, en, lattice,
+                problem.compression,
+            )
+        else:
+            self.e_split = None
+            self.e_agg = None
 
     @property
     def K(self) -> int:
@@ -405,13 +425,27 @@ class BatchedEvaluator:
                 s = s + (I**2) * self.d[:, m]
         return self.c - self.kappa * s
 
+    def round_energy(self, intervals: Sequence[int]) -> Optional[np.ndarray]:
+        """[K] E(I, μ) — ``e_split + Σ_m e_agg_m / I_m`` in tier order (the
+        accumulation shape of ``numerator``); None without an EnergySpec."""
+        if self.e_split is None:
+            return None
+        M = self.problem.M
+        acc = self.e_agg[:, 0] / float(intervals[0])
+        for m in range(1, M - 1):
+            acc = acc + self.e_agg[:, m] / float(intervals[m])
+        return self.e_split + acc
+
     def theta(self, intervals: Sequence[int]) -> np.ndarray:
-        """[K] exact Θ'(I, μ); +inf where C5 fails or D ≤ 0."""
+        """[K] exact Θ'(I, μ); +inf where C5 fails, D ≤ d_min, or the
+        round energy overruns the budget."""
         from .problem import INFEASIBLE
 
         D = self.denominator(intervals)
         N_ = self.numerator(intervals)
         th = np.full(self.K, INFEASIBLE)
-        ok = self.mem_ok & (D > 0)
+        ok = self.mem_ok & (D > self.d_min)
+        if self.energy_budget is not None:
+            ok = ok & (self.round_energy(intervals) <= self.energy_budget)
         th[ok] = self.scale * N_[ok] / D[ok]
         return th

@@ -38,6 +38,44 @@ def default_init_cuts(n_units: int, M: int) -> Tuple[int, ...]:
     return tuple(max(1, (m + 1) * n_units // M) for m in range(M - 1))
 
 
+_SEED_INTERVALS = (1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64)
+
+
+def _feasible_seed(
+    problem: HsflProblem,
+) -> Optional[Tuple[Tuple[int, ...], Tuple[int, ...]]]:
+    """Best feasible (I, μ) over a geometric interval grid × the cut lattice.
+
+    A privacy ε budget (denominator floor) or a per-round energy budget can
+    leave the default evenly-spread anchor with *no* feasible interval
+    vector — e.g. the intervals large enough to amortize sync energy under
+    the budget push D(I, μ) below the budget's round cap.  BCD needs a
+    feasible starting point, so when the anchor dead-ends we scan the
+    batched evaluator for the lowest-Θ' feasible lattice point and restart
+    there.  Unconstrained problems never take this path.
+    """
+    import itertools
+
+    import numpy as np
+
+    ev = problem.evaluator("numpy")
+    best = None
+    for combo in itertools.product(_SEED_INTERVALS, repeat=problem.M - 1):
+        intervals = (*combo, 1)
+        dens = ev.denominator(intervals)
+        ok = ev.mem_ok & (dens > ev.d_min)
+        if ev.energy_budget is not None:
+            ok = ok & (ev.round_energy(intervals) <= ev.energy_budget)
+        idx = np.flatnonzero(ok)
+        if idx.size == 0:
+            continue
+        th = ev.numerator(intervals)[idx] / dens[idx]
+        j = int(np.argmin(th))
+        if best is None or float(th[j]) < best[0]:
+            best = (float(th[j]), intervals, ev.cuts_at(int(idx[j])))
+    return None if best is None else (best[1], best[2])
+
+
 @dataclass(frozen=True)
 class BcdResult:
     intervals: Tuple[int, ...]
@@ -82,6 +120,19 @@ def solve_bcd(
 
     history: List[float] = []
     theta = problem.theta(intervals, cuts)
+    constrained = problem.d_min() > 0.0 or (
+        problem.energy is not None
+        and problem.energy.budget_j_per_round is not None
+    )
+    if constrained:
+        probe = solve_ma(problem, cuts, backend=backend)
+        if not problem.theta(probe.intervals, cuts) < INFEASIBLE:
+            # the anchor admits no feasible intervals under the budget(s):
+            # restart from the best feasible lattice point instead
+            seed = _feasible_seed(problem)
+            if seed is not None:
+                intervals, cuts = seed
+                theta = problem.theta(intervals, cuts)
     for _ in range(max_iters):
         ma = solve_ma(problem, cuts, backend=backend)
         intervals = ma.intervals

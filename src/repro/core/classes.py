@@ -354,16 +354,90 @@ def class_numerator(
     )
 
 
+def class_split_energy(problem: HsflProblem, spec: CutClassSpec) -> float:
+    """Fleet split energy under per-class cuts: the class-share-weighted
+    mean Σ_c w_c·E_S(μ_c), accumulated in class order (the
+    ``class_weighted_G2_sums`` shape, so the batched per-class tables
+    reproduce it bit-for-bit)."""
+    from ..energy import split_energy
+
+    w = spec.weights()
+    e = w[0] * split_energy(
+        problem.profile, problem.system, problem.energy, spec.cuts[0],
+        problem.compression,
+    )
+    for c in range(1, spec.num_classes):
+        e = e + w[c] * split_energy(
+            problem.profile, problem.system, problem.energy, spec.cuts[c],
+            problem.compression,
+        )
+    return float(e)
+
+
+def class_agg_energy(problem: HsflProblem, spec: CutClassSpec) -> np.ndarray:
+    """``[M-1]`` fed-server sync energy with per-entity union payloads —
+    the energy counterpart of ``class_agg_T`` (same λ bytes, priced
+    2 × J/byte over every entity instead of max-latency)."""
+    system, profile = problem.system, problem.profile
+    en = problem.energy
+    M = problem.M
+    bounds = _class_bounds(spec, profile.n_units)
+    pb = profile.prefix.param_bytes
+    out = np.zeros(M - 1)
+    for m in range(M - 1):
+        J = system.entities[m]
+        if J <= 1:
+            continue  # Eq. (15)/(16) indicator
+        lo, hi = _entity_unions(spec, bounds, m, J)
+        lam = pb[hi] - pb[lo]
+        if m == 0:
+            lam = lam + profile.frontend_param_bytes
+        lam = lam * BITS * model_ratio(problem.compression, m)
+        price = 2.0 * en.model_j_per_byte[m] / BITS
+        out[m] = float(np.sum(lam * price))
+    return out
+
+
+def class_round_energy(
+    problem: HsflProblem, spec: CutClassSpec, intervals: Sequence[int]
+) -> Optional[float]:
+    """E(I, {μ_c}) — amortized like ``energy.round_energy`` (None without
+    an attached EnergySpec)."""
+    if problem.energy is None:
+        return None
+    e = class_split_energy(problem, spec)
+    b = class_agg_energy(problem, spec)
+    acc = b[0] / float(intervals[0])
+    for m in range(1, problem.M - 1):
+        acc = acc + b[m] / float(intervals[m])
+    return float(e + acc)
+
+
+def class_energy_feasible(
+    problem: HsflProblem, spec: CutClassSpec, intervals: Sequence[int]
+) -> bool:
+    """E ≤ budget; vacuously True without a spec or budget."""
+    if problem.energy is None or problem.energy.budget_j_per_round is None:
+        return True
+    return (
+        class_round_energy(problem, spec, intervals)
+        <= problem.energy.budget_j_per_round
+    )
+
+
 def class_theta(
     problem: HsflProblem, spec: CutClassSpec, intervals: Sequence[int]
 ) -> float:
     """Exact Θ'(I, {μ_c}); +inf when infeasible — the scalar oracle the
     batched product evaluation must match bit-for-bit (the arithmetic
-    mirrors ``HsflProblem.theta`` term for term)."""
+    mirrors ``HsflProblem.theta`` term for term, including the privacy
+    D-floor and the energy budget mask of DESIGN.md §15)."""
     if not class_memory_ok(problem, spec):
         return INFEASIBLE
     D = class_denominator(problem, spec, intervals)
-    if D <= 0:
+    if D <= problem.d_min():
+        return INFEASIBLE
+    if not class_energy_feasible(problem, spec, intervals):
         return INFEASIBLE
     return (
         2.0
@@ -378,7 +452,7 @@ def class_rounds(
     problem: HsflProblem, spec: CutClassSpec, intervals: Sequence[int]
 ) -> Optional[float]:
     D = class_denominator(problem, spec, intervals)
-    if D <= 0:
+    if D <= problem.d_min():
         return None
     return 2.0 * problem.hyper.theta0 / (problem.hyper.gamma * D)
 
@@ -497,6 +571,20 @@ class ClassBatchedEvaluator:
         self.q = problem.q
         self.c, self.kappa = problem.constants()
         self.scale = 2.0 * problem.hyper.theta0 / problem.hyper.gamma
+        # privacy D-floor + energy pricing (DESIGN.md §15): 0.0 / None when
+        # unconstrained, keeping theta_rows bit-identical to the pre-§15 path
+        self.d_min = problem.d_min()
+        en = problem.energy
+        self.energy_budget = None if en is None else en.budget_j_per_round
+        if en is not None:
+            from ..energy import split_energy_lattice
+
+            self.e_split_tab = split_energy_lattice(
+                problem.profile, problem.system, en, lattice,
+                problem.compression,
+            )
+        else:
+            self.e_split_tab = None
         # entity j of a J-entity tier hosts classes self._entity_classes[J][j]
         self._entity_classes: Dict[int, List[np.ndarray]] = {}
         N = spec.num_clients
@@ -611,16 +699,59 @@ class ClassBatchedEvaluator:
                 s = s + (I**2) * d[:, m]
         return self.c - self.kappa * s
 
+    def agg_energy(self, assign: np.ndarray) -> np.ndarray:
+        """[R, M-1] sync energy with per-entity union payloads — the
+        batched counterpart of ``class_agg_energy`` (same λ·price order)."""
+        problem = self.problem
+        system, profile = problem.system, problem.profile
+        en = problem.energy
+        M = problem.M
+        pb = profile.prefix.param_bytes
+        out = np.zeros((assign.shape[0], M - 1))
+        for m in range(M - 1):
+            J = system.entities[m]
+            if J <= 1:
+                continue
+            lo, hi = self._unions(assign, m, J)
+            lam = pb[hi] - pb[lo]
+            if m == 0:
+                lam = lam + profile.frontend_param_bytes
+            lam = lam * BITS * model_ratio(problem.compression, m)
+            price = 2.0 * en.model_j_per_byte[m] / BITS
+            out[:, m] = np.sum(lam * price, axis=1)
+        return out
+
+    def round_energy_rows(
+        self, assign: np.ndarray, intervals: Sequence[int]
+    ) -> Optional[np.ndarray]:
+        """[R] E(I, {μ_c}) — class-order weighted split tables plus the
+        amortized union sync energy, matching ``class_round_energy``."""
+        if self.e_split_tab is None:
+            return None
+        e = self.w[0] * self.e_split_tab[assign[:, 0]]
+        for c in range(1, self.C):
+            e = e + self.w[c] * self.e_split_tab[assign[:, c]]
+        agg = self.agg_energy(assign)
+        acc = agg[:, 0] / float(intervals[0])
+        for m in range(1, self.problem.M - 1):
+            acc = acc + agg[:, m] / float(intervals[m])
+        return e + acc
+
     def theta_rows(
         self, assign: np.ndarray, intervals: Sequence[int]
     ) -> np.ndarray:
         """[R] Θ' in the Dinkelbach q-order ``scale · (N/D)`` — the order
         ``solve_ms`` reports, so the C=1 collapse is bit-exact against the
-        single-cut MS optimum; +inf where C5 fails or D ≤ 0."""
+        single-cut MS optimum; +inf where C5 fails, D ≤ d_min, or the
+        round energy overruns the budget."""
         D = self.denominator(assign, intervals)
         N_ = self.numerator(assign, intervals)
         th = np.full(assign.shape[0], INFEASIBLE)
-        ok = self.mem_ok(assign) & (D > 0)
+        ok = self.mem_ok(assign) & (D > self.d_min)
+        if self.energy_budget is not None:
+            ok = ok & (
+                self.round_energy_rows(assign, intervals) <= self.energy_budget
+            )
         th[ok] = self.scale * (N_[ok] / D[ok])
         return th
 
@@ -736,11 +867,17 @@ def solve_ma_classes(
     c, kappa = problem.constants()
     d = class_tier_d(problem, spec)[: M - 1]
     cands = _candidate_intervals(M, a, b, c, kappa, d, i_max)
+    if problem.energy is not None and problem.energy.budget_j_per_round is not None:
+        e_split: Optional[float] = class_split_energy(problem, spec)
+        e_agg: Optional[np.ndarray] = class_agg_energy(problem, spec)
+    else:
+        e_split, e_agg = None, None
     best: Optional[MaSolution] = None
     if cands:
         arr = np.asarray(cands, dtype=np.int64)
         th = _theta_candidates(
-            problem, class_memory_ok(problem, spec), a, b, c, kappa, d, arr
+            problem, class_memory_ok(problem, spec), a, b, c, kappa, d, arr,
+            e_split, e_agg,
         )
         i = int(np.argmin(th))
         if th[i] < INFEASIBLE:

@@ -139,6 +139,7 @@ def bound_round_terms(
     cuts: Sequence[int],
     omega: float = 0.0,
     participation: Union[None, float, Sequence[float], ParticipationSpec] = None,
+    dp_sigma2: float = 0.0,
 ) -> Tuple[float, float]:
     """The two R-independent (per-round) terms of Eq. (8): (variance, drift).
 
@@ -147,12 +148,21 @@ def bound_round_terms(
     each segment's schedule with the *identical* arithmetic — that is what
     makes the single-segment composition collapse bit-exactly to the
     static bound.
+
+    ``dp_sigma2`` (DESIGN.md §15) is the per-round DP noise mass injected
+    at the client→fed-server uploads: per-coordinate Gaussian noise of
+    variance (z·C)² summed over the clipped update's coordinates.  It
+    joins the variance term as a *separate* additive contribution, gated
+    on being nonzero, so the noiseless path evaluates the exact same
+    float expression as before DP existed (bit-exact collapse).
     """
     g, b = hp.gamma, hp.beta
     M = len(intervals)
     q = participation_rates(participation, M)
     d = tier_G2_sums(hp.G2, cuts)
     term2 = b * g * (1.0 + omega) * hp.sigma2_sum / (hp.num_clients * q[0])
+    if dp_sigma2:
+        term2 += b * g * dp_sigma2 / (hp.num_clients * q[0])
     term3 = 4.0 * b**2 * g**2 * sum(
         (I**2) * (dm / qm)
         for I, dm, qm in zip(intervals[:-1], d[:-1], q[:-1])
@@ -168,6 +178,7 @@ def theorem1_bound(
     cuts: Sequence[int],
     omega: float = 0.0,
     participation: Union[None, float, Sequence[float], ParticipationSpec] = None,
+    dp_sigma2: float = 0.0,
 ) -> float:
     """RHS of Eq. (8): bound on (1/R) Σ_t E||∇f||².
 
@@ -182,9 +193,14 @@ def theorem1_bound(
     1/q_1 (the round averages over N·q_1 client gradients) and every
     tier's drift term by 1/q_m (syncs only land on the participating
     fraction of entities).  None recovers full participation exactly.
+
+    ``dp_sigma2`` adds the DP uplink noise mass to the variance term
+    (see ``bound_round_terms``); 0 recovers the noiseless bound exactly.
     """
     term1 = 2.0 * hp.theta0 / (hp.gamma * R)
-    term2, term3 = bound_round_terms(hp, intervals, cuts, omega, participation)
+    term2, term3 = bound_round_terms(
+        hp, intervals, cuts, omega, participation, dp_sigma2
+    )
     return term1 + term2 + term3
 
 
@@ -195,6 +211,7 @@ def corollary1_rounds(
     cuts: Sequence[int],
     omega: float = 0.0,
     participation: Union[None, float, Sequence[float], ParticipationSpec] = None,
+    dp_sigma2: float = 0.0,
 ) -> Optional[float]:
     """Eq. (10): rounds to reach target ε; None if the schedule cannot reach ε."""
     g, b = hp.gamma, hp.beta
@@ -202,6 +219,8 @@ def corollary1_rounds(
     q = participation_rates(participation, M)
     d = tier_G2_sums(hp.G2, cuts)
     denom = eps - b * g * (1.0 + omega) * hp.sigma2_sum / (hp.num_clients * q[0])
+    if dp_sigma2:
+        denom -= b * g * dp_sigma2 / (hp.num_clients * q[0])
     denom -= 4.0 * b**2 * g**2 * sum(
         (I**2) * (dm / qm)
         for I, dm, qm in zip(intervals[:-1], d[:-1], q[:-1])
@@ -213,7 +232,11 @@ def corollary1_rounds(
 
 
 def bound_constants(
-    hp: HyperSpec, eps: float, omega: float = 0.0, q1: float = 1.0
+    hp: HyperSpec,
+    eps: float,
+    omega: float = 0.0,
+    q1: float = 1.0,
+    dp_sigma2: float = 0.0,
 ) -> Tuple[float, float]:
     """(c, kappa) with denominator = c - kappa * Σ 1{I>1} I² d_m  (Eq. 22/24).
 
@@ -222,11 +245,16 @@ def bound_constants(
     ``q1`` < 1 (the client participation rate, DESIGN.md §12) shrinks it
     further — a round only averages N·q_1 stochastic gradients.  The
     per-tier drift inflation 1/q_m enters through ``HsflProblem.tier_d``
-    instead (it scales d_m, not the shared κ).
+    instead (it scales d_m, not the shared κ).  ``dp_sigma2`` (DESIGN.md
+    §15) shrinks c by the DP uplink noise mass as a *separate* gated
+    subtraction, never restructuring the existing float expression, so
+    dp_sigma2 = 0 is bit-identical to the noiseless constants.
     """
     c = eps - hp.beta * hp.gamma * (1.0 + omega) * hp.sigma2_sum / (
         hp.num_clients * q1
     )
+    if dp_sigma2:
+        c -= hp.beta * hp.gamma * dp_sigma2 / (hp.num_clients * q1)
     kappa = 4.0 * hp.beta**2 * hp.gamma**2
     return c, kappa
 

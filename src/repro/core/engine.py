@@ -105,7 +105,7 @@ def masked_mean_loss(losses: jax.Array, w: jax.Array) -> jax.Array:
 def build_train_step_a(
     model, plan: TierPlan, opt: Optimizer, *, sync_opt_state: bool = False,
     fed_round=None, compressor=None, with_mask: bool = False,
-    class_members=None,
+    class_members=None, privacy=None,
 ) -> Callable[..., Tuple[TrainState, jax.Array]]:
     """Engine-A step: vmapped per-client update + hierarchical aggregation.
 
@@ -145,11 +145,34 @@ def build_train_step_a(
     over the clients whose class holds it there.  With identical classes
     the member matrices are the plan's tier slices and the step is
     bit-identical to the dense path.
+
+    ``privacy`` (a ``repro.privacy.DPMechanism``) puts the *same* fed-server
+    params wire under client-level DP: each uploaded replica is per-client
+    L2-clipped and Gaussian-noised *before* the codec sees it (noise under
+    compression would let the codec shave noise the accountant already
+    charged for — the composition order is fixed here, not configurable)
+    and before the Eq. 4 mean.  Keys fold (seed, leaf, step) so every leaf
+    of every round draws independent noise.  Optimizer-moment syncs and
+    local entity syncs stay untouched — only the wire the (ε, δ) accountant
+    meters is noised.  ``build()`` constructs no mechanism at
+    ``noise_multiplier=0``, so the noiseless graph is bit-identical.
     """
     compress_fn = (
         None if compressor is None
         else lambda x: jax.vmap(lambda v: compressor.transform(v))(x)
     )
+
+    def _fed_wire(step):
+        # per-step fed-upload transform: DP (clip + noise) then codec.
+        if privacy is None:
+            return compress_fn
+        salt = iter(range(1_000_000))  # trace-time leaf counter
+
+        def fn(x):
+            y = privacy.transform(x, step, salt=next(salt))
+            return y if compress_fn is None else compress_fn(y)
+
+        return fn
 
     def _sync(tree, step, *, compress=None, mask=None):
         if class_members is not None:
@@ -175,7 +198,7 @@ def build_train_step_a(
             new_opt = _masked_select(new_opt, state.opt_state, w)
             loss = masked_mean_loss(losses, w)
         new_params = _sync(
-            new_params, state.step, compress=compress_fn, mask=mask
+            new_params, state.step, compress=_fed_wire(state.step), mask=mask
         )
         if sync_opt_state and jax.tree.leaves(new_opt):
             new_opt = jax.tree.map(
@@ -220,7 +243,7 @@ def init_state_b(model, plan: TierPlan, opt: Optimizer, key) -> TrainState:
 
 def build_train_step_b(
     model, plan: TierPlan, opt: Optimizer, *, compressor=None,
-    with_mask: bool = False, class_members=None,
+    with_mask: bool = False, class_members=None, privacy=None,
 ) -> Callable[..., Tuple[TrainState, jax.Array]]:
     """Engine-B step: literal split execution.
 
@@ -256,6 +279,14 @@ def build_train_step_b(
             "disagree on which units are client-side).  Use Engine A with "
             "class_members (ragged sync-groups), the production path for "
             "DESIGN.md §14."
+        )
+    if privacy is not None:
+        raise NotImplementedError(
+            "Engine B does not support DP-noised uploads: its fed wire "
+            "carries one model per *entity*, so per-client clipping (the "
+            "unit the (ε, δ) accountant meters) has no faithful placement. "
+            "Use Engine A with privacy (the production DP path), or run "
+            "Engine B noiseless (privacy=None)."
         )
     if with_mask and getattr(spec, "moe", None) is not None:
         raise NotImplementedError(

@@ -234,10 +234,19 @@ def _theta_candidates(
     kappa: float,
     d: np.ndarray,
     cand: np.ndarray,
+    e_split: Optional[float] = None,
+    e_agg: Optional[np.ndarray] = None,
 ) -> np.ndarray:
     """Exact Θ'(I, μ) for ``[C, M-1]`` interval rows at one fixed cut —
     latency terms a/b priced once, accumulation order matching
-    ``problem.numerator``/``denominator``/``theta`` bit-for-bit."""
+    ``problem.numerator``/``denominator``/``theta`` bit-for-bit.
+
+    ``e_split``/``e_agg`` (the fixed cut's split/agg round energies, from
+    ``repro.energy``) mask candidates whose amortized E(I, μ) overruns
+    the problem's energy budget; None skips the pricing entirely, and the
+    D-floor ``problem.d_min()`` is 0.0 without a privacy budget — both
+    checks are bit-identical no-ops when unconstrained (DESIGN.md §15).
+    """
     C = cand.shape[0]
     if not mem_ok:
         return np.full(C, INFEASIBLE)
@@ -252,10 +261,74 @@ def _theta_candidates(
         s = s + np.where(I > 1, (I * I) * d[m], 0.0)
     D = c - kappa * s
     th = np.full(C, INFEASIBLE)
-    ok = D > 0
+    ok = D > problem.d_min()
+    if e_split is not None:
+        e_acc = e_agg[0] / cand[:, 0]
+        for m in range(1, M - 1):
+            e_acc = e_acc + e_agg[m] / cand[:, m]
+        ok = ok & (e_split + e_acc <= problem.energy.budget_j_per_round)
     scale = 2.0 * problem.hyper.theta0 / problem.hyper.gamma
     th[ok] = scale * num[ok] / D[ok]
     return th
+
+
+def _budget_grid(
+    M: int,
+    c: float,
+    kappa: float,
+    d: np.ndarray,
+    d_min: float,
+    i_max: int,
+) -> List[Tuple[int, ...]]:
+    """Interval grid over the D-feasible box, for budget-constrained MA.
+
+    Proposition 1's candidate set is the *unconstrained* stationary
+    neighbourhood; a binding energy budget pushes the optimum to the
+    E(I) = budget boundary (larger I amortizes sync energy), which that
+    set never contains.  But C1 bounds the search: D > d_min forces
+    I_m < sqrt((c − d_min)/(κ d_m)), so the feasible region is a finite
+    box — enumerate it densely (geometric tail past 128, or past 16 when
+    M−1 ≥ 3, to keep the product bounded).  Only priced when a budget
+    binds, so the unconstrained path never sees these rows.
+    """
+    dense = 128 if M <= 3 else 16
+    per: List[List[int]] = []
+    for m in range(M - 1):
+        if kappa > 0 and d[m] > 0:
+            cap = int(math.floor(math.sqrt(max(c - d_min, 0.0) / (kappa * float(d[m])))))
+        else:
+            cap = i_max
+        cap = max(1, min(cap, i_max))
+        vals = list(range(1, min(cap, dense) + 1))
+        v = dense
+        while v < cap:
+            v = min(cap, int(v * 1.25) + 1)
+            vals.append(v)
+        per.append(vals)
+    return [tuple(combo) for combo in itertools.product(*per)]
+
+
+def _energy_terms(problem: HsflProblem, cuts: Sequence[int]):
+    """(E_S, [E_{m,A}]) of the fixed cut when an energy *budget* binds;
+    (None, None) otherwise — the vectorized pass then skips pricing."""
+    en = problem.energy
+    if en is None or en.budget_j_per_round is None:
+        return None, None
+    from ..energy import agg_energy, split_energy
+
+    e_split = split_energy(
+        problem.profile, problem.system, en, cuts, problem.compression
+    )
+    e_agg = np.array(
+        [
+            agg_energy(
+                problem.profile, problem.system, en, cuts, m,
+                problem.compression,
+            )
+            for m in range(problem.M - 1)
+        ]
+    )
+    return e_split, e_agg
 
 
 def solve_ma(
@@ -282,6 +355,11 @@ def solve_ma(
     c, kappa = problem.constants()
     d = problem.tier_d(cuts)[: M - 1]
     cands = _candidate_intervals(M, a, b, c, kappa, d, i_max)
+    e_split, e_agg = _energy_terms(problem, cuts)
+    if e_split is not None:
+        # budget-constrained optimum sits on the E(I) = budget boundary:
+        # append the D-feasible integer box (both backends share the list)
+        cands = cands + _budget_grid(M, c, kappa, d, problem.d_min(), i_max)
 
     best: Optional[MaSolution] = None
     if backend == "scalar":
@@ -292,7 +370,8 @@ def solve_ma(
     elif cands:
         arr = np.asarray(cands, dtype=np.int64)
         th = _theta_candidates(
-            problem, problem.memory_feasible(cuts), a, b, c, kappa, d, arr
+            problem, problem.memory_feasible(cuts), a, b, c, kappa, d, arr,
+            e_split, e_agg,
         )
         i = int(np.argmin(th))  # first-tie, like the scalar strict-< scan
         if th[i] < INFEASIBLE:

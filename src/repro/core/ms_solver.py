@@ -54,19 +54,23 @@ def _nd(problem: HsflProblem, intervals: Sequence[int], cuts) -> Tuple[float, fl
 
 
 def _feasible_cuts(problem: HsflProblem, intervals: Sequence[int]) -> List[Tuple[int, ...]]:
+    d_min = problem.d_min()  # 0.0 unconstrained: bit-identical to D <= 0
     out = []
     for cuts in problem.iter_cut_vectors():
         if not problem.memory_feasible(cuts):
             continue
-        if problem.denominator(intervals, cuts) <= 0:
-            continue  # C1 unreachable with these cuts
+        if problem.denominator(intervals, cuts) <= d_min:
+            continue  # C1 unreachable (or over the ε budget's round cap)
+        if not problem.energy_feasible(intervals, cuts):
+            continue  # E(I, μ) over the per-round energy budget
         out.append(cuts)
     return out
 
 
 _INFEASIBLE_MSG = (
     "MS sub-problem infeasible: no cut vector satisfies C2–C5 with "
-    "a reachable convergence bound (try larger eps or smaller I)."
+    "a reachable convergence bound (try larger eps or smaller I; under a "
+    "privacy/energy budget, loosen epsilon_budget or budget_j_per_round)."
 )
 
 
@@ -137,7 +141,10 @@ def solve_ms(
     ev = problem.evaluator(backend)
     nums = ev.numerator(intervals)
     dens = ev.denominator(intervals)
-    feas = np.flatnonzero(ev.mem_ok & (dens > 0))
+    ok = ev.mem_ok & (dens > ev.d_min)
+    if ev.energy_budget is not None:
+        ok = ok & (ev.round_energy(intervals) <= ev.energy_budget)
+    feas = np.flatnonzero(ok)
     if feas.size == 0:
         raise ValueError(_INFEASIBLE_MSG)
     n, d = nums[feas], dens[feas]

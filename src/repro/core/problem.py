@@ -33,11 +33,23 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Iterator, List, Optional, Protocol, Sequence, Tuple
+from typing import (
+    TYPE_CHECKING,
+    Iterator,
+    List,
+    Optional,
+    Protocol,
+    Sequence,
+    Tuple,
+)
 
 import numpy as np
 
 from ..compress.base import CompressionSpec
+
+if TYPE_CHECKING:  # pragma: no cover - type hints only (no import cycle)
+    from ..energy import EnergySpec
+    from ..privacy import PrivacySpec
 from .convergence import (
     HyperSpec,
     ParticipationSpec,
@@ -73,6 +85,8 @@ class HsflProblem:
     latency_model: Optional[LatencyModel] = None
     compression: Optional[CompressionSpec] = None
     participation: Optional[ParticipationSpec] = None
+    privacy: Optional["PrivacySpec"] = None
+    energy: Optional["EnergySpec"] = None
 
     @property
     def M(self) -> int:
@@ -145,12 +159,32 @@ class HsflProblem:
             )
         return dataclasses.replace(self, compression=compression)
 
+    def with_privacy(self, privacy: Optional["PrivacySpec"]) -> "HsflProblem":
+        """The same problem under a DP-noised fed uplink (DESIGN.md §15):
+        σ²_DP joins the bound's variance term through ``constants()`` and
+        the (ε, δ) budget becomes the denominator floor ``d_min()``."""
+        return dataclasses.replace(self, privacy=privacy)
+
+    def with_energy(self, energy: Optional["EnergySpec"]) -> "HsflProblem":
+        """The same problem under per-tier energy pricing (DESIGN.md §15):
+        a ``budget_j_per_round`` masks schedules with E(I, μ) above it —
+        energy never enters the Θ' arithmetic."""
+        if energy is not None:
+            energy.validate_for(self.M)
+        return dataclasses.replace(self, energy=energy)
+
     # ------------------------------------------------------------------ #
     # objective pieces
     # ------------------------------------------------------------------ #
+    @property
+    def dp_sigma2(self) -> float:
+        """Per-round DP uplink noise mass σ²_DP (0 for the noiseless wire)."""
+        return 0.0 if self.privacy is None else self.privacy.dp_sigma2
+
     def constants(self) -> Tuple[float, float]:
         """(c, κ) of the bound denominator (ω-inflated under compression,
-        1/q_1-inflated under partial participation).
+        1/q_1-inflated under partial participation, σ²_DP-shrunk under a
+        DP-noised uplink).
 
         Memoized on the instance: every input is a frozen field, and the
         scalar solvers re-read (c, κ) at each coordinate step — which the
@@ -159,9 +193,35 @@ class HsflProblem:
         if cached is None:
             q1 = 1.0 if self.participation is None else self.q[0]
             cached = bound_constants(
-                self.hyper, self.eps, omega=self.omega, q1=q1
+                self.hyper, self.eps, omega=self.omega, q1=q1,
+                dp_sigma2=self.dp_sigma2,
             )
             self.__dict__["_constants_cache"] = cached
+        return cached
+
+    def d_min(self) -> float:
+        """Denominator floor from the privacy budget (DESIGN.md §15).
+
+        Corollary 1 gives R(I, μ) = 2θ₀/(γ·D), so the accountant's round
+        cap R ≤ R_max is exactly D ≥ 2θ₀/(γ·R_max) — one uniform
+        threshold every feasibility site compares D against.  Without a
+        budget this is 0.0, making ``D > d_min`` bit-identical to the
+        unconstrained ``D > 0`` check; an unaffordable budget (R_max = 0)
+        returns +inf, marking every schedule infeasible.
+        """
+        cached = self.__dict__.get("_d_min_cache")
+        if cached is None:
+            cached = 0.0
+            if self.privacy is not None and self.privacy.epsilon_budget is not None:
+                rmax = self.privacy.max_rounds(sampling_rate=float(self.q[0]))
+                if rmax is not None:
+                    if rmax <= 0:
+                        cached = INFEASIBLE
+                    else:
+                        cached = 2.0 * self.hyper.theta0 / (
+                            self.hyper.gamma * rmax
+                        )
+            self.__dict__["_d_min_cache"] = cached
         return cached
 
     def tier_d(self, cuts: Sequence[int]) -> np.ndarray:
@@ -235,11 +295,14 @@ class HsflProblem:
         return c - kappa * s
 
     def theta(self, intervals: Sequence[int], cuts: Sequence[int]) -> float:
-        """Exact Θ'(I, μ); +inf when infeasible (D ≤ 0 or C5 violated)."""
+        """Exact Θ'(I, μ); +inf when infeasible (D ≤ d_min, C5 violated,
+        or the round energy exceeds the budget)."""
         if not self.memory_feasible(cuts):
             return INFEASIBLE
         D = self.denominator(intervals, cuts)
-        if D <= 0:
+        if D <= self.d_min():
+            return INFEASIBLE
+        if not self.energy_feasible(intervals, cuts):
             return INFEASIBLE
         return (
             2.0
@@ -250,11 +313,39 @@ class HsflProblem:
         )
 
     def rounds(self, intervals: Sequence[int], cuts: Sequence[int]) -> Optional[float]:
-        """R(I, μ) of Corollary 1 (None if unreachable)."""
+        """R(I, μ) of Corollary 1 (None if unreachable, or if reaching ε
+        would overrun the privacy budget's round cap)."""
         D = self.denominator(intervals, cuts)
-        if D <= 0:
+        if D <= self.d_min():
             return None
         return 2.0 * self.hyper.theta0 / (self.hyper.gamma * D)
+
+    # ------------------------------------------------------------------ #
+    # energy pricing (DESIGN.md §15)
+    # ------------------------------------------------------------------ #
+    def round_energy(
+        self, intervals: Sequence[int], cuts: Sequence[int]
+    ) -> Optional[float]:
+        """E(I, μ) in joules under the attached ``EnergySpec`` (None when
+        no spec is attached) — the scalar canonical-chain oracle."""
+        if self.energy is None:
+            return None
+        from ..energy import round_energy
+
+        return round_energy(
+            self.profile, self.system, self.energy, cuts, intervals,
+            self.compression,
+        )
+
+    def energy_feasible(
+        self, intervals: Sequence[int], cuts: Sequence[int]
+    ) -> bool:
+        """E(I, μ) ≤ budget; vacuously True without a spec or budget, so
+        the unconstrained path never prices energy at all."""
+        if self.energy is None or self.energy.budget_j_per_round is None:
+            return True
+        e = self.round_energy(intervals, cuts)
+        return e <= self.energy.budget_j_per_round
 
     # ------------------------------------------------------------------ #
     # constraints
@@ -372,6 +463,7 @@ class HsflProblem:
         self.__dict__.pop("_constants_cache", None)
         self.__dict__.pop("_tier_d_cache", None)
         self.__dict__.pop("_memory_cache", None)
+        self.__dict__.pop("_d_min_cache", None)
 
     def iter_cut_vectors(
         self, min_tier_units: int = 1

@@ -1,0 +1,123 @@
+"""The executable DP mechanism and its analytic spec (DESIGN.md §15).
+
+``DPMechanism`` is the compressor-shaped stage Engine A applies to the
+client→fed-server model uploads: each uploaded replica (axis 0 of a
+stacked leaf) is L2-clipped to ``clip`` per leaf and perturbed with
+per-coordinate Gaussian noise of std ``noise_multiplier · clip`` — the
+noisy wire HierSFL (arXiv:2401.08723) places at exactly this boundary.
+Noise keys fold the round counter and a trace-time leaf counter into one
+base key, so every (round, leaf) draw is independent and a fixed seed
+reproduces the run.  A ``noise_multiplier`` of 0 never constructs a
+mechanism at all (``build()`` gates it), so the noiseless path executes
+the pre-DP computation graph bit-for-bit.
+
+``PrivacySpec`` is the analytic half the solvers consume: the per-round
+noise mass σ²_DP = (z·C)²·dim joins Theorem 1's variance term (gated,
+``convergence.bound_round_terms``), and the (ε, δ) budget becomes a
+round cap through the accountant — ``HsflProblem.d_min()`` turns
+R ≤ R_max into the denominator floor D ≥ 2θ₀/(γ·R_max).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+from .accountant import DEFAULT_ORDERS, Accountant
+
+
+@dataclass(frozen=True)
+class PrivacySpec:
+    """Analytic view of the DP uplink: noise calibration + (ε, δ) budget.
+
+    ``dim`` is the coordinate count of the noised upload (the full model
+    parameter count in ``build()`` — an upper bound on the client-side
+    upload at any cut, keeping the σ²-inflated bound an envelope).
+    ``epsilon_budget`` None/inf means unconstrained accounting-wise.
+    """
+
+    noise_multiplier: float          # z = noise std / clip norm
+    clip: float                      # C: per-leaf L2 clip on each upload
+    delta: float = 1e-5
+    epsilon_budget: Optional[float] = None
+    dim: int = 1
+
+    def __post_init__(self):
+        if self.noise_multiplier < 0:
+            raise ValueError(f"noise_multiplier < 0: {self.noise_multiplier}")
+        if self.clip <= 0:
+            raise ValueError(f"clip must be positive: {self.clip}")
+        if not (0.0 < self.delta < 1.0):
+            raise ValueError(f"delta outside (0, 1): {self.delta}")
+        if self.epsilon_budget is not None and self.epsilon_budget <= 0:
+            raise ValueError(
+                f"epsilon_budget must be positive: {self.epsilon_budget}"
+            )
+        if self.dim < 1:
+            raise ValueError(f"dim must be >= 1: {self.dim}")
+
+    @property
+    def dp_sigma2(self) -> float:
+        """Per-round DP noise mass entering the Theorem-1 variance term.
+
+        Exactly 0.0 when z = 0, so the gated bound terms vanish and the
+        noiseless constants are bit-identical to the pre-DP arithmetic.
+        """
+        if self.noise_multiplier == 0.0:
+            return 0.0
+        return (self.noise_multiplier * self.clip) ** 2 * self.dim
+
+    def accountant(self, sampling_rate: float = 1.0) -> Accountant:
+        return Accountant(
+            noise_multiplier=self.noise_multiplier,
+            sampling_rate=sampling_rate,
+            delta=self.delta,
+            orders=DEFAULT_ORDERS,
+        )
+
+    def max_rounds(self, sampling_rate: float = 1.0) -> Optional[float]:
+        """Round cap from the ε budget; None = unlimited."""
+        if self.epsilon_budget is None or math.isinf(self.epsilon_budget):
+            return None
+        return self.accountant(sampling_rate).max_rounds(self.epsilon_budget)
+
+
+@dataclass(frozen=True)
+class DPMechanism:
+    """Per-upload clip + Gaussian noise, applied leaf-wise on axis 0.
+
+    ``transform(x, step, salt)`` treats ``x`` as ``[E, ...]`` stacked
+    uploads: row e is scaled by min(1, clip/‖x_e‖₂) and perturbed with
+    N(0, (z·clip)²) per coordinate.  ``step`` (the round counter, traced)
+    and ``salt`` (a per-leaf trace-time counter) are folded into the seed
+    so draws are independent across rounds and leaves yet reproducible.
+    """
+
+    clip: float
+    noise_multiplier: float
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.clip <= 0:
+            raise ValueError(f"clip must be positive: {self.clip}")
+        if self.noise_multiplier < 0:
+            raise ValueError(f"noise_multiplier < 0: {self.noise_multiplier}")
+
+    def transform(self, x, step, salt: int = 0):
+        import jax
+        import jax.numpy as jnp
+
+        flat = x.reshape((x.shape[0], -1))
+        f32 = flat.astype(jnp.float32)
+        norms = jnp.sqrt(jnp.sum(f32 * f32, axis=1))
+        scale = jnp.minimum(1.0, self.clip / jnp.maximum(norms, 1e-12))
+        out = f32 * scale[:, None]
+        if self.noise_multiplier > 0.0:
+            key = jax.random.fold_in(
+                jax.random.fold_in(jax.random.PRNGKey(self.seed), salt),
+                step,
+            )
+            out = out + self.noise_multiplier * self.clip * jax.random.normal(
+                key, out.shape, dtype=out.dtype
+            )
+        return out.astype(x.dtype).reshape(x.shape)

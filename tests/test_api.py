@@ -382,15 +382,13 @@ def test_train_mode_quickstart_runs_and_learns():
     assert np.isfinite(res.train["thm1_bound"])
 
 
-def test_common_paper_problem_shim_warns_and_matches():
-    import warnings
+def test_common_paper_problem_shim_retired():
+    # the deprecated hand-wired constructor is gone; the API preset is the
+    # one way to build the Sec. VII problem (build(paper_spec(...)).problem)
+    import benchmarks.common as common
 
-    from benchmarks.common import paper_problem
-
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        prob = paper_problem(seed=0)
-    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    assert not hasattr(common, "paper_problem")
+    prob = build(paper_spec(seed=0)).problem
     manual = manual_paper_problem(seed=0)
     assert prob.eps == manual.eps
     assert prob.theta((2, 5, 1), (3, 8)) == manual.theta((2, 5, 1), (3, 8))
@@ -400,6 +398,21 @@ def test_top_level_package_exports_api():
     import repro
 
     assert repro.api.ExperimentSpec is ExperimentSpec
+
+
+def test_every_lazy_submodule_imports():
+    # satellite of DESIGN.md §15: repro.__init__ lazily exposes submodules;
+    # each advertised name must import and be a real module
+    import importlib
+    import types
+
+    import repro
+
+    for name in repro._SUBMODULES:
+        mod = getattr(repro, name)
+        assert isinstance(mod, types.ModuleType), name
+        assert mod is importlib.import_module(f"repro.{name}"), name
+    assert {"privacy", "energy", "control"} <= set(repro._SUBMODULES)
 
 
 # --------------------------------------------------------------------------- #

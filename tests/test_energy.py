@@ -1,0 +1,202 @@
+"""Per-tier energy pricing (DESIGN.md §15): scalar chain == lattice
+tables bit-for-bit, spec validation, the free-spec bit-exact collapse,
+and the budget mask moving the MA/BCD optimum identically on both
+backends."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.configs.vgg16_cifar10 import SPEC as VGG
+from repro.core import (
+    HsflProblem, SystemSpec, build_profile, solve_bcd, solve_ma,
+    synthetic_hyperspec,
+)
+from repro.core.convergence import theorem1_bound
+from repro.energy import (
+    EnergySpec,
+    agg_energy,
+    agg_energy_lattice,
+    default_energy_spec,
+    round_energy,
+    split_energy,
+    split_energy_lattice,
+)
+
+
+def make_problem(seed=0, eps_scale=8.0, energy=None):
+    prof = build_profile(VGG, batch=16)
+    system = SystemSpec.paper_three_tier(seed=seed)
+    hp = synthetic_hyperspec(VGG.n_units, 20, beta=3.0, seed=seed)
+    floor = theorem1_bound(hp, 10**9, [1, 1, 1], (3, 8))
+    return HsflProblem(
+        prof, system, hp, eps=eps_scale * floor, energy=energy
+    )
+
+
+# --------------------------------------------------------------------- #
+# scalar oracle == lattice tables
+# --------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_scalar_equals_lattice_bitexact(seed):
+    """split/agg/round energy: the scalar canonical-chain walk and the
+    whole-lattice tables are the same floats, not just close."""
+    rng = np.random.default_rng(seed)
+    prob = make_problem(seed=seed)
+    spec = EnergySpec(
+        compute_j_per_flop=tuple(rng.uniform(1e-12, 1e-10, prob.M)),
+        act_j_per_byte=tuple(rng.uniform(1e-8, 1e-6, prob.M - 1)),
+        model_j_per_byte=tuple(rng.uniform(1e-8, 1e-6, prob.M - 1)),
+    )
+    lattice = prob.cut_lattice()
+    es = split_energy_lattice(prob.profile, prob.system, spec, lattice)
+    ea = agg_energy_lattice(prob.profile, prob.system, spec, lattice)
+    for k in rng.choice(lattice.shape[0], size=12, replace=False):
+        cuts = tuple(int(c) for c in lattice[k])
+        assert split_energy(prob.profile, prob.system, spec, cuts) == es[k]
+        for m in range(prob.M - 1):
+            assert (
+                agg_energy(prob.profile, prob.system, spec, cuts, m)
+                == ea[k, m]
+            )
+        iv = tuple(int(v) for v in rng.integers(1, 9, prob.M))
+        scalar = round_energy(prob.profile, prob.system, spec, cuts, iv)
+        batched = es[k] + sum(
+            ea[k, m] / float(iv[m]) for m in range(prob.M - 1)
+        )
+        assert scalar == pytest.approx(batched, rel=0, abs=0)
+
+
+def test_evaluator_round_energy_matches_problem_oracle(seed=1):
+    """BatchedEvaluator.round_energy == HsflProblem.round_energy (the
+    scalar oracle path through the attached spec), bit-for-bit."""
+    rng = np.random.default_rng(seed)
+    prob = make_problem(seed=seed, energy=default_energy_spec(3))
+    ev = prob.evaluator("numpy")
+    for _ in range(6):
+        iv = tuple(int(v) for v in rng.integers(1, 9, prob.M))
+        rows = ev.round_energy(iv)
+        for k in rng.choice(ev.lattice.shape[0], size=8, replace=False):
+            cuts = tuple(int(c) for c in ev.lattice[k])
+            assert prob.round_energy(iv, cuts) == rows[k]
+
+
+def test_class_energy_matches_scalar_oracle():
+    """ClassBatchedEvaluator.round_energy_rows == class_round_energy for
+    arbitrary per-class assignments, bit-for-bit."""
+    from repro.core import ClassBatchedEvaluator, CutClassSpec
+    from repro.core.classes import class_round_energy
+
+    prob = make_problem(seed=2, energy=default_energy_spec(3))
+    membership = CutClassSpec.uniform(20, 2, (2, 4))
+    ev = ClassBatchedEvaluator(prob, membership, backend="numpy")
+    rng = np.random.default_rng(0)
+    K = ev.lattice.shape[0]
+    assign = rng.integers(0, K, size=(10, 2))
+    iv = (2, 3, 1)
+    rows = ev.round_energy_rows(assign, iv)
+    for r in range(assign.shape[0]):
+        cuts = tuple(
+            tuple(int(c) for c in ev.lattice[assign[r, c]]) for c in range(2)
+        )
+        spec_r = CutClassSpec(class_of=membership.class_of, cuts=cuts)
+        assert class_round_energy(prob, spec_r, iv) == rows[r]
+
+
+# --------------------------------------------------------------------- #
+# spec validation
+# --------------------------------------------------------------------- #
+
+
+def test_energy_spec_validation():
+    with pytest.raises(ValueError, match="negative"):
+        EnergySpec((1e-11, -1.0, 1e-11), (0.0, 0.0), (0.0, 0.0))
+    with pytest.raises(ValueError, match="positive"):
+        EnergySpec((0.0,) * 3, (0.0,) * 2, (0.0,) * 2, budget_j_per_round=0.0)
+    with pytest.raises(ValueError, match="M=3"):
+        EnergySpec((0.0,) * 2, (0.0,) * 2, (0.0,) * 2).validate_for(3)
+    with pytest.raises(ValueError, match="need M-1"):
+        EnergySpec((0.0,) * 3, (0.0,) * 3, (0.0,) * 2).validate_for(3)
+    assert EnergySpec((0.0,) * 3, (0.0,) * 2, (0.0,) * 2).is_free
+    assert not default_energy_spec(3).is_free
+    assert not EnergySpec(
+        (0.0,) * 3, (0.0,) * 2, (0.0,) * 2, budget_j_per_round=1.0
+    ).is_free
+
+
+# --------------------------------------------------------------------- #
+# the solvers: free collapse / binding budget
+# --------------------------------------------------------------------- #
+
+
+def test_free_spec_collapses_bitexact():
+    """Zero prices + no budget: the attached spec is a no-op on BCD."""
+    base = make_problem(seed=0)
+    res0 = solve_bcd(base)
+    free = EnergySpec((0.0,) * 3, (0.0,) * 2, (0.0,) * 2)
+    res1 = solve_bcd(base.with_energy(free))
+    assert (res1.cuts, res1.intervals) == (res0.cuts, res0.intervals)
+    assert res1.theta == res0.theta
+
+
+def test_priced_unbudgeted_spec_collapses_bitexact():
+    """Nonzero prices but no budget: energy is reporting-only, never a
+    mask, so the optimum still cannot move."""
+    base = make_problem(seed=0)
+    res0 = solve_bcd(base)
+    res1 = solve_bcd(base.with_energy(default_energy_spec(3)))
+    assert (res1.cuts, res1.intervals) == (res0.cuts, res0.intervals)
+    assert res1.theta == res0.theta
+
+
+def _binding_budget(prob, res0):
+    """A budget strictly between the cheapest feasible round and E(opt)."""
+    e_opt = prob.round_energy(res0.intervals, res0.cuts)
+    ev = prob.evaluator("numpy")
+    floor = np.inf
+    for I in itertools.product((1, 2, 4, 8, 16, 32, 64), repeat=prob.M - 1):
+        iv = I + (1,)
+        ok = ev.mem_ok & (ev.denominator(iv) > ev.d_min)
+        if ok.any():
+            floor = min(floor, float(ev.round_energy(iv)[ok].min()))
+    assert floor < e_opt
+    return 0.5 * (floor + e_opt), e_opt
+
+
+def test_binding_budget_moves_bcd_optimum_both_backends():
+    """A budget below E(opt) forces a different schedule whose round
+    energy fits, with weakly worse Θ' — identically on the scalar and
+    numpy backends (shared candidate lists, same accumulation order)."""
+    priced = make_problem(seed=0, energy=default_energy_spec(3))
+    res0 = solve_bcd(priced)
+    budget, e_opt = _binding_budget(priced, res0)
+    prob = make_problem(
+        seed=0, energy=default_energy_spec(3, budget_j_per_round=budget)
+    )
+    res_np = solve_bcd(prob, backend="numpy")
+    res_sc = solve_bcd(prob, backend="scalar")
+    assert (res_np.cuts, res_np.intervals) == (res_sc.cuts, res_sc.intervals)
+    assert res_np.theta == res_sc.theta
+    assert (res_np.cuts, res_np.intervals) != (res0.cuts, res0.intervals)
+    assert prob.round_energy(res_np.intervals, res_np.cuts) <= budget
+    assert res_np.theta >= res0.theta
+
+
+def test_ma_budget_grid_scalar_equals_batched():
+    """Under a binding budget the MA candidate set grows by the budget
+    grid; both backends still pick the identical winner."""
+    priced = make_problem(seed=1, energy=default_energy_spec(3))
+    res0 = solve_bcd(priced)
+    budget, _ = _binding_budget(priced, res0)
+    prob = make_problem(
+        seed=1, energy=default_energy_spec(3, budget_j_per_round=budget)
+    )
+    for cuts in (res0.cuts, (3, 8)):
+        ma_np = solve_ma(prob, cuts, backend="numpy")
+        ma_sc = solve_ma(prob, cuts, backend="scalar")
+        assert ma_np.intervals == ma_sc.intervals
+        assert ma_np.theta == ma_sc.theta
+        if np.isfinite(ma_np.theta):
+            assert prob.round_energy(ma_np.intervals, cuts) <= budget

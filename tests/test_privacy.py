@@ -1,0 +1,218 @@
+"""DP uplinks (DESIGN.md §15): the vectorized accountant vs the scalar
+oracle, mechanism noiseless collapse, the ε budget as a denominator floor
+through solve_bcd, and the Engine-B unsupported-path contract."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs.vgg16_cifar10 import SPEC as VGG
+from repro.core import (
+    HsflProblem, SystemSpec, build_profile, solve_bcd, synthetic_hyperspec,
+)
+from repro.core.convergence import theorem1_bound
+from repro.privacy import (
+    Accountant,
+    DPMechanism,
+    PrivacySpec,
+    epsilon_oracle,
+    rounds_for_budget,
+)
+
+
+def make_problem(seed=0, eps_scale=5.0):
+    prof = build_profile(VGG, batch=16)
+    system = SystemSpec.paper_three_tier(seed=seed)
+    hp = synthetic_hyperspec(VGG.n_units, 20, beta=3.0, seed=seed)
+    floor = theorem1_bound(hp, 10**9, [1, 1, 1], (3, 8))
+    return HsflProblem(prof, system, hp, eps=eps_scale * floor)
+
+
+# --------------------------------------------------------------------- #
+# accountant vs the scalar oracle
+# --------------------------------------------------------------------- #
+
+ORACLE_GRID = [
+    (0.8, 1.00, 1),
+    (1.2, 0.50, 10),
+    (2.0, 0.25, 100),
+    (4.0, 0.05, 1000),
+    (8.0, 1.00, 37),
+    (16.0, 0.75, 500),
+]
+
+
+@pytest.mark.parametrize("z,q,R", ORACLE_GRID)
+def test_accountant_matches_scalar_oracle(z, q, R):
+    """Vectorized numpy composition == literal per-round math loops, 1e-9."""
+    acc = Accountant(noise_multiplier=z, sampling_rate=q, delta=1e-5)
+    assert abs(acc.epsilon(R) - epsilon_oracle(z, q, R, 1e-5)) <= 1e-9
+
+
+@pytest.mark.parametrize("z,q", [(1.0, 1.0), (2.0, 0.3), (6.0, 0.8)])
+def test_epsilon_monotone_in_rounds(z, q):
+    acc = Accountant(noise_multiplier=z, sampling_rate=q, delta=1e-5)
+    eps = [acc.epsilon(r) for r in (1, 2, 5, 20, 100, 1000)]
+    assert all(a < b for a, b in zip(eps, eps[1:]))
+
+
+def test_epsilon_monotone_in_inverse_noise():
+    """More noise (larger z) spends strictly less ε per round."""
+    eps = [
+        Accountant(noise_multiplier=z, sampling_rate=0.5).epsilon(50)
+        for z in (0.7, 1.0, 2.0, 4.0, 8.0)
+    ]
+    assert all(a > b for a, b in zip(eps, eps[1:]))
+
+
+def test_epsilon_monotone_in_sampling_rate():
+    """Sampling more of the fleet per round spends weakly more ε."""
+    eps = [
+        Accountant(noise_multiplier=2.0, sampling_rate=q).epsilon(50)
+        for q in (0.05, 0.2, 0.5, 1.0)
+    ]
+    assert all(a < b for a, b in zip(eps, eps[1:]))
+
+
+@pytest.mark.parametrize("z,q,eps_b", [(2.0, 1.0, 5.0), (6.0, 0.4, 80.0)])
+def test_max_rounds_inverts_epsilon(z, q, eps_b):
+    """R_max is the exact boundary: ε(R_max) ≤ budget < ε(R_max + 1)."""
+    acc = Accountant(noise_multiplier=z, sampling_rate=q, delta=1e-5)
+    R = acc.max_rounds(eps_b)
+    assert R == int(R) and R > 0
+    assert acc.epsilon(int(R)) <= eps_b < acc.epsilon(int(R) + 1)
+
+
+def test_noiseless_accounting_degenerates():
+    """z = 0: every round spends infinite ε, so a finite budget allows 0
+    rounds — and an absent/∞ budget is unconstrained (None)."""
+    acc = Accountant(noise_multiplier=0.0, sampling_rate=1.0)
+    assert math.isinf(acc.epsilon(1))
+    assert acc.epsilon(0) == 0.0
+    assert rounds_for_budget(0.0, 1.0, 1e-5, 10.0) == 0.0
+    assert rounds_for_budget(2.0, 1.0, 1e-5, math.inf) is None
+    spec = PrivacySpec(noise_multiplier=0.0, clip=1.0)
+    assert spec.dp_sigma2 == 0.0
+    assert spec.max_rounds() is None
+
+
+def test_privacy_spec_sigma2_scaling():
+    """dp_sigma2 = (z·C)²·dim exactly."""
+    spec = PrivacySpec(noise_multiplier=3.0, clip=0.5, dim=1000)
+    assert spec.dp_sigma2 == (3.0 * 0.5) ** 2 * 1000
+
+
+# --------------------------------------------------------------------- #
+# mechanism
+# --------------------------------------------------------------------- #
+
+
+def test_mechanism_noiseless_is_clip_only():
+    """z = 0 transform == pure per-row L2 clipping; rows already inside
+    the clip ball come back bit-identical."""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(6, 4, 3)).astype(np.float32)
+    x[0] *= 1e-3  # inside the ball: scale = 1 exactly
+    mech = DPMechanism(clip=0.5, noise_multiplier=0.0, seed=0)
+    out = np.asarray(mech.transform(jnp.asarray(x), 3, salt=1))
+    flat = x.reshape(6, -1)
+    norms = np.sqrt((flat * flat).sum(axis=1))
+    ref = (flat * np.minimum(1.0, 0.5 / norms)[:, None]).reshape(x.shape)
+    np.testing.assert_allclose(out, ref, rtol=1e-6)
+    np.testing.assert_array_equal(out[0], x[0])
+
+
+def test_mechanism_noise_reproducible_and_salted():
+    """Same (seed, step, salt) → identical draw; different step or salt →
+    different draw (independent noise per round and leaf)."""
+    import jax.numpy as jnp
+
+    x = jnp.ones((4, 8), jnp.float32) * 1e-3
+    mech = DPMechanism(clip=1.0, noise_multiplier=2.0, seed=7)
+    a = np.asarray(mech.transform(x, 5, salt=0))
+    b = np.asarray(mech.transform(x, 5, salt=0))
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, np.asarray(mech.transform(x, 6, salt=0)))
+    assert not np.array_equal(a, np.asarray(mech.transform(x, 5, salt=1)))
+
+
+# --------------------------------------------------------------------- #
+# the ε budget through the solvers
+# --------------------------------------------------------------------- #
+
+
+def test_zero_noise_spec_collapses_bitexact():
+    """Attaching a z = 0 PrivacySpec leaves the BCD optimum bit-identical:
+    dp_sigma2 = 0 and d_min = 0 make every compare the pre-DP one."""
+    base = make_problem(seed=3, eps_scale=5.0)
+    res0 = solve_bcd(base)
+    prob = base.with_privacy(PrivacySpec(noise_multiplier=0.0, clip=1.0,
+                                         dim=10**6))
+    res1 = solve_bcd(prob)
+    assert (res1.cuts, res1.intervals) == (res0.cuts, res0.intervals)
+    assert res1.theta == res0.theta
+    assert prob.d_min() == 0.0
+
+
+def test_tight_eps_budget_moves_bcd_optimum():
+    """An ε budget inside (R(I=1), R*) caps the rounds the schedule may
+    spend, so BCD retreats to shorter intervals with weakly worse Θ'."""
+    base = make_problem(seed=0, eps_scale=8.0)
+    res0 = solve_bcd(base)
+    r_star = base.rounds(res0.intervals, res0.cuts)
+    r_min = base.rounds((1,) * base.M, res0.cuts)
+    assert r_min < r_star  # the band the budget must land in
+    z, clip = 16.0, 0.1  # tiny dp_sigma2 (dim=1): feasibility preserved
+    acc = Accountant(noise_multiplier=z, sampling_rate=1.0)
+    eps_b = acc.epsilon(int(0.3 * r_min + 0.7 * r_star))
+    prob = base.with_privacy(PrivacySpec(
+        noise_multiplier=z, clip=clip, dim=1, epsilon_budget=eps_b,
+    ))
+    res1 = solve_bcd(prob)
+    r1 = prob.rounds(res1.intervals, res1.cuts)
+    assert res1.intervals != res0.intervals
+    assert res1.theta >= res0.theta
+    assert r1 <= acc.max_rounds(eps_b)
+    assert prob.d_min() > 0.0
+
+
+# --------------------------------------------------------------------- #
+# Engine-B unsupported paths name the supported alternative
+# --------------------------------------------------------------------- #
+
+
+def _tiny_model_plan():
+    from repro.configs import get_reduced
+    from repro.core.tiers import default_plan
+    from repro.models.model import SplittableModel
+
+    spec = get_reduced("smollm-135m")
+    model = SplittableModel(spec)
+    plan = default_plan(spec.n_units, 8, cuts=(1, 2), intervals=(2, 2, 1),
+                        entities=(8, 4, 1))
+    return model, plan
+
+
+def test_engine_b_privacy_error_names_engine_a():
+    from repro.core import build_train_step_b
+    from repro.optim import sgd
+
+    model, plan = _tiny_model_plan()
+    with pytest.raises(NotImplementedError, match="Engine A"):
+        build_train_step_b(
+            model, plan, sgd(1e-2),
+            privacy=DPMechanism(clip=1.0, noise_multiplier=1.0),
+        )
+
+
+def test_engine_b_class_members_error_names_engine_a():
+    from repro.core import build_train_step_b
+    from repro.optim import sgd
+
+    model, plan = _tiny_model_plan()
+    with pytest.raises(NotImplementedError, match="Engine A"):
+        build_train_step_b(
+            model, plan, sgd(1e-2), class_members=((0, 1), (2, 3)),
+        )

@@ -110,3 +110,32 @@ def test_cut_vectors_all_valid(seed):
     for cuts in cuts_list:
         assert prob.valid_cuts(cuts)
         assert all(c >= 1 for c in cuts)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_bound_monotone_in_omega_and_dp_sigma2(seed):
+    """Theorem 1 is non-decreasing in the compression second moment ω and
+    in the DP noise mass dp_sigma2 on random (I, μ, R) — inflating either
+    wire-error term can never tighten the bound (DESIGN.md §9/§15)."""
+    from repro.core import theorem1_bound
+
+    rng = np.random.default_rng(300 + seed)
+    hp = synthetic_hyperspec(
+        VGG.n_units, 20, beta=float(rng.uniform(1, 8)), seed=seed
+    )
+    cuts = tuple(sorted(int(c) for c in rng.integers(1, 15, 2)))
+    I = [int(rng.integers(1, 10)), int(rng.integers(1, 10)), 1]
+    R = int(rng.integers(5, 5000))
+    for omegas, sig2s in (
+        ((0.0, 0.05, 0.3, 1.0, 4.0), (0.7,)),
+        ((0.25,), (0.0, 0.1, 1.0, 10.0, 1e4)),
+    ):
+        vals = [
+            theorem1_bound(hp, R, I, cuts, omega=w, dp_sigma2=s)
+            for w in omegas
+            for s in sig2s
+        ]
+        assert all(a <= b for a, b in zip(vals, vals[1:]))
+    # the zero point is the exact pre-DP/pre-compression bound, not a limit
+    assert theorem1_bound(hp, R, I, cuts, omega=0.0, dp_sigma2=0.0) == \
+        theorem1_bound(hp, R, I, cuts)
