@@ -43,16 +43,52 @@ Harness -> paper artifact map (details in DESIGN.md §7):
 from __future__ import annotations
 
 import argparse
+import contextlib
+import signal
 import sys
 import time
+
+
+class HarnessTimeout(Exception):
+    """A harness overran ``--timeout`` and was interrupted."""
+
+
+@contextlib.contextmanager
+def _alarm(seconds: int):
+    """SIGALRM-based wall-clock limit for one harness.
+
+    Harnesses run sequentially in the main thread, so a signal-based
+    alarm interrupts the straggler itself (a watchdog thread could only
+    observe it).  0 disables the limit; non-main-thread callers (the
+    signal module refuses those) fall back to no limit.
+    """
+    if seconds <= 0:
+        yield
+        return
+    try:
+        prev = signal.signal(
+            signal.SIGALRM,
+            lambda *_: (_ for _ in ()).throw(
+                HarnessTimeout(f"exceeded --timeout {seconds}s")
+            ),
+        )
+    except ValueError:  # not in the main thread
+        yield
+        return
+    signal.alarm(seconds)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, prev)
 
 
 def _registry(args):
     from . import (
         ablations, bound_check, compress_sweep, control_drift,
-        fig2_latency_vs_cut, fig45_benchmarks, fig67_resources,
-        heterogeneous_cuts, participation_sweep, privacy_energy, roofline,
-        sim_scale, solver_scale,
+        fault_tolerance, fig2_latency_vs_cut, fig45_benchmarks,
+        fig67_resources, heterogeneous_cuts, participation_sweep,
+        privacy_energy, roofline, sim_scale, solver_scale,
     )
 
     return [
@@ -84,6 +120,9 @@ def _registry(args):
         # runs a (tiny) real DP-noised masked run for the sigma^2 envelope
         ("privacy_energy", "training",
          lambda: privacy_energy.main(args.quick, seed=args.seed)),
+        # runs the fault-storm drill: guarded training + crash recovery
+        ("fault_tolerance", "training",
+         lambda: fault_tolerance.main(args.quick, seed=args.seed)),
         ("roofline", "extracted", lambda: _roofline(roofline)),
     ]
 
@@ -115,6 +154,10 @@ def main(argv=None) -> int:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write a machine-readable result artifact (rows per "
                          "harness + recorded ExperimentResults) to PATH")
+    ap.add_argument("--timeout", type=int, default=0, metavar="SECONDS",
+                    help="per-harness wall-clock limit; an overrunning "
+                         "harness is interrupted and reported as failed "
+                         "while the rest of the run continues (0 = no limit)")
     args = ap.parse_args(argv)
 
     registry = _registry(args)
@@ -143,7 +186,8 @@ def main(argv=None) -> int:
         print(f"\n{'='*70}\n== {name}\n{'='*70}")
         t0 = time.time()
         try:
-            rows = fn()
+            with _alarm(args.timeout):
+                rows = fn()
             dt = time.time() - t0
             report[name] = {"ok": True, "seconds": dt, "rows": rows}
             print(f"-- {name} ok ({dt:.1f}s)")
@@ -154,11 +198,25 @@ def main(argv=None) -> int:
             print(f"-- {name} FAILED: {e!r}", file=sys.stderr)
     if args.json:
         _write_json(args.json, args, report)
+    _summary(report)
     if failures:
         print(f"\n{len(failures)} harness(es) failed: {failures}", file=sys.stderr)
         return 1
     print(f"\nall {len(jobs)} harnesses passed")
     return 0
+
+
+def _summary(report: dict) -> None:
+    """Pass/fail table over everything that ran, failures last."""
+    if not report:
+        return
+    print(f"\n{'='*70}\n== summary\n{'='*70}")
+    print(f"{'harness':<22s} {'status':<8s} {'seconds':>8s}")
+    for name, r in sorted(report.items(), key=lambda kv: kv[1]["ok"],
+                          reverse=True):
+        status = "ok" if r["ok"] else "FAILED"
+        print(f"{name:<22s} {status:<8s} {r['seconds']:>8.1f}"
+              + ("" if r["ok"] else f"  {r['error']}"))
 
 
 def _write_json(path: str, args, report: dict) -> None:

@@ -11,6 +11,7 @@ from .spec import (
     ControlCfg,
     EnergyCfg,
     ExperimentSpec,
+    FaultsCfg,
     HyperCfg,
     ModelCfg,
     ParticipationCfg,
@@ -36,6 +37,7 @@ from .run import evaluate_schedule, run
 from .presets import (
     EXPERIMENTS,
     compressed_spec,
+    fault_storm_spec,
     get_experiment,
     hetcuts_spec,
     paper_spec,

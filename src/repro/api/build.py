@@ -17,6 +17,7 @@ re-prices the trace over the same wire.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from typing import Optional, Tuple
 
@@ -61,6 +62,10 @@ class BuiltExperiment:
     dp_mechanism: Optional[object] = None   # privacy.DPMechanism (engines);
     #                                         None at z=0 — noiseless graph
     energy: Optional[object] = None         # energy.EnergySpec
+    faults: Optional[object] = None         # faults.FaultSpec (None = no
+    #                                         faults section; a null spec
+    #                                         still resolves, as a no-op)
+    guard: Optional[object] = None          # core.tiers.GuardSpec
 
 
 def resolve_compression(
@@ -98,6 +103,16 @@ def build(spec: ExperimentSpec) -> BuiltExperiment:
             'run mode="control" needs a scenario section: the controller '
             "observes round telemetry from that fleet trace (add scenario=, "
             'e.g. ScenarioCfg(name="flaky-wan"))'
+        )
+    if (
+        spec.faults is not None
+        and spec.run.mode in ("train", "control")
+        and spec.run.engine != "a"
+    ):
+        raise ValueError(
+            'a faults section trains on engine="a": the guarded sync + '
+            "quarantine path (DESIGN.md §16) lives on the Engine-A "
+            f'client-stacked wire (got engine={spec.run.engine!r})'
         )
     if spec.classes is not None and (
         spec.scenario is not None or spec.participation is not None
@@ -209,6 +224,17 @@ def build(spec: ExperimentSpec) -> BuiltExperiment:
         ).validate_for(M)
         base = base.with_energy(energy_spec)
 
+    fault_spec = None
+    guard_spec = None
+    if spec.faults is not None:
+        fault_spec = spec.faults.to_fault_spec()
+        guard_spec = spec.faults.to_guard_spec()
+        # retry pricing (the expected-attempts factor on every link
+        # payload) lands on the base problem before any trace pricing,
+        # mirroring compression; with_faults validates the outage block
+        # against the concrete topology.
+        base = base.with_faults(fault_spec)
+
     trace = None
     problem = base
     participation = None
@@ -219,6 +245,13 @@ def build(spec: ExperimentSpec) -> BuiltExperiment:
         trace = make_trace(
             sc.name, profile, system, rounds=sc.rounds, seed=sc.seed, **sc.params
         )
+        if fault_spec is not None:
+            # layer the fault draws on the scenario's rounds BEFORE trace
+            # pricing, so quantiles / deadline expectations describe the
+            # faulty fleet; a null spec returns the trace object unchanged
+            from ..faults import faulty_trace
+
+            trace = faulty_trace(trace, fault_spec)
         if spec.participation is not None:
             # deadline policy: expectation pricing of the deadline-capped
             # round + 1/q_m bound inflation, composed in one step so the
@@ -251,6 +284,23 @@ def build(spec: ExperimentSpec) -> BuiltExperiment:
             "policy is priced against a fleet trace (add scenario=, e.g. "
             'ScenarioCfg(name="straggler-tail"))'
         )
+
+    if fault_spec is not None and not fault_spec.is_null:
+        # detected faults ARE partial participation: deflate the effective
+        # q_m the Theorem-1 bound sees by the per-tier entity survival of
+        # the spec's own realized fault masks (DESIGN.md §16).  Composes
+        # multiplicatively with a deadline policy's q_m.
+        from ..faults import deflate_participation
+
+        horizon = (
+            spec.scenario.rounds if spec.scenario is not None
+            else max(1, spec.run.rounds)
+        )
+        participation = deflate_participation(
+            problem.participation, fault_spec,
+            system.num_clients, system.entities, horizon,
+        )
+        problem = dataclasses.replace(problem, participation=participation)
 
     class_spec = None
     if spec.classes is not None:
@@ -295,4 +345,6 @@ def build(spec: ExperimentSpec) -> BuiltExperiment:
         privacy=privacy_spec,
         dp_mechanism=dp_mechanism,
         energy=energy_spec,
+        faults=fault_spec,
+        guard=guard_spec,
     )

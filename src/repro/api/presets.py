@@ -13,6 +13,7 @@ from .spec import (
     CompressionCfg,
     EnergyCfg,
     ExperimentSpec,
+    FaultsCfg,
     HyperCfg,
     ModelCfg,
     ParticipationCfg,
@@ -216,6 +217,53 @@ def privacy_energy_spec(
     )
 
 
+def fault_storm_spec(
+    seed: int = 0,
+    rounds: int = 40,
+    crash_rate: float = 0.08,
+    corrupt_rate: float = 0.08,
+    corrupt_mode: str = "nan",
+    link_fail_rate: float = 0.15,
+    checkpoint_every: int = 10,
+    engine_crash_round: Optional[int] = None,
+) -> ExperimentSpec:
+    """The fault-tolerance drill (DESIGN.md §16): the quickstart training
+    run under a simultaneous crash + corrupt-update + retried-link +
+    cell-outage storm, on the flaky-wan fleet.  Crashed clients drop out
+    of the round mask, corrupt replicas are quarantined by the guarded
+    sync, retries re-price every link, the dead cell's clients reroute to
+    siblings, and the Theorem-1 bound runs on fault-deflated q_m —
+    ``benchmarks/fault_tolerance.py`` checks it still envelopes the
+    realized loss."""
+    return ExperimentSpec(
+        name="fault-storm",
+        model=ModelCfg(
+            arch="smollm-135m", variant="reduced", num_layers=4, batch=4, seq=32
+        ),
+        system=SystemCfg(
+            preset="paper-three-tier", num_clients=8, num_edges=4, seed=seed
+        ),
+        hyper=HyperCfg(seed=seed),
+        solver=SolverCfg(kind="fixed", cuts=(1, 3), intervals=(4, 2, 1)),
+        run=RunCfg(mode="train", seed=seed, rounds=rounds, lr=0.1),
+        scenario=ScenarioCfg(name="flaky-wan", rounds=rounds, seed=seed),
+        faults=FaultsCfg(
+            seed=seed,
+            crash_rate=crash_rate,
+            corrupt_rate=corrupt_rate,
+            corrupt_mode=corrupt_mode,
+            link_fail_rate=link_fail_rate,
+            link_retries=2,
+            outage_cells=(0,),
+            outage_tier=1,
+            outage_start=rounds // 4,
+            outage_len=max(1, rounds // 8),
+            checkpoint_every=checkpoint_every,
+            engine_crash_round=engine_crash_round,
+        ),
+    )
+
+
 EXPERIMENTS: Dict[str, Callable[[], ExperimentSpec]] = {
     "paper-sec7": paper_spec,
     "tpu-pod": tpu_pod_spec,
@@ -225,6 +273,7 @@ EXPERIMENTS: Dict[str, Callable[[], ExperimentSpec]] = {
     "compressed-int8": lambda: compressed_spec("int8"),
     "hetcuts-lognormal": hetcuts_spec,
     "privacy-energy": privacy_energy_spec,
+    "fault-storm": fault_storm_spec,
 }
 
 

@@ -126,12 +126,14 @@ def _latency_breakdown(built: BuiltExperiment, cuts, intervals) -> Dict[str, Any
     p = built.problem
     if built.spec.scenario is None:
         pricing = "nominal"
-    elif built.participation is not None:
+    elif built.participation is not None and built.participation.deadline is not None:
         pricing = (
             f"{built.spec.scenario.name}"
             f"@deadline{built.participation.deadline:.4g}s"
         )
     else:
+        # covers fault-deflated participation with no deadline policy:
+        # latency stays quantile-priced, only the q_m side deflates
         pricing = f"{built.spec.scenario.name}@q{built.spec.scenario.quantile}"
     out = {
         "split_T": float(p.split_T(cuts)),
@@ -235,8 +237,10 @@ def _training_setup(built: BuiltExperiment):
 def _participation_masks(built: BuiltExperiment, cuts) -> Optional[np.ndarray]:
     """Deadline-driven per-round client masks sampled from the fleet trace
     at the schedule actually trained (DESIGN.md §12); the trace replays
-    cyclically past its horizon.  ``None`` without a participation policy."""
-    if built.participation is None:
+    cyclically past its horizon.  ``None`` without a participation policy
+    (a fault-deflated spec with no deadline carries q_m only — the fault
+    loop masks crashed clients itself; there is no barrier to miss)."""
+    if built.participation is None or built.participation.deadline is None:
         return None
     from ..sim import participation_masks
 
@@ -251,26 +255,54 @@ def _make_step(built: BuiltExperiment, model, plan, opt, with_mask: bool):
 
     from ..core.engine import build_train_step_a, build_train_step_b
 
-    builder = build_train_step_a if built.spec.run.engine == "a" else build_train_step_b
-    return jax.jit(
-        builder(
-            model, plan, opt, compressor=built.compressor, with_mask=with_mask,
-            privacy=built.dp_mechanism,
-        )
+    kwargs = dict(
+        compressor=built.compressor, with_mask=with_mask,
+        privacy=built.dp_mechanism,
     )
+    if built.spec.run.engine == "a":
+        builder = build_train_step_a
+        if (
+            built.guard is not None
+            and built.faults is not None
+            and not built.faults.is_null
+        ):
+            # live faults: every sync runs behind the non-finite/norm
+            # guard.  A null spec builds the exact clean graph instead —
+            # jit fusion may legally re-order reductions between two
+            # different graphs, so bit-for-bit zero-fault collapse means
+            # emitting the same graph, not an equivalent one.
+            kwargs["guard"] = built.guard
+    else:
+        builder = build_train_step_b
+    return jax.jit(builder(model, plan, opt, **kwargs))
 
 
 def _train(built: BuiltExperiment, cuts, intervals) -> Dict[str, Any]:
-    """Real split training of the spec's model under the schedule."""
+    """Real split training of the spec's model under the schedule.
+
+    With a faults section the loop becomes the fault-tolerant variant
+    (DESIGN.md §16): each round's seeded fault draws corrupt the marked
+    clients' replicas *before* the jitted step (the guard quarantines
+    them inside it), crashed clients drop out of the round mask, a cell
+    outage re-routes its clients' tier sync to sibling cells after the
+    step, and the atomic checkpoint cadence + simulated engine crash
+    exercise ``resume_with_migration`` recovery mid-run.
+    """
+    import os
+    import tempfile
+
     import jax
     import jax.numpy as jnp
 
     from ..core.convergence import theorem1_bound
-    from ..core.engine import init_state_a, init_state_b
+    from ..core.engine import TrainState, init_state_a, init_state_b
     from ..core.tiers import TierPlan
 
     spec = built.spec
     rc = spec.run
+    fc = spec.faults
+    fs = built.faults
+    inject = fs is not None and not fs.is_null
     model, loader, opt, N = _training_setup(built)
     plan = TierPlan(
         n_units=built.model_spec.n_units,
@@ -282,22 +314,97 @@ def _train(built: BuiltExperiment, cuts, intervals) -> Dict[str, Any]:
     key = jax.random.PRNGKey(rc.seed)
 
     masks = _participation_masks(built, cuts)
-    with_mask = masks is not None
+    with_mask = masks is not None or inject
     init = init_state_a if rc.engine == "a" else init_state_b
     state = init(model, plan, opt, key)
     step = _make_step(built, model, plan, opt, with_mask)
 
+    members = None
+    if inject:
+        from ..faults import (
+            apply_corruption,
+            assignment_members,
+            expand_faults,
+            outage_assignment,
+            reroute_entity_sync,
+        )
+
+        if fs.has_outage:
+            J = built.system.entities[fs.outage_tier]
+            members = assignment_members(
+                outage_assignment(N, J, fs.outage_cells), J
+            )
+
+    ckpt_path = None
+    n_ckpts = 0
+    recovered_round = None
+    if fc is not None and fc.checkpoint_every > 0:
+        from ..checkpoint import save_checkpoint
+
+        d = fc.checkpoint_dir or tempfile.mkdtemp(prefix="repro-ckpt-")
+        ckpt_path = os.path.join(d, "engine.npz")
+
+    n_faulty_total = 0
+    faulty_rounds = 0
     losses = []
     for r in range(rc.rounds):
         batch = {k: jnp.asarray(v) for k, v in loader.next_round().items()}
+        mrow = None
+        if masks is not None:
+            mrow = np.asarray(masks[r % masks.shape[0]], dtype=bool)
+        if inject:
+            rf = expand_faults(fs, r, N)
+            if rf.corrupt.any():
+                state = TrainState(
+                    apply_corruption(state.params, rf.corrupt, fs),
+                    state.opt_state,
+                    state.step,
+                )
+            base_m = np.ones(N, dtype=bool) if mrow is None else mrow
+            mrow = base_m & ~rf.crashed
+            if not mrow.any():
+                raise ValueError(
+                    f"round {r}: every client crashed or missed the "
+                    "deadline — an all-faulty round has no aggregate; "
+                    "lower crash_rate or loosen the deadline"
+                )
+            if rf.faulty.any():
+                faulty_rounds += 1
+                n_faulty_total += rf.n_faulty
         if with_mask:
-            mk = jnp.asarray(
-                masks[r % masks.shape[0]], dtype=jnp.float32
+            state, loss = step(
+                state, batch, jnp.asarray(mrow, dtype=jnp.float32)
             )
-            state, loss = step(state, batch, mk)
         else:
             state, loss = step(state, batch)
+        if inject and rf.cell_out and members is not None:
+            # dead cells' clients adopt their sibling cell's tier mean
+            state = TrainState(
+                reroute_entity_sync(
+                    state.params, plan, fs.outage_tier, members
+                ),
+                state.opt_state,
+                state.step,
+            )
         losses.append(float(loss))
+        if ckpt_path is not None and (r + 1) % fc.checkpoint_every == 0:
+            save_checkpoint(
+                ckpt_path, state, step=r + 1,
+                meta={"cuts": list(cuts), "intervals": list(intervals)},
+            )
+            n_ckpts += 1
+        if fc is not None and fc.engine_crash_round == r:
+            from ..control import resume_with_migration
+
+            if n_ckpts == 0:
+                raise ValueError(
+                    f"engine crashed at round {r} before the first "
+                    f"checkpoint (checkpoint_every={fc.checkpoint_every}) "
+                    "— nothing to resume from"
+                )
+            template = init(model, plan, opt, key)
+            state, _, _ = resume_with_migration(ckpt_path, template, plan)
+            recovered_round = r
         if rc.log_every and ((r + 1) % rc.log_every == 0 or r == 0):
             print(f"round {r+1:5d}  loss {losses[-1]:.4f}")
 
@@ -315,6 +422,19 @@ def _train(built: BuiltExperiment, cuts, intervals) -> Dict[str, Any]:
         "losses": losses,
         "thm1_bound": float(bound),
     }
+    if fc is not None:
+        out["faults"] = {
+            "n_faulty_total": int(n_faulty_total),
+            "faulty_rounds": int(faulty_rounds),
+            "fault_rate": float(n_faulty_total) / float(N * max(1, rc.rounds)),
+            "checkpoints": int(n_ckpts),
+            "recovered_round": recovered_round,
+            "deflated_q": (
+                None if built.participation is None
+                else [float(v) for v in built.participation.q]
+            ),
+            "retry_mult": fs.retry_mult if fs is not None else None,
+        }
     if built.privacy is not None:
         q1 = float(built.problem.q[0])
         out["privacy"] = {
@@ -324,7 +444,7 @@ def _train(built: BuiltExperiment, cuts, intervals) -> Dict[str, Any]:
             "epsilon_spent": built.privacy.accountant(q1).epsilon(rc.rounds),
             "delta": built.privacy.delta,
         }
-    if with_mask:
+    if masks is not None:
         out["mean_participation"] = float(
             np.mean(masks[np.arange(rc.rounds) % masks.shape[0]])
         )
@@ -380,7 +500,27 @@ def _control(built: BuiltExperiment, cuts, intervals) -> Dict[str, Any]:
     plan = make_plan(cuts, intervals)
     key = jax.random.PRNGKey(rc.seed)
     masks = _participation_masks(built, cuts)
-    with_mask = masks is not None
+    fs = built.faults
+    inject = fs is not None and not fs.is_null
+    members = None
+    if inject:
+        from ..core.engine import TrainState
+        from ..faults import (
+            apply_corruption,
+            assignment_members,
+            expand_faults,
+            outage_assignment,
+            reroute_entity_sync,
+        )
+
+        if fs.has_outage:
+            members = assignment_members(
+                outage_assignment(
+                    N, built.system.entities[fs.outage_tier], fs.outage_cells
+                ),
+                built.system.entities[fs.outage_tier],
+            )
+    with_mask = masks is not None or inject
     init = init_state_a if rc.engine == "a" else init_state_b
     state = init(model, plan, opt, key)
     step = _make_step(built, model, plan, opt, with_mask)
@@ -398,21 +538,50 @@ def _control(built: BuiltExperiment, cuts, intervals) -> Dict[str, Any]:
         warm_start=cc.warm_start,
         backend=cc.backend,
         max_switches=cc.max_switches,
+        fault_tol=cc.fault_tol,
     )
 
     omega = 0.0 if built.compression is None else built.compression.omega
     segments = []
     seg_rounds = 0
     losses = []
+    n_faulty_total = 0
     for r in range(rc.rounds):
         rr = r % trace.rounds
         batch = {k: jnp.asarray(v) for k, v in loader.next_round().items()}
+        mrow = None
+        if masks is not None:
+            mrow = np.asarray(masks[r % masks.shape[0]], dtype=bool)
+        n_faulty = 0
+        if inject:
+            rf = expand_faults(fs, rr, N)
+            if rf.corrupt.any():
+                state = TrainState(
+                    apply_corruption(state.params, rf.corrupt, fs),
+                    state.opt_state,
+                    state.step,
+                )
+            base_m = np.ones(N, dtype=bool) if mrow is None else mrow
+            mrow = base_m & ~rf.crashed
+            if not mrow.any():
+                raise ValueError(
+                    f"round {r}: every client crashed or missed the "
+                    "deadline — an all-faulty round has no aggregate"
+                )
+            n_faulty = rf.n_faulty
+            n_faulty_total += n_faulty
         if with_mask:
-            mrow = masks[r % masks.shape[0]]
             state, loss = step(state, batch, jnp.asarray(mrow, dtype=jnp.float32))
         else:
-            mrow = None
             state, loss = step(state, batch)
+        if inject and rf.cell_out and members is not None:
+            state = TrainState(
+                reroute_entity_sync(
+                    state.params, plan, fs.outage_tier, members
+                ),
+                state.opt_state,
+                state.step,
+            )
         losses.append(float(loss))
         seg_rounds += 1
         if rc.log_every and ((r + 1) % rc.log_every == 0 or r == 0):
@@ -423,6 +592,7 @@ def _control(built: BuiltExperiment, cuts, intervals) -> Dict[str, Any]:
             trace, rr, cuts,
             mask=None if mrow is None else np.asarray(mrow, dtype=bool),
             loss=losses[-1],
+            n_faulty=n_faulty,
         )
         controller.observe(obs)
         dec = controller.maybe_replan(r)
@@ -500,6 +670,8 @@ def _control(built: BuiltExperiment, cuts, intervals) -> Dict[str, Any]:
         "static_bound": float(static_bound),
         "resolve_p50_s": p50,
         "resolve_p95_s": p95,
+        "n_faulty_total": int(n_faulty_total),
+        "windowed_fault_rate": float(controller.fault_rate()),
     }
 
 

@@ -241,10 +241,16 @@ class ControlCfg:
     warm_start: bool = True        # seed BCD/Dinkelbach at the current optimum
     backend: str = "auto"          # re-solve lattice backend
     max_switches: int = 0          # hard cap on schedule changes (0 = none)
+    fault_tol: float = 1.0         # windowed fault-rate drift trigger
+    #                                (DESIGN.md §16); 1.0 = never trips
 
     def __post_init__(self):
         if self.window < 2:
             raise ValueError(f"control window must be >= 2: {self.window}")
+        if not 0.0 < self.fault_tol <= 1.0:
+            raise ValueError(
+                f"control fault_tol must lie in (0, 1]: {self.fault_tol}"
+            )
         if self.min_window < 2:
             raise ValueError(
                 f"control min_window must be >= 2: {self.min_window}"
@@ -394,6 +400,99 @@ class EnergyCfg:
 
 
 @dataclass(frozen=True)
+class FaultsCfg:
+    """Fault injection + fault-tolerant training (DESIGN.md §16).
+
+    The fault fields mirror ``repro.faults.FaultSpec`` one-to-one:
+    per-round crash / corrupt-update / link-retry / cell-outage draws from
+    the spec's own seeded streams, layered on whatever scenario the run
+    prices (a spec with all rates zero and no outage composes to a
+    bit-exact no-op).  ``build`` threads the spec everywhere at once —
+    retry-priced latency tables, fault-adjusted trace, deflated q_m for
+    the Theorem-1 bound — and ``run`` modes "train"/"control" inject the
+    data-plane faults into the engine loop behind the guarded sync.
+
+    ``guard_norm_factor`` sets the quarantine threshold of the non-finite
+    / norm-blow-up guard (``core.tiers.GuardSpec``).  ``checkpoint_every``
+    > 0 saves an atomic engine checkpoint that cadence (to
+    ``checkpoint_dir`` or a run-temp dir); ``engine_crash_round`` r kills
+    the engine after round r's step and resumes from the last checkpoint
+    (``control.resume_with_migration``) — the recovery drill the
+    fault-tolerance benchmark times.
+    """
+
+    seed: int = 0
+    crash_rate: float = 0.0
+    crash_stage: str = "uplink"
+    corrupt_rate: float = 0.0
+    corrupt_mode: str = "nan"      # nan | inf | scale | bitflip
+    corrupt_scale: float = 1e6
+    link_fail_rate: float = 0.0
+    link_retries: int = 2
+    outage_cells: Tuple[int, ...] = ()
+    outage_tier: int = 1
+    outage_start: int = 0
+    outage_len: int = 0
+    guard_norm_factor: float = 1e4
+    checkpoint_every: int = 0      # 0 = no checkpoints
+    checkpoint_dir: Optional[str] = None
+    engine_crash_round: Optional[int] = None
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "outage_cells", _int_tuple(self.outage_cells) or ()
+        )
+        self.to_fault_spec()       # delegate fault-field validation
+        self.to_guard_spec()       # ... and the guard threshold's
+        if self.checkpoint_every < 0:
+            raise ValueError(
+                f"faults.checkpoint_every must be >= 0: {self.checkpoint_every}"
+            )
+        if self.engine_crash_round is not None:
+            if self.engine_crash_round < 0:
+                raise ValueError(
+                    "faults.engine_crash_round must be >= 0: "
+                    f"{self.engine_crash_round}"
+                )
+            if self.checkpoint_every < 1:
+                raise ValueError(
+                    "faults.engine_crash_round needs checkpoint_every >= 1 "
+                    "— recovery resumes from the last saved checkpoint"
+                )
+
+    def to_fault_spec(self):
+        """The analytic/injection ``repro.faults.FaultSpec`` this declares."""
+        from ..faults import FaultSpec
+
+        return FaultSpec(
+            seed=self.seed,
+            crash_rate=self.crash_rate,
+            crash_stage=self.crash_stage,
+            corrupt_rate=self.corrupt_rate,
+            corrupt_mode=self.corrupt_mode,
+            corrupt_scale=self.corrupt_scale,
+            link_fail_rate=self.link_fail_rate,
+            link_retries=self.link_retries,
+            outage_cells=self.outage_cells,
+            outage_tier=self.outage_tier,
+            outage_start=self.outage_start,
+            outage_len=self.outage_len,
+        )
+
+    def to_guard_spec(self):
+        """The ``core.tiers.GuardSpec`` the engine's guarded syncs use."""
+        from ..core.tiers import GuardSpec
+
+        return GuardSpec(norm_factor=self.guard_norm_factor)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "FaultsCfg":
+        d = dict(d)
+        d["outage_cells"] = tuple(d.get("outage_cells", ()))
+        return cls(**d)
+
+
+@dataclass(frozen=True)
 class SolverCfg:
     """Which optimizer of problem (20) runs, with its budgets.
 
@@ -481,6 +580,7 @@ class ExperimentSpec:
     classes: Optional[ClassesCfg] = None
     privacy: Optional[PrivacyCfg] = None
     energy: Optional[EnergyCfg] = None
+    faults: Optional[FaultsCfg] = None
     name: str = ""
 
     def to_dict(self) -> Dict[str, Any]:
@@ -496,6 +596,7 @@ class ExperimentSpec:
         classes = d.get("classes")
         privacy = d.get("privacy")
         energy = d.get("energy")
+        faults = d.get("faults")
         return cls(
             model=ModelCfg.from_dict(d.get("model", {})),
             system=SystemCfg.from_dict(d.get("system", {})),
@@ -515,6 +616,7 @@ class ExperimentSpec:
             classes=None if classes is None else ClassesCfg.from_dict(classes),
             privacy=None if privacy is None else PrivacyCfg.from_dict(privacy),
             energy=None if energy is None else EnergyCfg.from_dict(energy),
+            faults=None if faults is None else FaultsCfg.from_dict(faults),
             name=d.get("name", ""),
         )
 

@@ -44,14 +44,25 @@ def save_checkpoint(
         json.dumps({"step": int(step), **(meta or {})}).encode(), dtype=np.uint8
     )
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    # atomic write: tmp + rename
+    # atomic + durable write: tmp in the SAME directory (os.replace must
+    # not cross filesystems), fsync the file so the rename never installs
+    # a partially-flushed payload, then fsync the directory so the rename
+    # itself survives a crash — a reader of ``path`` sees either the old
+    # complete checkpoint or the new complete one, never a torn file
     d = os.path.dirname(os.path.abspath(path))
     fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp.npz")
     os.close(fd)
     try:
         with open(tmp, "wb") as f:
             np.savez(f, **payload)
+            f.flush()
+            os.fsync(f.fileno())
         os.replace(tmp, path)
+        dfd = os.open(d, os.O_RDONLY)
+        try:
+            os.fsync(dfd)
+        finally:
+            os.close(dfd)
     finally:
         if os.path.exists(tmp):
             os.remove(tmp)

@@ -86,6 +86,7 @@ class Controller:
         warm_start: bool = True,
         backend: str = "auto",
         max_switches: int = 0,
+        fault_tol: float = 1.0,
     ):
         self.cuts = tuple(int(c) for c in cuts)
         self.intervals = tuple(int(i) for i in intervals)
@@ -96,6 +97,10 @@ class Controller:
         self.warm_start = bool(warm_start)
         self.backend = backend
         self.max_switches = int(max_switches)
+        # sustained-fault-burst trigger (DESIGN.md §16): windowed mean
+        # fraction of clients lost per round; 1.0 disables (rate ≤ 1).
+        self.fault_tol = float(fault_tol)
+        self._fault_window: List[float] = []
         if deadline is None and problem.participation is not None:
             deadline = problem.participation.deadline
         self.deadline = deadline
@@ -154,6 +159,17 @@ class Controller:
             obs, self.base.profile, self.base.system, self.base.compression
         )
         self.window_model.push(state, mask=obs.mask)
+        self._fault_window.append(
+            float(obs.n_faulty) / float(self.base.system.num_clients)
+        )
+        if len(self._fault_window) > self.window_model.window:
+            self._fault_window.pop(0)
+
+    def fault_rate(self) -> float:
+        """Windowed mean fraction of clients lost to faults per round."""
+        if not self._fault_window:
+            return 0.0
+        return float(np.mean(self._fault_window))
 
     def windowed_problem(self) -> HsflProblem:
         """The problem the re-solve runs against: the base physics with the
@@ -216,6 +232,8 @@ class Controller:
             agg_obs, self._priced_agg,
             float(self._windowed_q()[0]), self._priced_q1,
             self.rel_tol,
+            fault_rate_obs=self.fault_rate(),
+            fault_tol=self.fault_tol,
         )
         if not report.drifted:
             return None

@@ -55,6 +55,9 @@ class RoundObservation:
     fed_down: Tuple[Optional[np.ndarray], ...]     # [M-1] entries of [J_m]
     mask: Optional[np.ndarray] = None              # [N] bool
     loss: Optional[float] = None
+    n_faulty: int = 0                              # clients lost to faults
+                                                   # this round (crash +
+                                                   # quarantine, §16)
 
 
 def observe_round(
@@ -63,6 +66,7 @@ def observe_round(
     cuts: Sequence[int],
     mask: Optional[np.ndarray] = None,
     loss: Optional[float] = None,
+    n_faulty: int = 0,
 ) -> RoundObservation:
     """Measure round ``r`` of a fleet trace at the current cut vector.
 
@@ -103,6 +107,7 @@ def observe_round(
         fed_down=tuple(fed_down),
         mask=None if mask is None else np.asarray(mask, dtype=bool).copy(),
         loss=None if loss is None else float(loss),
+        n_faulty=int(n_faulty),
     )
 
 

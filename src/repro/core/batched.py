@@ -140,18 +140,23 @@ def boundary_bits_lattice(
     lattice: np.ndarray,
     m: int,
     compression: Optional[CompressionSpec] = None,
+    retry_mult: Optional[float] = None,
 ) -> np.ndarray:
     """``[K]`` boundary-m activation/gradient bits (Eq. 12/14), matching
-    ``split_stages``'s ``boundary_bits`` multiply order."""
+    ``split_stages``'s ``boundary_bits`` multiply order — including the
+    trailing retry-attempt factor (DESIGN.md §16), applied last so scalar
+    and batched stay bit-equal."""
     cut = lattice[:, m]
     act = np.where(cut > 0, profile.act_bytes[np.maximum(cut - 1, 0)], 0.0)
-    return profile.batch * act * BITS * act_ratio(compression, m)
+    bits = profile.batch * act * BITS * act_ratio(compression, m)
+    return bits if retry_mult is None else bits * retry_mult
 
 
 def split_work_tensor(
     profile: LayerProfile,
     lattice: np.ndarray,
     compression: Optional[CompressionSpec] = None,
+    retry_mult: Optional[float] = None,
 ) -> np.ndarray:
     """``[K, S]`` stage works in canonical chain order for every row —
     the batched counterpart of ``latency.split_stages`` work values."""
@@ -167,7 +172,11 @@ def split_work_tensor(
         elif kind == "compute_bwd":
             cols.append(bwd[:, idx])
         else:  # uplink / downlink share the boundary payload
-            cols.append(boundary_bits_lattice(profile, lattice, idx, compression))
+            cols.append(
+                boundary_bits_lattice(
+                    profile, lattice, idx, compression, retry_mult
+                )
+            )
     return np.stack(cols, axis=1)
 
 
@@ -175,9 +184,11 @@ def model_bits_lattice(
     profile: LayerProfile,
     lattice: np.ndarray,
     compression: Optional[CompressionSpec] = None,
+    retry_mult: Optional[float] = None,
 ) -> np.ndarray:
     """``[K, M-1]`` fed-server model bits λ_m (Eq. 15/16 payload), matching
-    ``aggregation_phases``'s ``tier_param_bytes · 8 · ratio`` order."""
+    ``aggregation_phases``'s ``tier_param_bytes · 8 · ratio`` order with
+    the retry factor applied last (DESIGN.md §16)."""
     M = lattice.shape[1] + 1
     bnds = lattice_bounds(lattice, profile.n_units)
     cs = profile.prefix.param_bytes
@@ -186,7 +197,10 @@ def model_bits_lattice(
         lam = cs[bnds[:, m + 1]] - cs[bnds[:, m]]
         if m == 0:
             lam = lam + profile.frontend_param_bytes
-        out[:, m] = lam * BITS * model_ratio(compression, m)
+        lam = lam * BITS * model_ratio(compression, m)
+        if retry_mult is not None:
+            lam = lam * retry_mult
+        out[:, m] = lam
     return out
 
 
@@ -280,9 +294,10 @@ def nominal_split_table(
     lattice: np.ndarray,
     compression: Optional[CompressionSpec] = None,
     backend: str = "numpy",
+    retry_mult: Optional[float] = None,
 ) -> np.ndarray:
     """``[K]`` T_S(μ) for every lattice row (Eq. 17)."""
-    works = split_work_tensor(profile, lattice, compression)
+    works = split_work_tensor(profile, lattice, compression, retry_mult)
     rates = nominal_stage_rates(system, lattice.shape[1] + 1)
     return accumulate_chain(works, rates, backend)
 
@@ -293,10 +308,11 @@ def nominal_agg_table(
     lattice: np.ndarray,
     compression: Optional[CompressionSpec] = None,
     backend: str = "numpy",
+    retry_mult: Optional[float] = None,
 ) -> np.ndarray:
     """``[K, M-1]`` T_{m,A}(μ) for every lattice row (Eq. 18)."""
     M = lattice.shape[1] + 1
-    lam = model_bits_lattice(profile, lattice, compression)
+    lam = model_bits_lattice(profile, lattice, compression, retry_mult)
     agg = np.zeros((lattice.shape[0], M - 1))
     for m in range(M - 1):
         if system.entities[m] <= 1:
@@ -351,17 +367,18 @@ class BatchedEvaluator:
         self.mem_ok = memory_mask(problem.profile, problem.system, lattice)
         lm = problem.latency_model
         pp = problem.participation
+        rm = problem.retry_mult
         if lm is None:
             self.split = nominal_split_table(
                 problem.profile, problem.system, lattice,
-                problem.compression, self.backend,
+                problem.compression, self.backend, rm,
             )
             if pp is not None and pp.deadline is not None:
                 # nominal deadline barrier — same min as the scalar split_T
                 self.split = np.minimum(self.split, pp.deadline)
             self.agg = nominal_agg_table(
                 problem.profile, problem.system, lattice,
-                problem.compression, self.backend,
+                problem.compression, self.backend, rm,
             )
         elif hasattr(lm, "split_T_batch") and hasattr(lm, "agg_T_batch"):
             self.split = np.asarray(lm.split_T_batch(lattice), dtype=np.float64)

@@ -256,7 +256,8 @@ def class_split_T(problem: HsflProblem, spec: CutClassSpec) -> float:
     t = -np.inf
     for c in range(spec.num_classes):
         per_client = per_client_split_latency(
-            problem.profile, problem.system, spec.cuts[c], problem.compression
+            problem.profile, problem.system, spec.cuts[c],
+            problem.compression, problem.retry_mult,
         )
         t = max(t, float(np.max(per_client[spec.members(c)])))
     pp = problem.participation
@@ -288,6 +289,8 @@ def class_agg_T(problem: HsflProblem, spec: CutClassSpec) -> np.ndarray:
         if m == 0:
             lam = lam + profile.frontend_param_bytes
         lam = lam * BITS * model_ratio(problem.compression, m)
+        if problem.retry_mult is not None:
+            lam = lam * problem.retry_mult
         up = lam / system.model_up[m]
         down = lam / system.model_down[m]
         out[m] = float(np.max(up)) + float(np.max(down))
@@ -553,7 +556,9 @@ class ClassBatchedEvaluator:
             backend, work_elems=lattice.shape[0] * problem.system.num_clients
         )
         self.bnds = lattice_bounds(lattice, problem.n_units)  # [K, M+1]
-        works = split_work_tensor(problem.profile, lattice, problem.compression)
+        works = split_work_tensor(
+            problem.profile, lattice, problem.compression, problem.retry_mult
+        )
         rates = nominal_stage_rates(problem.system, M)
         t = chain_matrix(works, rates, self.backend)  # [K, N]
         members = [
@@ -641,6 +646,8 @@ class ClassBatchedEvaluator:
             if m == 0:
                 lam = lam + profile.frontend_param_bytes
             lam = lam * BITS * model_ratio(problem.compression, m)
+            if problem.retry_mult is not None:
+                lam = lam * problem.retry_mult
             out[:, m] = (lam / system.model_up[m][None, :]).max(axis=1) + (
                 lam / system.model_down[m][None, :]
             ).max(axis=1)

@@ -25,8 +25,10 @@ from jax import lax
 
 from ..optim import Optimizer
 from .tiers import (
+    GuardSpec,
     TierPlan,
     combine_tiers,
+    guard_health,
     ragged_synchronize,
     synchronize,
     tier_subtrees,
@@ -105,7 +107,7 @@ def masked_mean_loss(losses: jax.Array, w: jax.Array) -> jax.Array:
 def build_train_step_a(
     model, plan: TierPlan, opt: Optimizer, *, sync_opt_state: bool = False,
     fed_round=None, compressor=None, with_mask: bool = False,
-    class_members=None, privacy=None,
+    class_members=None, privacy=None, guard: Optional[GuardSpec] = None,
 ) -> Callable[..., Tuple[TrainState, jax.Array]]:
     """Engine-A step: vmapped per-client update + hierarchical aggregation.
 
@@ -156,6 +158,15 @@ def build_train_step_a(
     local entity syncs stay untouched — only the wire the (ε, δ) accountant
     meters is noised.  ``build()`` constructs no mechanism at
     ``noise_multiplier=0``, so the noiseless graph is bit-identical.
+
+    ``guard`` (a ``tiers.GuardSpec``) arms fault tolerance (DESIGN.md §16):
+    each step quarantines clients whose update is non-finite or a norm
+    blow-up — their local update rolls back and every aggregation runs the
+    guarded masked path, which sanitizes corrupt replicas before any
+    arithmetic and heals them with the group broadcast at zero weight.
+    ``guard=None`` (default) is byte-identical to today's graph, and an
+    armed guard over an all-healthy round collapses bit-for-bit to the
+    unguarded step (``tests/test_faults.py``).
     """
     compress_fn = (
         None if compressor is None
@@ -174,15 +185,16 @@ def build_train_step_a(
 
         return fn
 
-    def _sync(tree, step, *, compress=None, mask=None):
+    def _sync(tree, step, *, compress=None, mask=None, guarded=False):
+        g = guard if guarded else None
         if class_members is not None:
             return ragged_synchronize(
                 tree, plan, class_members, step, fed_round=fed_round,
-                compress_fn=compress, mask=mask,
+                compress_fn=compress, mask=mask, guard=g,
             )
         return synchronize(
             tree, plan, step, fed_round=fed_round, compress_fn=compress,
-            mask=mask,
+            mask=mask, guard=g,
         )
 
     def _step(state: TrainState, batch: Params, mask) -> Tuple[TrainState, jax.Array]:
@@ -190,15 +202,46 @@ def build_train_step_a(
             state.params, batch
         )
         new_params, new_opt = opt.update(state.params, grads, state.opt_state)
-        if mask is None:
+        if guard is not None:
+            # Guarded step (DESIGN.md §16): quarantine clients whose update
+            # went non-finite or blew up in norm.  Their local update is
+            # rolled back (they keep pre-step params/moments, possibly still
+            # corrupt — the guarded syncs below sanitize and heal them with
+            # the group broadcast at zero weight), and the reported loss is
+            # the health-weighted mean over finite losses only — every
+            # arithmetic op here sees sanitized values, so a healthy round
+            # runs clean under JAX_DEBUG_NANS.
+            health, _ = guard_health(new_params, plan.num_clients, guard)
+            lfin = jnp.isfinite(losses)
+            health = health * lfin.astype(jnp.float32)
+            w = (
+                health if mask is None
+                else mask.astype(jnp.float32) * health
+            )
+            new_params = _masked_select(new_params, state.params, w)
+            new_opt = _masked_select(new_opt, state.opt_state, w)
+            lsafe = jnp.where(lfin, losses, 0.0)
+            loss = masked_mean_loss(lsafe, w)
+            if mask is None:
+                # all-healthy unmasked rounds must report the exact plain
+                # mean (bit-for-bit zero-fault collapse); lsafe == losses
+                # there, so this stays NaN-free under JAX_DEBUG_NANS
+                loss = jnp.where(
+                    jnp.all(w >= 1.0), jnp.mean(lsafe), loss
+                )
+            sync_mask = w
+        elif mask is None:
             loss = jnp.mean(losses)
+            sync_mask = None
         else:
             w = mask.astype(jnp.float32)
             new_params = _masked_select(new_params, state.params, w)
             new_opt = _masked_select(new_opt, state.opt_state, w)
             loss = masked_mean_loss(losses, w)
+            sync_mask = mask
         new_params = _sync(
-            new_params, state.step, compress=_fed_wire(state.step), mask=mask
+            new_params, state.step, compress=_fed_wire(state.step),
+            mask=sync_mask, guarded=True,
         )
         if sync_opt_state and jax.tree.leaves(new_opt):
             new_opt = jax.tree.map(
@@ -207,11 +250,17 @@ def build_train_step_a(
             # momentum/adam moments are client-stacked like params: apply the
             # same schedule so replicas stay consistent after aggregation.
             if opt.name == "momentum":
-                new_opt = _sync(new_opt, state.step, mask=mask)
+                new_opt = _sync(
+                    new_opt, state.step, mask=sync_mask, guarded=True
+                )
             elif opt.name == "adam":
                 new_opt = dict(new_opt)
-                new_opt["m"] = _sync(new_opt["m"], state.step, mask=mask)
-                new_opt["v"] = _sync(new_opt["v"], state.step, mask=mask)
+                new_opt["m"] = _sync(
+                    new_opt["m"], state.step, mask=sync_mask, guarded=True
+                )
+                new_opt["v"] = _sync(
+                    new_opt["v"], state.step, mask=sync_mask, guarded=True
+                )
         return TrainState(new_params, new_opt, state.step + 1), loss
 
     if with_mask:

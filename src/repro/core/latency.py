@@ -61,6 +61,36 @@ class LayerProfile:
     head_param_bytes: float
     batch: int
 
+    def __post_init__(self):
+        # Degenerate-input guard (DESIGN.md §16): a zero-work or
+        # non-finite profile silently turns latencies and Θ' into 0/inf/
+        # NaN deep inside the solvers; fail loudly at construction.
+        if self.n_units <= 0:
+            raise ValueError(f"n_units must be > 0: {self.n_units}")
+        if self.batch <= 0:
+            raise ValueError(f"batch must be > 0: {self.batch}")
+        per_unit = (
+            "flops_fwd", "flops_bwd", "act_bytes", "grad_act_bytes",
+            "param_bytes", "opt_bytes",
+        )
+        for name in per_unit:
+            a = np.asarray(getattr(self, name), dtype=float)
+            if a.shape != (self.n_units,):
+                raise ValueError(
+                    f"LayerProfile.{name} must have shape ({self.n_units},): "
+                    f"{a.shape}"
+                )
+            if not np.all(np.isfinite(a)) or np.any(a < 0.0):
+                raise ValueError(
+                    f"LayerProfile.{name} must be finite and non-negative"
+                )
+        for name in ("flops_fwd", "flops_bwd", "param_bytes"):
+            if float(np.asarray(getattr(self, name), dtype=float).sum()) <= 0.0:
+                raise ValueError(
+                    f"LayerProfile.{name} sums to zero — a model with no "
+                    "work/parameters has no defined split latency"
+                )
+
     @property
     def prefix(self) -> ProfilePrefix:
         """Memoized prefix-sum tables (computed once per profile; the
@@ -148,6 +178,20 @@ class SystemSpec:
     model_up: Tuple[np.ndarray, ...]     # [M-1][J_m] bit/s to fed server
     model_down: Tuple[np.ndarray, ...]   # [M-1][J_m] bit/s from fed server
     memory: Tuple[np.ndarray, ...]       # [M][J_m] bytes (C5)
+
+    def __post_init__(self):
+        # Degenerate-input guard (DESIGN.md §16): a zero/negative service
+        # rate would silently turn every latency downstream into inf/NaN;
+        # fail loudly at construction instead.
+        for name in ("compute", "act_up", "act_down", "model_up", "model_down"):
+            for i, arr in enumerate(getattr(self, name)):
+                a = np.asarray(arr, dtype=float)
+                if a.size == 0 or not np.all(np.isfinite(a)) or np.any(a <= 0.0):
+                    raise ValueError(
+                        f"SystemSpec.{name}[{i}] must be non-empty, finite "
+                        f"and strictly positive (got min="
+                        f"{a.min() if a.size else 'empty'})"
+                    )
 
     @classmethod
     def paper_three_tier(
@@ -249,11 +293,16 @@ def split_stages(
     profile: LayerProfile,
     cuts: Sequence[int],
     compression: Optional[CompressionSpec] = None,
+    retry_mult: Optional[float] = None,
 ) -> Tuple[Stage, ...]:
     """Canonical per-client stage chain for cut vector μ (Eqs. 11–14).
 
     ``compression`` scales boundary-m's activation/gradient bits by
     ``act_ratio[m]`` (DESIGN.md §9); None prices the full-precision wire.
+    ``retry_mult`` prices transient link failures (DESIGN.md §16): every
+    link payload carries the expected attempt count
+    ``faults.retry_attempts(p, k)`` as extra traversals.  None (the
+    zero-fault gate) leaves every bit count untouched.
     """
     M = len(cuts) + 1
     b = profile.batch
@@ -262,7 +311,8 @@ def split_stages(
     def boundary_bits(m: int) -> float:
         cut = bnds[m + 1]
         act = 0.0 if cut == 0 else float(profile.act_bytes[cut - 1])
-        return b * act * BITS * act_ratio(compression, m)
+        bits = b * act * BITS * act_ratio(compression, m)
+        return bits if retry_mult is None else bits * retry_mult
 
     stages: List[Stage] = []
     for m in range(M):  # forward sweep: Eq. (11) interleaved with Eq. (12)
@@ -290,6 +340,7 @@ def per_client_split_latency(
     system: SystemSpec,
     cuts: Sequence[int],
     compression: Optional[CompressionSpec] = None,
+    retry_mult: Optional[float] = None,
 ) -> np.ndarray:
     """Per-client round latency [N], accumulated in canonical chain order.
 
@@ -298,7 +349,7 @@ def per_client_split_latency(
     order — the homogeneous golden test in ``tests/test_sim.py`` pins the
     two paths to exact floating-point equality.
     """
-    stages = split_stages(profile, cuts, compression)
+    stages = split_stages(profile, cuts, compression, retry_mult)
     t = np.zeros(system.num_clients)
     for s in stages:
         t = t + s.work / stage_rate(system, s)
@@ -310,9 +361,16 @@ def split_latency(
     system: SystemSpec,
     cuts: Sequence[int],
     compression: Optional[CompressionSpec] = None,
+    retry_mult: Optional[float] = None,
 ) -> float:
     """T_S(μ): per-round split-training latency, Eq. (17)."""
-    return float(np.max(per_client_split_latency(profile, system, cuts, compression)))
+    return float(
+        np.max(
+            per_client_split_latency(
+                profile, system, cuts, compression, retry_mult
+            )
+        )
+    )
 
 
 def aggregation_phases(
@@ -323,13 +381,18 @@ def aggregation_phases(
     up_rate: Optional[np.ndarray] = None,
     down_rate: Optional[np.ndarray] = None,
     compression: Optional[CompressionSpec] = None,
+    retry_mult: Optional[float] = None,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Per-entity (upload, download) times [J_m] of a tier-m sync, Eq. (18).
 
     ``compression`` scales the model bits λ_m by ``model_ratio[m]`` — the
     wire the quantized aggregation kernel actually carries (DESIGN.md §9).
+    ``retry_mult`` scales the same bits by the expected link attempt count
+    (DESIGN.md §16); None leaves them untouched.
     """
     lam = profile.tier_param_bytes(cuts, m) * BITS * model_ratio(compression, m)
+    if retry_mult is not None:
+        lam = lam * retry_mult
     up = lam / (system.model_up[m] if up_rate is None else up_rate)
     down = lam / (system.model_down[m] if down_rate is None else down_rate)
     return up, down
@@ -341,11 +404,15 @@ def aggregation_latency(
     cuts: Sequence[int],
     m: int,
     compression: Optional[CompressionSpec] = None,
+    retry_mult: Optional[float] = None,
 ) -> float:
     """T_{m,A}(μ): fed-server aggregation latency of tier m, Eq. (18)."""
     if system.entities[m] <= 1:
         return 0.0  # Eq. (15)/(16) indicator
-    up, down = aggregation_phases(profile, system, cuts, m, compression=compression)
+    up, down = aggregation_phases(
+        profile, system, cuts, m, compression=compression,
+        retry_mult=retry_mult,
+    )
     return float(np.max(up)) + float(np.max(down))
 
 
@@ -356,13 +423,14 @@ def total_latency(
     intervals: Sequence[int],
     R: float,
     compression: Optional[CompressionSpec] = None,
+    retry_mult: Optional[float] = None,
 ) -> float:
     """T(I, μ), Eq. (19)."""
-    ts = split_latency(profile, system, cuts, compression)
+    ts = split_latency(profile, system, cuts, compression, retry_mult)
     tot = R * ts
     for m in range(system.M - 1):
         tot += np.floor(R / intervals[m]) * aggregation_latency(
-            profile, system, cuts, m, compression
+            profile, system, cuts, m, compression, retry_mult
         )
     return float(tot)
 

@@ -49,6 +49,7 @@ from ..compress.base import CompressionSpec
 
 if TYPE_CHECKING:  # pragma: no cover - type hints only (no import cycle)
     from ..energy import EnergySpec
+    from ..faults import FaultSpec
     from ..privacy import PrivacySpec
 from .convergence import (
     HyperSpec,
@@ -87,6 +88,7 @@ class HsflProblem:
     participation: Optional[ParticipationSpec] = None
     privacy: Optional["PrivacySpec"] = None
     energy: Optional["EnergySpec"] = None
+    faults: Optional["FaultSpec"] = None
 
     @property
     def M(self) -> int:
@@ -158,6 +160,39 @@ class HsflProblem:
                 "repro.api.build resolve the composition order"
             )
         return dataclasses.replace(self, compression=compression)
+
+    @property
+    def retry_mult(self) -> Optional[float]:
+        """Expected link attempts per traversal under the fault spec
+        (DESIGN.md §16) — None when no faults / no link failures, keeping
+        the zero-fault latency arithmetic untouched bit-for-bit."""
+        return None if self.faults is None else self.faults.retry_mult
+
+    def with_faults(self, faults: Optional["FaultSpec"]) -> "HsflProblem":
+        """The same problem priced under a fault regime (DESIGN.md §16):
+        link payloads inflate by the expected retry-attempt count in both
+        the scalar chain and the batched lattice tables.  Fault-driven
+        participation loss enters separately via ``with_participation``
+        (``faults.deflate_participation``), keeping q-deflation and retry
+        pricing independently composable.
+
+        Refuses to change the regime under an attached ``latency_model``
+        (same contract as ``with_compression``): a trace model's cached
+        latencies price one fault regime; compose them together via
+        ``repro.sim`` (``faults.faulty_trace`` before pricing) or an
+        ``ExperimentSpec`` faults section.
+        """
+        if faults is not None:
+            faults.validate_for(self.M, self.system.entities)
+        if self.latency_model is not None and faults != self.faults:
+            raise ValueError(
+                "cannot change faults under an attached latency_model (its "
+                "latencies price the old regime); wrap the trace with "
+                "faults.faulty_trace before pricing, or declare a faults "
+                "section in an ExperimentSpec and let repro.api.build "
+                "resolve the composition"
+            )
+        return dataclasses.replace(self, faults=faults)
 
     def with_privacy(self, privacy: Optional["PrivacySpec"]) -> "HsflProblem":
         """The same problem under a DP-noised fed uplink (DESIGN.md §15):
@@ -245,7 +280,10 @@ class HsflProblem:
     def split_T(self, cuts: Sequence[int]) -> float:
         if self.latency_model is not None:
             return self.latency_model.split_T(cuts)
-        t = split_latency(self.profile, self.system, cuts, self.compression)
+        t = split_latency(
+            self.profile, self.system, cuts, self.compression,
+            self.retry_mult,
+        )
         if self.participation is not None and self.participation.deadline is not None:
             # nominal view of the deadline barrier: the server never waits
             # past it (trace-based expectation pricing lives in
@@ -262,7 +300,8 @@ class HsflProblem:
         return np.array(
             [
                 aggregation_latency(
-                    self.profile, self.system, cuts, m, self.compression
+                    self.profile, self.system, cuts, m, self.compression,
+                    self.retry_mult,
                 )
                 for m in range(self.M - 1)
             ]

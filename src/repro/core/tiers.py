@@ -16,13 +16,80 @@ Synchronization operates on client-stacked parameter pytrees (axis 0 = client).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
 Params = Dict[str, Any]
+
+
+@dataclass(frozen=True)
+class GuardSpec:
+    """Aggregation guard: quarantine corrupt uploads (DESIGN.md §16).
+
+    A client is *unhealthy* this round when any client-stacked leaf row
+    carries a non-finite value, or when its sanitized squared parameter
+    norm exceeds ``norm_factor`` × the fleet median (the blow-up check
+    that catches finite corruption — scaled uploads, exponent bitflips).
+    The guard converts an unhealthy client into a zero-participant via
+    the §12 mask machinery: it contributes nothing to any level's mean
+    but still *receives* the participating group's broadcast, which is
+    what heals it.  Limitation: the median reference assumes fewer than
+    half the fleet blows up the same way at once.
+    """
+
+    norm_factor: float = 1e4
+
+    def __post_init__(self):
+        import math
+
+        if self.norm_factor <= 1.0 or not math.isfinite(self.norm_factor):
+            raise ValueError(
+                f"norm_factor must be finite and > 1: {self.norm_factor}"
+            )
+
+
+def guard_health(
+    tree: Params, num_clients: int, guard: GuardSpec
+) -> Tuple[jax.Array, Params]:
+    """(health mask [N] float32, sanitized tree) for a client-stacked pytree.
+
+    Sanitization zeroes non-finite rows *before* any arithmetic touches
+    them, so the guard itself never produces a NaN/Inf — on an all-healthy
+    round every ``where`` selects the original values and the returned
+    tree is bit-identical to the input (the ``JAX_DEBUG_NANS`` contract
+    pinned in ``tests/test_faults.py``).  Leaves without a leading client
+    axis (scalar bookkeeping) pass through unchecked.
+    """
+    N = num_clients
+    stacked = [
+        x for x in jax.tree.leaves(tree)
+        if hasattr(x, "ndim") and x.ndim > 0 and x.shape[0] == N
+    ]
+    finite = jnp.ones((N,), dtype=bool)
+    for x in stacked:
+        finite &= jnp.all(
+            jnp.isfinite(x.reshape(N, -1)), axis=1
+        )
+
+    def sanitize(x):
+        if not hasattr(x, "ndim") or x.ndim == 0 or x.shape[0] != N:
+            return x
+        ok = finite.reshape((N,) + (1,) * (x.ndim - 1))
+        return jnp.where(ok, x, jnp.zeros((), x.dtype))
+
+    clean = jax.tree.map(sanitize, tree)
+    norm2 = jnp.zeros((N,), dtype=jnp.float32)
+    for x in jax.tree.leaves(clean):
+        if hasattr(x, "ndim") and x.ndim > 0 and x.shape[0] == N:
+            f = x.reshape(N, -1).astype(jnp.float32)
+            norm2 = norm2 + jnp.sum(f * f, axis=1)
+    med = jnp.median(norm2)
+    blowup = norm2 > guard.norm_factor * jnp.maximum(med, jnp.float32(1e-30))
+    health = (finite & ~blowup).astype(jnp.float32)
+    return health, clean
 
 
 @dataclass(frozen=True)
@@ -243,6 +310,7 @@ def synchronize(
     fed_round=None,
     compress_fn=None,
     mask=None,
+    guard: Optional[GuardSpec] = None,
 ) -> Params:
     """Apply the per-tier aggregation schedule at round ``step`` (post-update).
 
@@ -275,7 +343,19 @@ def synchronize(
     members, and a zero-participant group keeps its last synced params.
     ``mask=None`` is the exact full-participation path (and an all-ones
     mask is bit-identical to it, pinned in ``tests/test_participation.py``).
+
+    ``guard`` (a ``GuardSpec``) turns on the corrupt-upload quarantine of
+    DESIGN.md §16: client health (finite check + norm blow-up) is computed
+    once on the incoming tree, non-finite rows are sanitized to zero, and
+    the health mask multiplies into ``mask`` — an unhealthy client becomes
+    a zero-participant (§12 semantics: excluded from every mean, healed by
+    the participating group's broadcast).  On an all-healthy round the
+    sanitized tree is bit-identical to the input and the health mask is
+    all-ones, so the result collapses bit-for-bit onto the unguarded path.
     """
+    if guard is not None:
+        health, params = guard_health(params, plan.num_clients, guard)
+        mask = health if mask is None else mask.astype(jnp.float32) * health
     parts = tier_subtrees(params, plan)
     if fed_round is not None and not isinstance(fed_round, (tuple, list)):
         fed_round = (bool(fed_round),) * plan.M
@@ -429,6 +509,7 @@ def ragged_synchronize(
     fed_round=None,
     compress_fn=None,
     mask=None,
+    guard: Optional[GuardSpec] = None,
 ) -> Params:
     """``synchronize`` for per-class cut assignments (DESIGN.md §14).
 
@@ -447,7 +528,13 @@ def ragged_synchronize(
     ``tier_subtrees`` partition to slice.  When every class holds the
     same cuts the member matrices are exactly the plan's tier slices and
     the result is bit-identical to ``synchronize``.
+
+    ``guard`` applies the same quarantine as ``synchronize``: health is
+    computed once on the unsliced tree and folded into ``mask``.
     """
+    if guard is not None:
+        health, params = guard_health(params, plan.num_clients, guard)
+        mask = health if mask is None else mask.astype(jnp.float32) * health
     if isinstance(params["units"], dict) and set(params["units"]) == {
         "enc",
         "dec",

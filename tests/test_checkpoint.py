@@ -108,3 +108,58 @@ def test_atomic_overwrite(tmp_path):
     t, step, _ = load_checkpoint(p, {"a": jnp.zeros(2)})
     assert step == 2 and np.all(np.asarray(t["a"]) == 1)
     assert not [f for f in os.listdir(tmp_path) if f.endswith(".tmp.npz")]
+
+
+def test_interrupted_save_leaves_previous_checkpoint_intact(
+    tmp_path, monkeypatch
+):
+    """A crash mid-save (DESIGN.md §16) must never tear the installed file:
+    the payload is written and fsynced to a same-directory temp file first,
+    so an interrupt before ``os.replace`` leaves the previous checkpoint
+    byte-for-byte intact and loadable."""
+    import repro.checkpoint.npz as npz
+
+    p = str(tmp_path / "ck.npz")
+    save_checkpoint(p, {"a": jnp.zeros(2)}, step=1)
+    before = open(p, "rb").read()
+
+    real_savez = np.savez
+
+    def torn_savez(f, **payload):
+        real_savez(f, **payload)   # bytes hit the TEMP file...
+        raise OSError("simulated crash mid-save")  # ...then the power dies
+
+    monkeypatch.setattr(npz.np, "savez", torn_savez)
+    with pytest.raises(OSError, match="simulated crash"):
+        save_checkpoint(p, {"a": jnp.ones(2)}, step=2)
+    monkeypatch.undo()
+
+    # previous checkpoint untouched, loadable, and no temp litter remains
+    assert open(p, "rb").read() == before
+    t, step, _ = load_checkpoint(p, {"a": jnp.zeros(2)})
+    assert step == 1 and np.all(np.asarray(t["a"]) == 0)
+    assert not [f for f in os.listdir(tmp_path) if f.endswith(".tmp.npz")]
+
+
+def test_interrupted_fsync_keeps_previous_checkpoint(tmp_path, monkeypatch):
+    """Same contract one step later: dying inside the durability fsync
+    (after the payload write, before/at the rename barrier) still leaves
+    the previously-installed checkpoint intact."""
+    import repro.checkpoint.npz as npz
+
+    p = str(tmp_path / "ck.npz")
+    save_checkpoint(p, {"a": jnp.zeros(2)}, step=1)
+    before = open(p, "rb").read()
+
+    def dead_fsync(fd):
+        raise OSError("simulated crash in fsync")
+
+    monkeypatch.setattr(npz.os, "fsync", dead_fsync)
+    with pytest.raises(OSError, match="simulated crash"):
+        save_checkpoint(p, {"a": jnp.ones(2)}, step=2)
+    monkeypatch.undo()
+
+    assert open(p, "rb").read() == before
+    t, step, _ = load_checkpoint(p, {"a": jnp.zeros(2)})
+    assert step == 1 and np.all(np.asarray(t["a"]) == 0)
+    assert not [f for f in os.listdir(tmp_path) if f.endswith(".tmp.npz")]

@@ -1,0 +1,551 @@
+"""Fault injection & fault-tolerant training (DESIGN.md §16).
+
+Pins the four contracts of the faults subsystem:
+  * seeded expansion — deterministic, per-class-independent streams;
+  * composition — a null spec is structurally invisible (object identity
+    on traces, bit-exact pricing/solves), a live spec keeps the
+    event-oracle == fleet-path bit-exactness;
+  * the guard — every corrupt mode is quarantined, an all-healthy round
+    collapses bit-for-bit onto the unguarded path (the JAX_DEBUG_NANS
+    contract);
+  * accounting — q-deflation matches the realized masks and degenerate
+    (all-faulty) regimes fail loudly.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.vgg16_cifar10 import SPEC as VGG
+from repro.core import (
+    HsflProblem, SystemSpec, build_profile, solve_ms, synthetic_hyperspec,
+)
+from repro.core.convergence import ParticipationSpec, theorem1_bound
+from repro.core.latency import LayerProfile
+from repro.core.tiers import GuardSpec, default_plan, guard_health, synchronize
+from repro.faults import (
+    FaultSpec,
+    apply_corruption,
+    assignment_members,
+    deflate_participation,
+    expand_faults,
+    fault_survival,
+    faulty_trace,
+    membership_mean,
+    outage_assignment,
+    retry_attempts,
+    round_healthy,
+)
+from repro.sim import make_trace, simulate, simulate_rounds
+
+N = 8
+ENTITIES = (N, 4, 1)
+
+
+def small_problem(seed=0, num_clients=N, num_edges=4):
+    prof = build_profile(VGG, batch=2)
+    system = SystemSpec.paper_three_tier(
+        num_clients=num_clients, num_edges=num_edges, seed=seed
+    )
+    hp = synthetic_hyperspec(prof.n_units, num_clients, beta=3.0, seed=seed)
+    floor = theorem1_bound(hp, 10**9, [1] * 3, (5, 11))
+    return HsflProblem(prof, system, hp, eps=6.0 * floor)
+
+
+def storm_spec(seed=0, **kw):
+    base = dict(
+        seed=seed, crash_rate=0.1, corrupt_rate=0.1, link_fail_rate=0.2,
+        link_retries=2, outage_cells=(0,), outage_tier=1, outage_start=2,
+        outage_len=3,
+    )
+    base.update(kw)
+    return FaultSpec(**base)
+
+
+def _params(key, n=N, U=8, d=4):
+    ks = jax.random.split(key, 3)
+    return {
+        "frontend": {"embed": jax.random.normal(ks[0], (n, 8, d))},
+        "units": {"w": jax.random.normal(ks[1], (n, U, d, d))},
+        "head": {"norm": jax.random.normal(ks[2], (n, d))},
+    }
+
+
+# --------------------------------------------------------------------------- #
+# FaultSpec: serialization + validation
+# --------------------------------------------------------------------------- #
+
+
+def test_fault_spec_json_round_trip():
+    spec = storm_spec(seed=7, corrupt_mode="bitflip", crash_stage="downlink")
+    loaded = FaultSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
+    assert loaded == spec
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="crash_rate"):
+        FaultSpec(crash_rate=1.5)
+    with pytest.raises(ValueError, match="link_fail_rate"):
+        FaultSpec(link_fail_rate=1.0)
+    with pytest.raises(ValueError, match="crash_stage"):
+        FaultSpec(crash_stage="teleport")
+    with pytest.raises(ValueError, match="corrupt_mode"):
+        FaultSpec(corrupt_mode="gamma-ray")
+    with pytest.raises(ValueError, match="corrupt_scale"):
+        FaultSpec(corrupt_scale=0.0)
+    with pytest.raises(ValueError, match="link_retries"):
+        FaultSpec(link_retries=-1)
+    with pytest.raises(ValueError, match="outage_cells"):
+        FaultSpec(outage_len=3)  # outage span with no dead cells named
+
+
+def test_validate_for_topology():
+    spec = storm_spec()
+    spec.validate_for(3, ENTITIES)  # fine
+    with pytest.raises(ValueError, match="outage_tier"):
+        storm_spec(outage_tier=2).validate_for(3, ENTITIES)
+    with pytest.raises(ValueError, match="entity range"):
+        storm_spec(outage_cells=(9,)).validate_for(3, ENTITIES)
+    with pytest.raises(ValueError, match="no sibling"):
+        storm_spec(outage_cells=(0, 1, 2, 3)).validate_for(3, ENTITIES)
+
+
+def test_retry_attempts_math():
+    assert retry_attempts(0.0, 5) == 1.0
+    p, k = 0.3, 4
+    closed = (1.0 - p ** (k + 1)) / (1.0 - p)
+    assert retry_attempts(p, k) == pytest.approx(closed, rel=1e-12)
+    with pytest.raises(ValueError):
+        retry_attempts(1.0, 2)
+    with pytest.raises(ValueError):
+        retry_attempts(0.2, -1)
+
+
+def test_null_gates():
+    null = FaultSpec()
+    assert null.is_null and null.retry_mult is None and not null.has_outage
+    assert not storm_spec().is_null
+    assert FaultSpec(link_fail_rate=0.2).retry_mult == retry_attempts(0.2, 2)
+    # a spec whose only content is an outage is not null
+    assert not FaultSpec(
+        outage_cells=(1,), outage_len=1
+    ).is_null
+
+
+# --------------------------------------------------------------------------- #
+# per-round expansion: determinism + stream independence
+# --------------------------------------------------------------------------- #
+
+
+def test_expand_deterministic_and_round_varying():
+    spec = storm_spec()
+    a = expand_faults(spec, 3, N)
+    b = expand_faults(spec, 3, N)
+    assert np.array_equal(a.crashed, b.crashed)
+    assert np.array_equal(a.corrupt, b.corrupt)
+    assert np.array_equal(a.attempts, b.attempts)
+    assert a.cell_out == b.cell_out
+    # some round must draw differently from round 3 (seeded per-round keys)
+    assert any(
+        not np.array_equal(expand_faults(spec, r, N).attempts, a.attempts)
+        for r in range(20)
+        if r != 3
+    )
+
+
+def test_fault_class_streams_independent():
+    crash_only = FaultSpec(seed=1, crash_rate=0.3)
+    corrupt_only = FaultSpec(seed=1, corrupt_rate=0.3)
+    both = FaultSpec(seed=1, crash_rate=0.3, corrupt_rate=0.3,
+                     link_fail_rate=0.2)
+    link_only = FaultSpec(seed=1, link_fail_rate=0.2)
+    for r in range(8):
+        rc = expand_faults(crash_only, r, N)
+        rk = expand_faults(corrupt_only, r, N)
+        rb = expand_faults(both, r, N)
+        rl = expand_faults(link_only, r, N)
+        # enabling other classes never perturbs a class's own draws
+        assert np.array_equal(rb.crashed, rc.crashed)
+        assert np.array_equal(rb.attempts, rl.attempts)
+        # corruption draws match modulo the crashed-uploads-nothing rule
+        assert np.array_equal(rb.corrupt, rk.corrupt & ~rc.crashed)
+        assert not np.any(rb.crashed & rb.corrupt)
+        assert np.array_equal(rb.faulty, rb.crashed | rb.corrupt)
+
+
+# --------------------------------------------------------------------------- #
+# trace composition: null identity + events == fleet under a storm
+# --------------------------------------------------------------------------- #
+
+
+def _small_trace(rounds=6, seed=0, scenario="lognormal-heterogeneous"):
+    prof = build_profile(VGG, batch=2)
+    system = SystemSpec.paper_three_tier(
+        num_clients=N, num_edges=4, seed=seed
+    )
+    return make_trace(scenario, prof, system, rounds=rounds, seed=seed)
+
+
+def test_null_spec_trace_identity():
+    trace = _small_trace()
+    assert faulty_trace(trace, None) is trace
+    assert faulty_trace(trace, FaultSpec()) is trace
+
+
+@pytest.mark.parametrize("scenario", ["homogeneous-paper", "flaky-wan"])
+def test_faulty_trace_events_match_fleet_bit_exact(scenario):
+    trace = faulty_trace(_small_trace(scenario=scenario), storm_spec())
+    ev = simulate(trace, (3, 8), (2, 3, 1))
+    fl = simulate_rounds(trace, (3, 8), (2, 3, 1), backend="numpy")
+    assert np.array_equal(ev.split, fl.split)
+    assert np.array_equal(ev.agg, fl.agg)
+    assert np.array_equal(ev.fired, fl.fired)
+    assert np.array_equal(ev.total, fl.total)
+    assert np.array_equal(ev.participants, fl.participants)
+
+
+def test_faulty_trace_round_state_adjustments():
+    spec = storm_spec(outage_start=2, outage_len=3)
+    base = _small_trace(rounds=8)
+    trace = faulty_trace(base, spec)
+    assert trace.name.endswith("+faults")
+    for r in range(8):
+        st = trace.round_state(r)
+        rf = expand_faults(spec, r, N)
+        # crash: the round barrier excludes crashed clients
+        assert not np.any(st.available & rf.crashed)
+        dead = np.asarray(spec.outage_cells)
+        if spec.outage_active(r):
+            assert np.all(np.isinf(st.fed_up_mult[spec.outage_tier][dead]))
+        else:
+            assert np.all(np.isfinite(st.fed_up_mult[spec.outage_tier][dead]))
+
+
+def test_all_crashed_round_raises():
+    trace = faulty_trace(
+        _small_trace(scenario="homogeneous-paper"),
+        FaultSpec(crash_rate=1.0),
+    )
+    with pytest.raises(ValueError, match="every client crashed"):
+        trace.round_state(0)
+
+
+# --------------------------------------------------------------------------- #
+# retry pricing: scalar == batched, null == clean
+# --------------------------------------------------------------------------- #
+
+
+def test_retry_pricing_scalar_matches_batched_bit_exact():
+    fp = small_problem().with_faults(
+        FaultSpec(link_fail_rate=0.25, link_retries=3)
+    )
+    ev = fp.evaluator("numpy")
+    lattice = fp.cut_lattice()
+    for i in range(0, len(lattice), max(1, len(lattice) // 16)):
+        cuts = tuple(int(c) for c in lattice[i])
+        assert float(fp.split_T(cuts)) == float(ev.split[i])
+        assert [float(v) for v in fp.agg_T(cuts)] == [
+            float(v) for v in ev.agg[i]
+        ]
+
+
+def test_retry_pricing_null_and_monotone():
+    problem = small_problem()
+    cuts = (3, 8)
+    # null spec: pricing is bit-identical to the clean problem
+    nulled = problem.with_faults(FaultSpec())
+    assert nulled.retry_mult is None
+    assert nulled.split_T(cuts) == problem.split_T(cuts)
+    assert np.array_equal(nulled.agg_T(cuts), problem.agg_T(cuts))
+    # live retries only ever lengthen link traversals
+    fp = problem.with_faults(FaultSpec(link_fail_rate=0.25, link_retries=3))
+    assert fp.split_T(cuts) > problem.split_T(cuts)
+    assert np.all(fp.agg_T(cuts) >= problem.agg_T(cuts))
+
+
+# --------------------------------------------------------------------------- #
+# corruption + guard quarantine
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.nanfault
+@pytest.mark.parametrize("mode", ["nan", "inf", "scale", "bitflip"])
+def test_guard_quarantines_every_corrupt_mode(mode):
+    spec = FaultSpec(corrupt_rate=0.5, corrupt_mode=mode)
+    params = _params(jax.random.PRNGKey(0))
+    corrupt = np.zeros(N, dtype=bool)
+    corrupt[3] = True
+    bad = apply_corruption(params, corrupt, spec)
+    health, clean = guard_health(bad, N, GuardSpec())
+    health = np.asarray(health)
+    assert health[3] == 0.0, mode
+    assert np.all(health[np.arange(N) != 3] == 1.0), mode
+    for x in jax.tree.leaves(clean):
+        assert np.all(np.isfinite(np.asarray(x))), mode
+
+
+def test_guard_all_healthy_bit_identical():
+    params = _params(jax.random.PRNGKey(1))
+    plan = default_plan(8, N, cuts=(2, 5), intervals=(1, 1, 1),
+                        entities=ENTITIES)
+    plain = synchronize(params, plan, jnp.int32(0))
+    guarded = synchronize(params, plan, jnp.int32(0), guard=GuardSpec())
+    for a, b in zip(jax.tree.leaves(plain), jax.tree.leaves(guarded)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.nanfault
+def test_guarded_sync_heals_quarantined_client():
+    params = _params(jax.random.PRNGKey(2))
+    plan = default_plan(8, N, cuts=(2, 5), intervals=(1, 1, 1),
+                        entities=ENTITIES)
+    corrupt = np.zeros(N, dtype=bool)
+    corrupt[3] = True
+    bad = apply_corruption(
+        params, corrupt, FaultSpec(corrupt_rate=0.5, corrupt_mode="nan")
+    )
+    out = synchronize(bad, plan, jnp.int32(0), guard=GuardSpec())
+    healthy = ~corrupt
+    # a full (I=1 everywhere, top tier global) sync lands every client on
+    # the participant-weighted mean of the HEALTHY uploads; the quarantined
+    # client receives it too (heals) instead of spreading NaN
+    for key, leaf in (
+        (("frontend", "embed"), params["frontend"]["embed"]),
+        (("units", "w"), params["units"]["w"]),
+        (("head", "norm"), params["head"]["norm"]),
+    ):
+        want = np.mean(np.asarray(leaf)[healthy], axis=0)
+        got = np.asarray(out[key[0]][key[1]])
+        assert np.all(np.isfinite(got))
+        for i in range(N):
+            np.testing.assert_allclose(got[i], want, rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------------------------- #
+# cell-outage rerouting
+# --------------------------------------------------------------------------- #
+
+
+def test_outage_assignment_balanced_and_errors():
+    assign = outage_assignment(8, 4, (0,))
+    # healthy cells keep their block; cell 0's clients spread round-robin
+    assert list(assign[2:]) == [1, 1, 2, 2, 3, 3]
+    assert sorted(assign[:2]) == [1, 2]
+    assert np.array_equal(
+        outage_assignment(8, 4, ()), np.repeat(np.arange(4), 2)
+    )
+    with pytest.raises(ValueError, match="divisible"):
+        outage_assignment(9, 4, (0,))
+    with pytest.raises(ValueError, match="outside"):
+        outage_assignment(8, 4, (7,))
+    with pytest.raises(ValueError, match="no sibling"):
+        outage_assignment(8, 4, (0, 1, 2, 3))
+
+
+def test_membership_mean_identity_matches_reshape():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(8, 5)))
+    members = assignment_members(outage_assignment(8, 4, ()), 4)
+    out = np.asarray(membership_mean({"w": x}, members)["w"])
+    want = np.asarray(x).reshape(4, 2, 5).mean(axis=1).repeat(2, axis=0)
+    np.testing.assert_allclose(out, want, rtol=1e-6)
+
+
+def test_membership_mean_reroutes_dead_cell():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(8, 3)))
+    assign = outage_assignment(8, 4, (0,))
+    members = assignment_members(assign, 4)
+    # outage round: the dead cell's clients carry zero weight (their cell
+    # is unreachable) but still receive their adoptive sibling's mean
+    mask = jnp.asarray(np.where(np.arange(8) < 2, 0.0, 1.0).astype(np.float32))
+    out = np.asarray(membership_mean({"w": x}, members, w=mask)["w"])
+    xs = np.asarray(x)
+    for i in (0, 1):  # adopted orphans
+        j = assign[i]
+        own = [k for k in range(2, 8) if assign[k] == j and k != i]
+        np.testing.assert_allclose(
+            out[i], xs[own].mean(axis=0), rtol=1e-6
+        )
+
+
+# --------------------------------------------------------------------------- #
+# accounting: q-deflation
+# --------------------------------------------------------------------------- #
+
+
+def test_deflate_null_returns_base_object():
+    base = ParticipationSpec(q=(0.8, 0.9, 1.0), deadline=12.0)
+    assert deflate_participation(base, FaultSpec(), N, ENTITIES, 10) is base
+    assert deflate_participation(base, None, N, ENTITIES, 10) is base
+    assert deflate_participation(None, FaultSpec(), N, ENTITIES, 10) is None
+
+
+def test_fault_survival_matches_realized_masks():
+    spec = storm_spec(seed=3)
+    rounds = 12
+    s = fault_survival(spec, N, ENTITIES, rounds)
+    acc = np.zeros(3)
+    for r in range(rounds):
+        healthy = round_healthy(spec, r, N, ENTITIES)
+        for m, J in enumerate(ENTITIES):
+            acc[m] += healthy.reshape(J, N // J).any(axis=1).mean()
+    np.testing.assert_allclose(s, acc / rounds, rtol=1e-12)
+    assert np.all(s > 0.0) and np.all(s <= 1.0)
+    part = deflate_participation(None, spec, N, ENTITIES, rounds)
+    np.testing.assert_allclose(np.asarray(part.q), s, rtol=1e-12)
+    assert part.deadline is None
+    # composes multiplicatively with a straggler-deadline base
+    base = ParticipationSpec(q=(0.5, 0.5, 0.5), deadline=7.0)
+    both = deflate_participation(base, spec, N, ENTITIES, rounds)
+    np.testing.assert_allclose(np.asarray(both.q), 0.5 * s, rtol=1e-12)
+    assert both.deadline == 7.0
+
+
+def test_deflate_all_faulty_raises():
+    with pytest.raises(ValueError, match="all-faulty"):
+        deflate_participation(
+            None, FaultSpec(crash_rate=1.0), N, ENTITIES, 4
+        )
+
+
+def test_deflated_q_inflates_theorem1_bound():
+    hp = synthetic_hyperspec(16, N, seed=0)
+    spec = storm_spec(seed=5)
+    part = deflate_participation(None, spec, N, ENTITIES, 10)
+    clean = theorem1_bound(hp, 50, (4, 2, 1), (5, 11))
+    deflated = theorem1_bound(hp, 50, (4, 2, 1), (5, 11), participation=part)
+    assert deflated > clean
+
+
+# --------------------------------------------------------------------------- #
+# control integration: sustained fault burst is a drift trigger
+# --------------------------------------------------------------------------- #
+
+
+def test_fault_burst_trips_drift_detector():
+    from repro.control.drift import detect_drift
+
+    quiet = detect_drift(1.0, 1.0, np.ones(2), np.ones(2), 1.0, 1.0,
+                         rel_tol=0.5)
+    assert not quiet.drifted
+    burst = detect_drift(1.0, 1.0, np.ones(2), np.ones(2), 1.0, 1.0,
+                         rel_tol=0.5, fault_rate_obs=0.4, fault_tol=0.1)
+    assert burst.drifted and "faults" in burst.trigger
+    assert burst.fault_rate == pytest.approx(0.4)
+    # the default tolerance can never trip (rates are fractions <= 1)
+    blind = detect_drift(1.0, 1.0, np.ones(2), np.ones(2), 1.0, 1.0,
+                         rel_tol=0.5, fault_rate_obs=1.0)
+    assert not blind.drifted
+
+
+# --------------------------------------------------------------------------- #
+# api layer: FaultsCfg round-trip + zero-fault solve collapse
+# --------------------------------------------------------------------------- #
+
+
+def test_faults_cfg_round_trip_and_validation():
+    from repro.api import ExperimentSpec, FaultsCfg, fault_storm_spec
+
+    spec = fault_storm_spec(rounds=8, checkpoint_every=2, engine_crash_round=4)
+    loaded = ExperimentSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
+    assert loaded == spec
+    with pytest.raises(ValueError, match="corrupt_mode"):
+        FaultsCfg(corrupt_mode="solar-flare")
+    with pytest.raises(ValueError, match="engine_crash_round"):
+        FaultsCfg(engine_crash_round=3)  # recovery needs checkpoints
+    with pytest.raises(ValueError, match="norm_factor"):
+        FaultsCfg(guard_norm_factor=0.5)
+
+
+def test_control_cfg_fault_tol_validation():
+    from repro.api import ControlCfg
+
+    assert ControlCfg(fault_tol=0.25).fault_tol == 0.25
+    with pytest.raises(ValueError, match="fault_tol"):
+        ControlCfg(fault_tol=0.0)
+    with pytest.raises(ValueError, match="fault_tol"):
+        ControlCfg(fault_tol=1.5)
+
+
+def test_api_null_faults_solve_collapses_bit_exact():
+    from repro.api import FaultsCfg, paper_spec, run
+
+    clean = run(paper_spec(seed=0))
+    nulled = run(paper_spec(seed=0).replace(faults=FaultsCfg()))
+    assert nulled.cuts == clean.cuts
+    assert nulled.intervals == clean.intervals
+    assert nulled.theta == clean.theta
+    assert nulled.latency == clean.latency
+
+
+def test_faults_require_engine_a():
+    from repro.api import FaultsCfg, quickstart_spec
+    from repro.api import build
+    from repro.api.spec import RunCfg
+
+    spec = quickstart_spec(rounds=2).replace(
+        faults=FaultsCfg(crash_rate=0.1),
+    )
+    spec = spec.replace(run=RunCfg(mode="train", seed=0, rounds=2,
+                                   lr=0.1, engine="b"))
+    with pytest.raises(ValueError, match='engine="a"'):
+        build(spec)
+
+
+# --------------------------------------------------------------------------- #
+# degenerate inputs fail loudly (DESIGN.md §16)
+# --------------------------------------------------------------------------- #
+
+
+def test_system_spec_rejects_zero_bandwidth():
+    good = SystemSpec.paper_three_tier(num_clients=4, num_edges=2, seed=0)
+    bad_up = tuple(np.array(a) for a in good.act_up)
+    bad_up[0][1] = 0.0
+    with pytest.raises(ValueError, match="act_up"):
+        SystemSpec(
+            M=good.M, num_clients=good.num_clients, entities=good.entities,
+            compute=good.compute, act_up=bad_up, act_down=good.act_down,
+            model_up=good.model_up, model_down=good.model_down,
+            memory=good.memory,
+        )
+
+
+def test_layer_profile_rejects_zero_flops():
+    U = 4
+    ones = np.ones(U)
+    kw = dict(
+        n_units=U, flops_fwd=ones * 1e9, flops_bwd=ones * 2e9,
+        act_bytes=ones, grad_act_bytes=ones, param_bytes=ones,
+        opt_bytes=ones, frontend_param_bytes=0.0, head_param_bytes=0.0,
+        batch=2,
+    )
+    LayerProfile(**kw)  # fine
+    with pytest.raises(ValueError, match="flops_fwd"):
+        LayerProfile(**{**kw, "flops_fwd": np.zeros(U)})
+    with pytest.raises(ValueError, match="finite"):
+        LayerProfile(**{**kw, "act_bytes": ones * np.inf})
+    with pytest.raises(ValueError, match="shape"):
+        LayerProfile(**{**kw, "param_bytes": np.ones(U + 1)})
+    with pytest.raises(ValueError, match="batch"):
+        LayerProfile(**{**kw, "batch": 0})
+
+
+def test_empty_lattice_solver_raises_cleanly():
+    # U=2 units across M=3 tiers leaves no valid cut vector at all
+    prof = build_profile(VGG, batch=2)
+    system = SystemSpec.paper_three_tier(num_clients=4, num_edges=2, seed=0)
+    hp = synthetic_hyperspec(2, 4, seed=0)
+    sliced = LayerProfile(
+        n_units=2,
+        flops_fwd=prof.flops_fwd[:2], flops_bwd=prof.flops_bwd[:2],
+        act_bytes=prof.act_bytes[:2], grad_act_bytes=prof.grad_act_bytes[:2],
+        param_bytes=prof.param_bytes[:2], opt_bytes=prof.opt_bytes[:2],
+        frontend_param_bytes=prof.frontend_param_bytes,
+        head_param_bytes=prof.head_param_bytes, batch=prof.batch,
+    )
+    problem = HsflProblem(sliced, system, hp, eps=1e9)
+    assert problem.cut_lattice().shape[0] == 0
+    with pytest.raises(ValueError, match="infeasible"):
+        solve_ms(problem, (1, 1, 1), backend="numpy")
