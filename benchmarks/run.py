@@ -38,14 +38,20 @@ Harness -> paper artifact map (details in DESIGN.md §7):
                                      sigma^2-inflated Thm 1 vs a real noised run
     ablations             Figs. 8-9  MA / MS ablations (+ real training)
     bound_check           Thm 1      empirical gradient norms vs the bound
+    async_scale           (ours)     sharded async engine (DESIGN.md §17):
+                                     staleness-0 bit-exact collapse, 10^6-client
+                                     async-vs-sync round pricing, staleness-
+                                     inflated Thm 1 envelope, sharded subprocess
     roofline              §g         three-term roofline per (arch x shape)
 """
 from __future__ import annotations
 
 import argparse
 import contextlib
+import ctypes
 import signal
 import sys
+import threading
 import time
 
 
@@ -55,37 +61,62 @@ class HarnessTimeout(Exception):
 
 @contextlib.contextmanager
 def _alarm(seconds: int):
-    """SIGALRM-based wall-clock limit for one harness.
+    """Wall-clock limit for one harness.  0 disables the limit.
 
-    Harnesses run sequentially in the main thread, so a signal-based
-    alarm interrupts the straggler itself (a watchdog thread could only
-    observe it).  0 disables the limit; non-main-thread callers (the
-    signal module refuses those) fall back to no limit.
+    On the main thread of a platform with SIGALRM, a signal-based alarm
+    interrupts the straggler directly.  Everywhere else — a worker
+    thread driving ``main()`` programmatically, or a platform without
+    SIGALRM — a watchdog thread injects ``HarnessTimeout`` into the
+    *calling* thread via ``PyThreadState_SetAsyncExc``; the exception
+    lands at the next bytecode boundary, so a harness stuck inside one
+    long C call is interrupted when that call returns.  Previously these
+    callers silently ran with no limit at all.
     """
     if seconds <= 0:
         yield
         return
-    try:
+    if (
+        hasattr(signal, "SIGALRM")
+        and threading.current_thread() is threading.main_thread()
+    ):
         prev = signal.signal(
             signal.SIGALRM,
             lambda *_: (_ for _ in ()).throw(
                 HarnessTimeout(f"exceeded --timeout {seconds}s")
             ),
         )
-    except ValueError:  # not in the main thread
-        yield
+        signal.alarm(seconds)
+        try:
+            yield
+        finally:
+            signal.alarm(0)
+            signal.signal(signal.SIGALRM, prev)
         return
-    signal.alarm(seconds)
+    # watchdog-thread fallback: no signals involved, works from any thread
+    target = threading.get_ident()
+    done = threading.Event()
+
+    def watch():
+        if not done.wait(seconds) and not done.is_set():
+            ctypes.pythonapi.PyThreadState_SetAsyncExc(
+                ctypes.c_ulong(target), ctypes.py_object(HarnessTimeout)
+            )
+
+    watchdog = threading.Thread(target=watch, daemon=True, name="bench-watchdog")
+    watchdog.start()
     try:
         yield
+    except HarnessTimeout:
+        # async-injected exceptions carry no message; re-raise with one
+        raise HarnessTimeout(f"exceeded --timeout {seconds}s") from None
     finally:
-        signal.alarm(0)
-        signal.signal(signal.SIGALRM, prev)
+        done.set()
+        watchdog.join()
 
 
 def _registry(args):
     from . import (
-        ablations, bound_check, compress_sweep, control_drift,
+        ablations, async_scale, bound_check, compress_sweep, control_drift,
         fault_tolerance, fig2_latency_vs_cut, fig45_benchmarks,
         fig67_resources, heterogeneous_cuts, participation_sweep,
         privacy_energy, roofline, sim_scale, solver_scale,
@@ -123,6 +154,10 @@ def _registry(args):
         # runs the fault-storm drill: guarded training + crash recovery
         ("fault_tolerance", "training",
          lambda: fault_tolerance.main(args.quick, seed=args.seed)),
+        # prices + runs the sharded async engine (real s=0/s=1 training,
+        # a 10^6-client overlap sweep, and a sharded subprocess round)
+        ("async_scale", "training",
+         lambda: async_scale.main(args.quick, seed=args.seed)),
         ("roofline", "extracted", lambda: _roofline(roofline)),
     ]
 

@@ -95,24 +95,109 @@ def resolve_compression(
     return codec, spec
 
 
+def _unsupported(combo: str, need: str, why: str) -> ValueError:
+    """The one message shape every capability failure uses."""
+    return ValueError(
+        f"unsupported spec combination: {combo} requires {need} — {why}"
+    )
+
+
+def check_capabilities(spec: ExperimentSpec) -> None:
+    """Engine/feature capability matrix — every unsupported spec
+    combination fails HERE, at build time, with one message shape.
+
+    Historically Engine B's missing features raised three divergent
+    ``NotImplementedError``s at step-build time (classes / privacy /
+    masked-MoE, deep in ``core.engine``) while faults × Engine B had its
+    own ad-hoc build-time ValueError; sharded/async execution (DESIGN.md
+    §17) adds more combinations.  The engine-level raises remain as
+    backstops for direct ``core.engine`` users, but the declarative API
+    rejects every combination before any state is allocated.
+    """
+    training = spec.run.mode in ("train", "control")
+    sharded = spec.run.sharding is not None
+    st = spec.run.staleness
+    async_mode = bool(
+        st if isinstance(st, int) else any(v > 0 for v in st)
+    )
+    if training and spec.run.engine != "a":
+        eng = f'engine={spec.run.engine!r}'
+        if spec.classes is not None:
+            raise _unsupported(
+                f"classes × {eng}", 'engine="a"',
+                "Engine B physically places each tier's units on its "
+                "hosts, and a per-class cut assignment has no single "
+                "placement; Engine A runs the ragged sync-groups path "
+                "(DESIGN.md §14)",
+            )
+        if spec.privacy is not None and spec.privacy.noise_multiplier > 0:
+            raise _unsupported(
+                f"privacy × {eng}", 'engine="a"',
+                "Engine B's fed wire carries one model per entity, so "
+                "per-client clipping (the unit the (ε, δ) accountant "
+                "meters) has no faithful placement (DESIGN.md §15)",
+            )
+        if spec.faults is not None:
+            raise _unsupported(
+                f"faults × {eng}", 'engine="a"',
+                "the guarded sync + quarantine path (DESIGN.md §16) "
+                "lives on the Engine-A client-stacked wire",
+            )
+        if sharded:
+            raise _unsupported(
+                f"sharding × {eng}", 'engine="a"',
+                "the sharded step shards the client-stacked parameter "
+                "axis over the mesh (DESIGN.md §17); Engine B has no "
+                "client-stacked layout to shard",
+            )
+        if async_mode:
+            raise _unsupported(
+                f"staleness × {eng}", 'engine="a"',
+                "the async bounded-staleness schedule overlaps the "
+                "Engine-A fed-server syncs (DESIGN.md §17)",
+            )
+    if sharded or async_mode:
+        feature = "sharding" if sharded else "staleness"
+        if spec.privacy is not None and spec.privacy.noise_multiplier > 0:
+            raise _unsupported(
+                f"{feature} × privacy", "noise_multiplier=0",
+                "DP noise keys fold (seed, leaf, step), so the draw "
+                "cannot be reproduced bit-exactly across shard layouts "
+                "or stale apply rounds — the single-host synchronous "
+                "engine is the DP path (DESIGN.md §15/§17)",
+            )
+        if spec.classes is not None:
+            raise _unsupported(
+                f"{feature} × classes", "no classes section",
+                "the ragged per-class sync has no sharded/async "
+                "collective lowering yet (DESIGN.md §14/§17)",
+            )
+        if spec.faults is not None:
+            raise _unsupported(
+                f"{feature} × faults", "no faults section",
+                "crash-recovery checkpoints cannot capture the in-flight "
+                "async aggregation queue, and the fault drill's "
+                "corruption/outage hooks assume the single-host "
+                "synchronous loop (DESIGN.md §16/§17)",
+            )
+        if spec.run.mode == "control":
+            raise _unsupported(
+                f'{feature} × mode="control"', 'mode="train"',
+                "the controller re-plans (cut, I) mid-run, which would "
+                "have to re-shard state and re-time in-flight async "
+                "syncs across the switch (DESIGN.md §13/§17)",
+            )
+
+
 def build(spec: ExperimentSpec) -> BuiltExperiment:
     """Resolve every registry name and compose the problem in the one
     valid order (see module docstring)."""
+    check_capabilities(spec)
     if spec.run.mode == "control" and spec.scenario is None:
         raise ValueError(
             'run mode="control" needs a scenario section: the controller '
             "observes round telemetry from that fleet trace (add scenario=, "
             'e.g. ScenarioCfg(name="flaky-wan"))'
-        )
-    if (
-        spec.faults is not None
-        and spec.run.mode in ("train", "control")
-        and spec.run.engine != "a"
-    ):
-        raise ValueError(
-            'a faults section trains on engine="a": the guarded sync + '
-            "quarantine path (DESIGN.md §16) lives on the Engine-A "
-            f'client-stacked wire (got engine={spec.run.engine!r})'
         )
     if spec.classes is not None and (
         spec.scenario is not None or spec.participation is not None

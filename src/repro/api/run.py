@@ -316,8 +316,50 @@ def _train(built: BuiltExperiment, cuts, intervals) -> Dict[str, Any]:
     masks = _participation_masks(built, cuts)
     with_mask = masks is not None or inject
     init = init_state_a if rc.engine == "a" else init_state_b
-    state = init(model, plan, opt, key)
-    step = _make_step(built, model, plan, opt, with_mask)
+
+    # sharded / async execution (DESIGN.md §17) — capability-checked at
+    # build time (engine A, no privacy/classes/faults/control)
+    from ..core.async_agg import normalize_staleness
+
+    s_eff = normalize_staleness(rc.staleness, plan)
+    use_async = any(s_eff)
+    mesh, client_axes = None, ("data",)
+    if rc.sharding is not None:
+        from ..core.sharded import init_sharded_state_a
+        from ..launch.mesh import make_debug_mesh
+
+        sh = rc.sharding
+        mesh = make_debug_mesh(data=sh.data, model=sh.model, pods=sh.pods)
+        client_axes = ("pod", "data") if sh.pods else ("data",)
+        state = init_sharded_state_a(
+            model, plan, opt, key, mesh, client_axes=client_axes
+        )
+    else:
+        state = init(model, plan, opt, key)
+
+    trainer, step = None, None
+    if use_async:
+        from ..core.async_agg import make_async_trainer
+
+        guard_kw = (
+            built.guard
+            if built.guard is not None and inject
+            else None
+        )
+        trainer = make_async_trainer(
+            model, plan, opt, staleness=rc.staleness,
+            compressor=built.compressor, with_mask=with_mask,
+            guard=guard_kw, mesh=mesh, client_axes=client_axes,
+        )
+    elif mesh is not None:
+        from ..core.sharded import build_sharded_train_step_a
+
+        step = build_sharded_train_step_a(
+            model, plan, opt, mesh, client_axes=client_axes,
+            compressor=built.compressor, with_mask=with_mask,
+        )
+    else:
+        step = _make_step(built, model, plan, opt, with_mask)
 
     members = None
     if inject:
@@ -372,9 +414,13 @@ def _train(built: BuiltExperiment, cuts, intervals) -> Dict[str, Any]:
                 faulty_rounds += 1
                 n_faulty_total += rf.n_faulty
         if with_mask:
-            state, loss = step(
-                state, batch, jnp.asarray(mrow, dtype=jnp.float32)
-            )
+            m_arr = jnp.asarray(mrow, dtype=jnp.float32)
+            if trainer is not None:
+                state, loss = trainer.run_round(state, batch, r, m_arr)
+            else:
+                state, loss = step(state, batch, m_arr)
+        elif trainer is not None:
+            state, loss = trainer.run_round(state, batch, r)
         else:
             state, loss = step(state, batch)
         if inject and rf.cell_out and members is not None:
@@ -408,11 +454,16 @@ def _train(built: BuiltExperiment, cuts, intervals) -> Dict[str, Any]:
         if rc.log_every and ((r + 1) % rc.log_every == 0 or r == 0):
             print(f"round {r+1:5d}  loss {losses[-1]:.4f}")
 
+    if trainer is not None:
+        # fold any still in-flight aggregations in before reporting
+        state = trainer.drain(state)
+
     omega = 0.0 if built.compression is None else built.compression.omega
     bound = theorem1_bound(
         built.hyper, max(1, rc.rounds), intervals, cuts, omega=omega,
         participation=built.participation,
         dp_sigma2=built.problem.dp_sigma2,
+        staleness=s_eff,
     )
     out = {
         "engine": rc.engine,
@@ -421,7 +472,18 @@ def _train(built: BuiltExperiment, cuts, intervals) -> Dict[str, Any]:
         "final_loss": losses[-1] if losses else None,
         "losses": losses,
         "thm1_bound": float(bound),
+        "async": bool(use_async),
+        "staleness": [int(v) for v in s_eff],
     }
+    if mesh is not None:
+        out["sharding"] = {
+            "data": rc.sharding.data,
+            "model": rc.sharding.model,
+            "pods": rc.sharding.pods,
+            "client_shards": int(
+                np.prod([mesh.shape[a] for a in client_axes])
+            ),
+        }
     if fc is not None:
         out["faults"] = {
             "n_faulty_total": int(n_faulty_total),

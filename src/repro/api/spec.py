@@ -531,6 +531,36 @@ class SolverCfg:
 
 
 @dataclass(frozen=True)
+class ShardingCfg:
+    """Mesh geometry for the sharded Engine-A step (DESIGN.md §17).
+
+    The client-stacked parameter axis shards over ``data`` (or
+    ``pod × data`` when ``pods`` > 0) and trailing weight dims get
+    Megatron TP over ``model`` — exactly ``launch.sharding``'s layout
+    contract.  The mesh needs data·model·max(pods, 1) devices; on a CPU
+    host that means ``--xla_force_host_platform_device_count`` set
+    before jax initializes (``launch.mesh.make_debug_mesh`` checks and
+    says so).  ``data=1, model=1, pods=0`` is a valid degenerate mesh
+    (useful for exercising the sharded code path on one device).
+    """
+
+    data: int = 2
+    model: int = 1
+    pods: int = 0                  # 0 = single-pod (data, model) mesh
+
+    def __post_init__(self):
+        if self.data < 1 or self.model < 1 or self.pods < 0:
+            raise ValueError(
+                f"sharding needs data >= 1, model >= 1, pods >= 0: "
+                f"data={self.data}, model={self.model}, pods={self.pods}"
+            )
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ShardingCfg":
+        return cls(**d)
+
+
+@dataclass(frozen=True)
 class RunCfg:
     """What ``run(spec)`` produces.
 
@@ -540,6 +570,15 @@ class RunCfg:
     schedule), or "control" (training under the online adaptive
     controller — needs a ``scenario``; knobs come from the spec's
     ``control`` section).  Training knobs are ignored by solve/simulate.
+
+    ``sharding`` (a ``ShardingCfg``) runs the Engine-A step sharded over
+    a device mesh (DESIGN.md §17); Engine A only.  ``staleness`` — one
+    bound or per-tier bounds s_m ≥ 0 — switches training to the async
+    bounded-staleness aggregation mode: tier m's fed-server sync
+    computed at round r applies at round r + s_m, overlapping client
+    compute, and the reported Theorem-1 bound carries the (I_m + s_m)²
+    drift inflation.  All-zero staleness is the synchronous engine
+    bit-exactly.
     """
 
     mode: str = "solve"
@@ -550,6 +589,8 @@ class RunCfg:
     non_iid: bool = False
     dataset_size: int = 512
     log_every: int = 0             # 0 = silent
+    sharding: Optional[ShardingCfg] = None
+    staleness: Union[int, Tuple[int, ...]] = 0
 
     def __post_init__(self):
         if self.mode not in ("solve", "simulate", "train", "control"):
@@ -558,9 +599,25 @@ class RunCfg:
             )
         if self.engine not in ("a", "b"):
             raise ValueError(f"engine must be a|b: {self.engine!r}")
+        s = self.staleness
+        if not isinstance(s, int):
+            object.__setattr__(
+                self, "staleness", tuple(int(v) for v in s)
+            )
+            s = self.staleness
+        vals = (s,) if isinstance(s, int) else s
+        if any(v < 0 for v in vals):
+            raise ValueError(f"run.staleness bounds must be >= 0: {s!r}")
 
     @classmethod
     def from_dict(cls, d: Mapping[str, Any]) -> "RunCfg":
+        d = dict(d)
+        sh = d.get("sharding")
+        if sh is not None and not isinstance(sh, ShardingCfg):
+            d["sharding"] = ShardingCfg.from_dict(sh)
+        st = d.get("staleness")
+        if st is not None and not isinstance(st, int):
+            d["staleness"] = tuple(int(v) for v in st)
         return cls(**d)
 
 

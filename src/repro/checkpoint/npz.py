@@ -43,13 +43,16 @@ def save_checkpoint(
     payload["__meta__"] = np.frombuffer(
         json.dumps({"step": int(step), **(meta or {})}).encode(), dtype=np.uint8
     )
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    # a bare filename has dirname '' — normalize to '.' so makedirs,
+    # mkstemp and the directory fsync all address the CWD instead of
+    # crashing on the empty string
+    d = os.path.dirname(path) or "."
+    os.makedirs(d, exist_ok=True)
     # atomic + durable write: tmp in the SAME directory (os.replace must
     # not cross filesystems), fsync the file so the rename never installs
     # a partially-flushed payload, then fsync the directory so the rename
     # itself survives a crash — a reader of ``path`` sees either the old
     # complete checkpoint or the new complete one, never a torn file
-    d = os.path.dirname(os.path.abspath(path))
     fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp.npz")
     os.close(fd)
     try:

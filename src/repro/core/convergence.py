@@ -133,6 +133,31 @@ def class_weighted_G2_sums(
     return d
 
 
+def staleness_rounds(
+    staleness: Union[None, int, Sequence[int]],
+    M: int,
+) -> np.ndarray:
+    """Normalize a staleness argument to per-tier round counts ``[M]``.
+
+    Accepts None (synchronous — every sync applies the round it is
+    computed), one scalar bound (uniform across the async tiers), or a
+    per-tier sequence s_m ≥ 0.  The top tier's entry is accepted but
+    inert: the drift sum excludes tier M exactly as it excludes its
+    interval (the cloud sync defines the round boundary).
+    """
+    if staleness is None:
+        return np.zeros(M, dtype=np.int64)
+    if isinstance(staleness, (int, np.integer)):
+        s = np.full(M, int(staleness), dtype=np.int64)
+    else:
+        s = np.asarray([int(v) for v in staleness], dtype=np.int64)
+        if len(s) != M:
+            raise ValueError(f"need {M} per-tier staleness bounds, got {len(s)}")
+    if np.any(s < 0):
+        raise ValueError(f"staleness bounds must be >= 0: {s}")
+    return s
+
+
 def bound_round_terms(
     hp: HyperSpec,
     intervals: Sequence[int],
@@ -140,6 +165,7 @@ def bound_round_terms(
     omega: float = 0.0,
     participation: Union[None, float, Sequence[float], ParticipationSpec] = None,
     dp_sigma2: float = 0.0,
+    staleness: Union[None, int, Sequence[int]] = None,
 ) -> Tuple[float, float]:
     """The two R-independent (per-round) terms of Eq. (8): (variance, drift).
 
@@ -155,6 +181,17 @@ def bound_round_terms(
     joins the variance term as a *separate* additive contribution, gated
     on being nonzero, so the noiseless path evaluates the exact same
     float expression as before DP existed (bit-exact collapse).
+
+    ``staleness`` (DESIGN.md §17) is the bounded-staleness budget of the
+    async aggregation mode: a tier-m sync computed at round r lands at
+    most s_m rounds later, so client drift accumulates for up to
+    I_m + s_m rounds between *effective* aggregations and the drift term
+    reads (I_m + s_m)² in place of I_m².  The inflation is a separate
+    additive correction gated per tier on s_m > 0 — the s ≡ 0 path
+    evaluates the exact pre-async float expression (bit-exact collapse,
+    the same contract omega / participation / dp_sigma2 honor).  A tier
+    with I_m = 1 but s_m > 0 drifts too (its every-round sync lands
+    late), contributing the full (1 + s_m)².
     """
     g, b = hp.gamma, hp.beta
     M = len(intervals)
@@ -168,6 +205,13 @@ def bound_round_terms(
         for I, dm, qm in zip(intervals[:-1], d[:-1], q[:-1])
         if I > 1
     )
+    s = staleness_rounds(staleness, M)
+    if np.any(s[:-1] > 0):
+        term3 += 4.0 * b**2 * g**2 * sum(
+            ((I + sm) ** 2 - (I**2 if I > 1 else 0.0)) * (dm / qm)
+            for I, sm, dm, qm in zip(intervals[:-1], s[:-1], d[:-1], q[:-1])
+            if sm > 0
+        )
     return term2, term3
 
 
@@ -179,6 +223,7 @@ def theorem1_bound(
     omega: float = 0.0,
     participation: Union[None, float, Sequence[float], ParticipationSpec] = None,
     dp_sigma2: float = 0.0,
+    staleness: Union[None, int, Sequence[int]] = None,
 ) -> float:
     """RHS of Eq. (8): bound on (1/R) Σ_t E||∇f||².
 
@@ -196,10 +241,14 @@ def theorem1_bound(
 
     ``dp_sigma2`` adds the DP uplink noise mass to the variance term
     (see ``bound_round_terms``); 0 recovers the noiseless bound exactly.
+
+    ``staleness`` inflates the drift term to (I_m + s_m)² per tier under
+    the bounded-staleness async mode (see ``bound_round_terms``); None or
+    all-zero recovers the synchronous bound bit-exactly.
     """
     term1 = 2.0 * hp.theta0 / (hp.gamma * R)
     term2, term3 = bound_round_terms(
-        hp, intervals, cuts, omega, participation, dp_sigma2
+        hp, intervals, cuts, omega, participation, dp_sigma2, staleness
     )
     return term1 + term2 + term3
 
@@ -212,6 +261,7 @@ def corollary1_rounds(
     omega: float = 0.0,
     participation: Union[None, float, Sequence[float], ParticipationSpec] = None,
     dp_sigma2: float = 0.0,
+    staleness: Union[None, int, Sequence[int]] = None,
 ) -> Optional[float]:
     """Eq. (10): rounds to reach target ε; None if the schedule cannot reach ε."""
     g, b = hp.gamma, hp.beta
@@ -226,9 +276,42 @@ def corollary1_rounds(
         for I, dm, qm in zip(intervals[:-1], d[:-1], q[:-1])
         if I > 1
     )
+    s = staleness_rounds(staleness, M)
+    if np.any(s[:-1] > 0):
+        denom -= 4.0 * b**2 * g**2 * sum(
+            ((I + sm) ** 2 - (I**2 if I > 1 else 0.0)) * (dm / qm)
+            for I, sm, dm, qm in zip(intervals[:-1], s[:-1], d[:-1], q[:-1])
+            if sm > 0
+        )
     if denom <= 0:
         return None
     return 2.0 * hp.theta0 / (g * denom)
+
+
+def stale_interval_weights(
+    intervals: Sequence[int],
+    staleness: Union[None, int, Sequence[int]] = None,
+) -> np.ndarray:
+    """Per-tier drift weights w_m for the denominator D = c − κ·Σ w_m·d_m.
+
+    Synchronously w_m = 1{I_m > 1}·I_m² — exactly the sum
+    ``bound_constants`` documents.  Under a bounded-staleness budget the
+    same gated additive correction as ``bound_round_terms`` lifts a
+    stale tier to (I_m + s_m)², so a solver pricing an async schedule
+    through (c, κ) uses arithmetic identical to the bound itself.  The
+    top tier's weight is always 0 (its sync defines the round boundary).
+    ``staleness`` None / all-zero reproduces the synchronous weights
+    bit-exactly.
+    """
+    M = len(intervals)
+    s = staleness_rounds(staleness, M)
+    w = np.zeros(M, dtype=np.float64)
+    for m, I in enumerate(intervals[:-1]):
+        base = float(I) ** 2 if I > 1 else 0.0
+        w[m] = base
+        if s[m] > 0:
+            w[m] = base + ((float(I) + float(s[m])) ** 2 - base)
+    return w
 
 
 def bound_constants(
@@ -249,6 +332,12 @@ def bound_constants(
     §15) shrinks c by the DP uplink noise mass as a *separate* gated
     subtraction, never restructuring the existing float expression, so
     dp_sigma2 = 0 is bit-identical to the noiseless constants.
+
+    Bounded-staleness async aggregation (DESIGN.md §17) leaves (c, κ)
+    untouched: staleness inflates the *schedule-side* drift sum — swap
+    the 1{I>1}·I² weights for ``stale_interval_weights(intervals,
+    staleness)`` — exactly as per-tier participation enters through
+    ``HsflProblem.tier_d`` rather than through κ.
     """
     c = eps - hp.beta * hp.gamma * (1.0 + omega) * hp.sigma2_sum / (
         hp.num_clients * q1

@@ -108,6 +108,7 @@ def build_train_step_a(
     model, plan: TierPlan, opt: Optimizer, *, sync_opt_state: bool = False,
     fed_round=None, compressor=None, with_mask: bool = False,
     class_members=None, privacy=None, guard: Optional[GuardSpec] = None,
+    with_sync_weights: bool = False,
 ) -> Callable[..., Tuple[TrainState, jax.Array]]:
     """Engine-A step: vmapped per-client update + hierarchical aggregation.
 
@@ -167,6 +168,15 @@ def build_train_step_a(
     ``guard=None`` (default) is byte-identical to today's graph, and an
     armed guard over an all-healthy round collapses bit-for-bit to the
     unguarded step (``tests/test_faults.py``).
+
+    ``with_sync_weights=True`` makes the step additionally return the
+    effective per-client sync weights [N] (participation mask × guard
+    health × finite-loss; all-ones when neither masking nor a guard is
+    armed) — the exact weights every aggregation level used this round.
+    The async bounded-staleness runner (``core.async_agg``) captures
+    these at snapshot time so a deferred fed-server apply weights clients
+    identically to the in-step levels; re-deriving health at apply time
+    would quarantine a different set.
     """
     compress_fn = (
         None if compressor is None
@@ -261,7 +271,14 @@ def build_train_step_a(
                 new_opt["v"] = _sync(
                     new_opt["v"], state.step, mask=sync_mask, guarded=True
                 )
-        return TrainState(new_params, new_opt, state.step + 1), loss
+        new_state = TrainState(new_params, new_opt, state.step + 1)
+        if with_sync_weights:
+            ww = (
+                jnp.ones((plan.num_clients,), jnp.float32)
+                if sync_mask is None else sync_mask.astype(jnp.float32)
+            )
+            return new_state, loss, ww
+        return new_state, loss
 
     if with_mask:
         return _step

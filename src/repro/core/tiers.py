@@ -241,7 +241,14 @@ def _concat_stacks(stacks: List[Any]) -> Any:
 
 
 def _group_mean(tree: Params, groups: int) -> Params:
-    """Mean over client groups, broadcast back. Leaves: [N, ...]."""
+    """Mean over client groups, broadcast back. Leaves: [N, ...].
+
+    ``core.sharded`` lowers this same level semantics onto a device mesh
+    (DESIGN.md §17): when the group boundaries align with the shard
+    boundaries the per-shard computation IS this function (bit-identical);
+    otherwise the mean becomes a matmul-shaped one-hot einsum + ``psum``,
+    equal up to f32 cross-device reduction order.
+    """
 
     def f(x):
         n = x.shape[0]
@@ -280,6 +287,14 @@ def _group_mean_masked(
     state — but a compressed fed-server upload must pass the
     pre-compression params here, otherwise a silent group "keeps" a
     lossy-coded copy it never uploaded (DESIGN.md §9/§12).
+
+    The sharded engine (``core.sharded``) reproduces these weights with
+    per-shard partial sums + ``lax.psum``; a zero-participant group's
+    keep-fallback becomes a ``where`` against the gathered mask.  Note the
+    group mean is NOT idempotent on already-averaged rows when weights
+    differ, which is why the deferred fed-server replay in
+    ``core.async_agg.fed_level_apply`` re-derives the level from a
+    snapshot delta instead of calling ``synchronize`` twice (§17).
     """
     w = w.astype(jnp.float32)
     if keep is None:
@@ -352,6 +367,14 @@ def synchronize(
     the participating group's broadcast).  On an all-healthy round the
     sanitized tree is bit-identical to the input and the health mask is
     all-ones, so the result collapses bit-for-bit onto the unguarded path.
+
+    Two other call sites reuse these exact level semantics (DESIGN.md §17):
+    ``core.sharded.build_sharded_train_step_a`` lowers every level onto a
+    device mesh under ``shard_map`` (same schedule, same mask/compression/
+    guard gating, cross-device means via ``lax`` collectives), and
+    ``core.async_agg.fed_level_apply`` replays a single tier's deferred
+    fed-server level from a snapshot — deliberately NOT by re-invoking
+    ``synchronize``, because the group mean is not bit-idempotent.
     """
     if guard is not None:
         health, params = guard_health(params, plan.num_clients, guard)

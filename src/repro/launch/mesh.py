@@ -39,8 +39,29 @@ def num_clients(multi_pod: bool = False) -> int:
 
 
 def make_debug_mesh(data: int = 2, model: int = 2, pods: int = 0):
-    """Tiny host-device mesh for tests (requires the caller to have set
-    --xla_force_host_platform_device_count accordingly)."""
+    """Tiny host-device mesh for tests.
+
+    Requires ``--xla_force_host_platform_device_count`` (in XLA_FLAGS)
+    to have been set to at least data·model·max(pods, 1) *before* jax
+    initialized its backend — the flag is read exactly once, at backend
+    init, so setting it afterwards is silently ignored.  Rather than let
+    ``jax.make_mesh`` fail with an opaque shape assertion (or silently
+    build a 1×1 mesh), detect the already-initialized-with-too-few-
+    devices state here and say what to do about it.
+    """
+    need = data * model * max(pods, 1)
+    have = jax.device_count()
+    if have < need:
+        raise RuntimeError(
+            f"make_debug_mesh needs {need} devices "
+            f"({pods or 1}x{data}x{model}) but the jax backend initialized "
+            f"with only {have}.  The host-platform device count is fixed at "
+            f"backend init: set XLA_FLAGS="
+            f"'--xla_force_host_platform_device_count={need}' in the "
+            f"environment (or jax.config) BEFORE the first jax call — e.g. "
+            f"run the sharded test/benchmark in a fresh subprocess with the "
+            f"flag exported, as tests/test_sharded_exec.py does."
+        )
     if pods:
         return jax.make_mesh((pods, data, model), ("pod", "data", "model"))
     return jax.make_mesh((data, model), ("data", "model"))

@@ -16,6 +16,43 @@ import jax
 import jax.numpy as jnp
 
 
+def load_serving_params(path: str, template):
+    """Restore serving params from either checkpoint layout.
+
+    ``launch.train`` saves the Engine-A *client-stacked* state (every
+    leaf carries a leading client axis N) — including sharded/async runs,
+    which drain in-flight syncs before saving.  After the top-tier cloud
+    sync every client row holds the aggregated model, so the serving copy
+    is row 0.  A plain single-model checkpoint restores as-is.
+    """
+    import numpy as np
+
+    from ..checkpoint import load_checkpoint
+    from ..checkpoint.npz import _seg
+    from ..core.engine import replicate_for_clients, unreplicate
+
+    try:
+        params, _, _ = load_checkpoint(path, template)
+        return params
+    except ValueError:
+        pass  # shapes mismatched — try the client-stacked layout
+    leaves = jax.tree_util.tree_flatten_with_path(template)[0]
+    key0 = "/".join(_seg(p) for p in leaves[0][0])
+    with np.load(path) as z:
+        if key0 not in z:
+            raise KeyError(f"checkpoint missing leaf {key0!r}")
+        saved = z[key0].shape
+    want = np.asarray(leaves[0][1]).shape
+    if len(saved) != len(want) + 1:
+        raise ValueError(
+            f"checkpoint leaf {key0!r} has shape {saved}, which is neither "
+            f"the serving shape {want} nor client-stacked (N,)+{want}"
+        )
+    n = int(saved[0])
+    stacked, _, _ = load_checkpoint(path, replicate_for_clients(template, n))
+    return unreplicate(stacked)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b")
@@ -38,9 +75,7 @@ def main(argv=None) -> int:
     key = jax.random.PRNGKey(args.seed)
     params = model.init_params(key)
     if args.checkpoint:
-        from ..checkpoint import load_checkpoint
-
-        params, _, _ = load_checkpoint(args.checkpoint, params)
+        params = load_serving_params(args.checkpoint, params)
         print(f"restored {args.checkpoint}")
 
     B = args.batch

@@ -101,6 +101,41 @@ def param_pspecs(
     return jax.tree_util.tree_map_with_path(f, params)
 
 
+def train_pspecs(
+    tree: Any,
+    client_axes: Tuple[str, ...],
+    num_clients: Optional[int] = None,
+) -> Any:
+    """Client-axis-only pspecs for the sharded *training* step
+    (``core.sharded``): shard axis 0 of every client-stacked leaf over
+    the client mesh axes, replicate everything else (scalar bookkeeping
+    like adam's step counter).
+
+    Deliberately distinct from ``param_pspecs``: Megatron TP over
+    ``model`` is a *serving* feature here — the training step keeps
+    weights replicated across ``model`` and shards only the client
+    axis.  (Calling ``param_pspecs(tp=1, ...)`` would NOT express that:
+    every weight dim divides 1, so every ``_TP_RULES`` entry would
+    spuriously shard over ``model``.)
+
+    ``num_clients`` restricts the client-stacked test to leaves whose
+    leading dim matches (safe over mixed trees like a ``TrainState``);
+    ``None`` treats every non-scalar leaf as client-stacked.
+    """
+    ca = client_axes if len(client_axes) > 1 else client_axes[0]
+
+    def f(leaf):
+        shape = getattr(leaf, "shape", ())
+        stacked = len(shape) > 0 and (
+            num_clients is None or shape[0] == num_clients
+        )
+        if stacked:
+            return P(ca, *([None] * (len(shape) - 1)))
+        return P()
+
+    return jax.tree.map(f, tree)
+
+
 def batch_pspecs(batch: Any, client_axes: Tuple[str, ...]) -> Any:
     """Client-stacked batch leaves [N, b, ...]: shard the client axis."""
     ca = client_axes if len(client_axes) > 1 else client_axes[0]

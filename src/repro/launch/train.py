@@ -43,6 +43,19 @@ def main(argv=None) -> int:
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--shard-data", type=int, default=0, metavar="D",
+                    help="shard the client-stacked axis over D devices "
+                         "(core.sharded shard_map engine; needs XLA_FLAGS="
+                         "'--xla_force_host_platform_device_count=D' on CPU)")
+    ap.add_argument("--shard-pods", type=int, default=0, metavar="P",
+                    help="additionally shard clients over P pods "
+                         "(client axes become (pod, data))")
+    ap.add_argument("--staleness", type=int, nargs="*", default=None,
+                    metavar="S",
+                    help="bounded-staleness async aggregation: one value "
+                         "(applies to every deferrable tier) or one per "
+                         "tier; 0 is the synchronous schedule "
+                         "(core.async_agg)")
     args = ap.parse_args(argv)
 
     from ..configs import get_reduced
@@ -91,10 +104,41 @@ def main(argv=None) -> int:
         entities=(args.clients, args.edges, 1),
     )
 
+    # sharded / async execution (DESIGN.md §17)
+    mesh, client_axes = None, ("data",)
+    if args.shard_data:
+        from .mesh import make_debug_mesh
+
+        mesh = make_debug_mesh(
+            data=args.shard_data, model=1, pods=args.shard_pods
+        )
+        client_axes = ("pod", "data") if args.shard_pods else ("data",)
+    staleness = 0
+    if args.staleness:
+        staleness = (
+            args.staleness[0] if len(args.staleness) == 1
+            else tuple(args.staleness)
+        )
+
     def make_dispatch(plan_):
         """Specialized per-round-type steps (see tiers.synchronize): the
         fed-server collectives only exist in the (rare) sync-round programs,
-        so the hot path never pays for them."""
+        so the hot path never pays for them.
+
+        The async trainer generalizes exactly this dispatch — with all-zero
+        staleness it picks the same specialized variants; with s_m > 0 the
+        due tier's fed level is snapshotted and folded back s_m rounds
+        later (core.async_agg).  It also hosts the sharded step builder.
+        """
+        if mesh is not None or staleness:
+            from ..core.async_agg import make_async_trainer
+
+            trainer = make_async_trainer(
+                model, plan_, opt, staleness=staleness,
+                mesh=mesh, client_axes=client_axes,
+            )
+            return trainer.run_round, trainer
+
         cache = {}
 
         def dispatch(state_, batch_, r):
@@ -106,11 +150,27 @@ def main(argv=None) -> int:
                 )
             return cache[fed](state_, batch_)
 
-        return dispatch
+        return dispatch, None
+
+    def make_probe_step(plan_):
+        if mesh is not None:
+            from ..core.sharded import build_sharded_train_step_a
+
+            return build_sharded_train_step_a(
+                model, plan_, opt, mesh, client_axes=client_axes
+            )
+        return jax.jit(build_train_step_a(model, plan_, opt))
 
     key = jax.random.PRNGKey(args.seed)
-    state = init_state_a(model, plan, opt, key)
-    step = jax.jit(build_train_step_a(model, plan, opt))
+    if mesh is not None:
+        from ..core.sharded import init_sharded_state_a
+
+        state = init_sharded_state_a(
+            model, plan, opt, key, mesh, client_axes=client_axes
+        )
+    else:
+        state = init_state_a(model, plan, opt, key)
+    step = make_probe_step(plan)
 
     if args.auto_optimize:
         print(f"[probe] estimating bound constants over {args.probe_rounds} rounds")
@@ -135,11 +195,17 @@ def main(argv=None) -> int:
             spec.n_units, args.clients, cuts=res.cuts,
             intervals=res.intervals, entities=(args.clients, args.edges, 1),
         )
-        step = jax.jit(build_train_step_a(model, plan, opt))
+        step = make_probe_step(plan)
 
+    mode = []
+    if mesh is not None:
+        mode.append(f"sharded over {client_axes} ({jax.device_count()} dev)")
+    if staleness:
+        mode.append(f"async staleness={staleness}")
     print(f"[train] arch={spec.name} units={spec.n_units} plan cuts={plan.cuts} "
-          f"I={plan.intervals} N={args.clients} J2={args.edges}")
-    dispatch = make_dispatch(plan)
+          f"I={plan.intervals} N={args.clients} J2={args.edges}"
+          + (f"  [{', '.join(mode)}]" if mode else ""))
+    dispatch, trainer = make_dispatch(plan)
     t0 = time.time()
     for r in range(args.rounds):
         batch = {k: jnp.asarray(v) for k, v in loader.next_round().items()}
@@ -147,6 +213,8 @@ def main(argv=None) -> int:
         if (r + 1) % args.log_every == 0 or r == 0:
             print(f"round {r+1:5d}  loss {float(loss):.4f}  "
                   f"({(time.time()-t0)/(r+1):.2f}s/round)")
+    if trainer is not None:
+        state = trainer.drain(state)  # fold in-flight async syncs in
 
     if args.checkpoint:
         from ..checkpoint import save_checkpoint

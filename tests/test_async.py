@@ -1,0 +1,320 @@
+"""Bounded-staleness async aggregation (core.async_agg, DESIGN.md §17).
+
+Fast tests drive the queue/apply machinery on toy client-stacked trees;
+the slow tests pin the two engine-level contracts on a real reduced
+model: staleness 0 collapses *bit-identically* onto the synchronous
+fed_round dispatch, and a drain immediately after the due round is
+bit-identical to the in-step fed level it deferred.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.async_agg import (
+    AsyncTrainer,
+    async_round_time,
+    fed_level_apply,
+    make_async_trainer,
+    normalize_staleness,
+)
+from repro.core.engine import TrainState, build_train_step_a, init_state_a
+from repro.core.tiers import default_plan, tier_subtrees
+
+N = 8
+
+
+def make_plan(intervals=(4, 2, 1)):
+    return default_plan(4, N, cuts=(1, 2), intervals=intervals,
+                        entities=(N, 4, 1))
+
+
+def toy_params(seed=0):
+    k = jax.random.PRNGKey(seed)
+    ks = jax.random.split(k, 3)
+    return {
+        "frontend": {"e": jax.random.normal(ks[0], (N, 3))},
+        "units": {"w": jax.random.normal(ks[1], (N, 4, 2))},
+        "head": {"h": jax.random.normal(ks[2], (N, 2))},
+    }
+
+
+# --------------------------------------------------------------------------- #
+# normalize_staleness
+# --------------------------------------------------------------------------- #
+
+
+def test_normalize_scalar_hits_deferrable_tiers_only():
+    plan = make_plan(intervals=(4, 1, 1))
+    # tier 1 syncs every round, tier 2 is the top tier: both pinned to 0
+    assert normalize_staleness(2, plan) == (2, 0, 0)
+    assert normalize_staleness(0, plan) == (0, 0, 0)
+    assert normalize_staleness(None, plan) == (0, 0, 0)
+
+
+def test_normalize_explicit_tuple_validated():
+    plan = make_plan()
+    assert normalize_staleness((1, 0, 0), plan) == (1, 0, 0)
+    with pytest.raises(ValueError, match="per-tier staleness"):
+        normalize_staleness((1, 0), plan)
+    with pytest.raises(ValueError, match=">= 0"):
+        normalize_staleness((-1, 0, 0), plan)
+    with pytest.raises(ValueError, match="top tier"):
+        normalize_staleness((0, 0, 1), plan)
+    with pytest.raises(ValueError, match="syncs every round"):
+        normalize_staleness((0, 1, 0), make_plan(intervals=(4, 1, 1)))
+
+
+# --------------------------------------------------------------------------- #
+# fed_level_apply
+# --------------------------------------------------------------------------- #
+
+
+def test_fresh_apply_is_the_fed_mean_of_tier_m_only():
+    plan, params = make_plan(), toy_params()
+    out = fed_level_apply(params, plan, 0)
+    # tier 0 = frontend + unit 0: global mean (the fed level has 1 group)
+    np.testing.assert_allclose(
+        np.asarray(out["frontend"]["e"]),
+        np.broadcast_to(np.asarray(params["frontend"]["e"]).mean(0), (N, 3)),
+        rtol=1e-6,
+    )
+    np.testing.assert_allclose(
+        np.asarray(out["units"]["w"][:, :1]),
+        np.broadcast_to(
+            np.asarray(params["units"]["w"][:, :1]).mean(0), (N, 1, 2)
+        ),
+        rtol=1e-6,
+    )
+    # tiers 1 and 2 untouched, bit-for-bit
+    np.testing.assert_array_equal(
+        np.asarray(out["units"]["w"][:, 1:]),
+        np.asarray(params["units"]["w"][:, 1:]),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(out["head"]["h"]), np.asarray(params["head"]["h"])
+    )
+
+
+def test_top_tier_apply_rejected():
+    plan, params = make_plan(), toy_params()
+    with pytest.raises(ValueError, match="top tier"):
+        fed_level_apply(params, plan, plan.M - 1)
+
+
+def test_masked_apply_averages_participants_only():
+    plan, params = make_plan(), toy_params()
+    mask = jnp.asarray([1, 1, 0, 1, 0, 0, 1, 1], jnp.float32)
+    out = fed_level_apply(params, plan, 0, mask=mask)
+    sel = np.asarray(mask) > 0
+    np.testing.assert_allclose(
+        np.asarray(out["frontend"]["e"]),
+        np.broadcast_to(
+            np.asarray(params["frontend"]["e"])[sel].mean(0), (N, 3)
+        ),
+        rtol=1e-6,
+    )
+    # all-zero mask: the zero-participant group keeps its params
+    keep = fed_level_apply(params, plan, 0, mask=jnp.zeros((N,)))
+    np.testing.assert_array_equal(
+        np.asarray(keep["frontend"]["e"]), np.asarray(params["frontend"]["e"])
+    )
+
+
+def test_compress_fn_applied_on_the_fed_wire():
+    plan, params = make_plan(), toy_params()
+    out = fed_level_apply(params, plan, 0, compress_fn=jnp.round)
+    np.testing.assert_allclose(
+        np.asarray(out["frontend"]["e"]),
+        np.broadcast_to(
+            np.round(np.asarray(params["frontend"]["e"])).mean(0), (N, 3)
+        ),
+        rtol=1e-6,
+    )
+
+
+def test_stale_apply_retains_local_progress():
+    """params_new = fed_mean(snapshot) + (params_now − snapshot)."""
+    plan = make_plan()
+    snap = toy_params(0)
+    delta = toy_params(1)
+    now = jax.tree.map(lambda a, d: a + 0.25 * d, snap, delta)
+    out = fed_level_apply(now, plan, 1, snapshot=snap)
+    w_s = np.asarray(snap["units"]["w"][:, 1:2])
+    w_n = np.asarray(now["units"]["w"][:, 1:2])
+    want = np.broadcast_to(w_s.mean(0), w_s.shape) + (w_n - w_s)
+    np.testing.assert_allclose(
+        np.asarray(out["units"]["w"][:, 1:2]), want, rtol=1e-5
+    )
+    # s = 0 degenerates: snapshot == now -> the delta term vanishes
+    fresh = fed_level_apply(now, plan, 1)
+    zero = fed_level_apply(now, plan, 1, snapshot=now)
+    np.testing.assert_allclose(
+        np.asarray(zero["units"]["w"]), np.asarray(fresh["units"]["w"]),
+        rtol=1e-6,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# AsyncTrainer queue mechanics (fake step — no model, no compile)
+# --------------------------------------------------------------------------- #
+
+
+def _fake_builder(fed):
+    def step(state, batch):
+        params = jax.tree.map(lambda x: x + batch, state.params)
+        return (
+            TrainState(params, state.opt_state, state.step + 1),
+            jnp.float32(0.0),
+            jnp.ones((N,), jnp.float32),
+        )
+
+    return step
+
+
+def test_trainer_defers_and_folds_in_the_snapshot_mean():
+    plan = make_plan(intervals=(2, 1, 1))
+    tr = AsyncTrainer(plan, _fake_builder, staleness=1, jit_apply=False)
+    assert tr.async_tiers == [0]
+    state = TrainState(toy_params(), (), jnp.int32(0))
+    state, _ = tr.run_round(state, jnp.float32(1.0), 0)
+    assert not tr.pending                      # (0+1) % 2 != 0: nothing due
+    state, _ = tr.run_round(state, jnp.float32(1.0), 1)
+    assert [p.tier for p in tr.pending] == [0]
+    snap = tr.pending[0].snapshot
+    assert tr.pending[0].apply_round == 2
+    state, _ = tr.run_round(state, jnp.float32(1.0), 2)
+    assert not tr.pending                      # applied at its due round
+    want = fed_level_apply(
+        jax.tree.map(lambda x: x + 1.0, snap), plan, 0, snapshot=snap
+    )
+    np.testing.assert_allclose(
+        np.asarray(state.params["frontend"]["e"]),
+        np.asarray(want["frontend"]["e"]),
+        rtol=1e-6,
+    )
+
+
+def test_trainer_drain_empties_the_queue():
+    plan = make_plan(intervals=(2, 2, 1))
+    tr = AsyncTrainer(plan, _fake_builder, staleness=3, jit_apply=False)
+    state = TrainState(toy_params(), (), jnp.int32(0))
+    for r in range(2):
+        state, _ = tr.run_round(state, jnp.float32(1.0), r)
+    assert {p.tier for p in tr.pending} == {0, 1}
+    state = tr.drain(state)
+    assert not tr.pending
+    assert all(np.isfinite(x).all() for x in jax.tree.leaves(state.params))
+
+
+def test_fed_tuple_disables_async_tiers_in_step():
+    plan = make_plan(intervals=(2, 2, 1))
+    tr = AsyncTrainer(plan, _fake_builder, staleness=(1, 0, 0))
+    # tier 0 deferred (never syncs in-step); tier 1 keeps its in-step gate
+    assert tr._fed_tuple(0) == (False, False, True)
+    assert tr._fed_tuple(1) == (False, True, True)
+    sync = AsyncTrainer(plan, _fake_builder, staleness=0)
+    assert sync._fed_tuple(1) == (True, True, True)  # the production dispatch
+
+
+# --------------------------------------------------------------------------- #
+# async_round_time
+# --------------------------------------------------------------------------- #
+
+
+def test_round_time_staleness_zero_reproduces_sync():
+    sync, asyn = async_round_time(2.0, [4.0, 1.0, 0.0], (2, 4, 1), (0, 0, 0))
+    assert sync == asyn == 2.0 + 4.0 / 2 + 1.0 / 4
+
+
+def test_round_time_overlap_hides_the_wire():
+    sync, asyn = async_round_time(2.0, [4.0, 1.0, 0.0], (2, 4, 1), (1, 1, 0))
+    # tier 0: max(0, 4-2)/2 = 1; tier 1: max(0, 1-2)/4 = 0
+    assert asyn == 2.0 + 1.0
+    assert asyn < sync
+    # s large enough hides everything: only the split compute remains
+    _, full = async_round_time(2.0, [4.0, 1.0, 0.0], (2, 4, 1), (2, 1, 0))
+    assert full == 2.0
+
+
+# --------------------------------------------------------------------------- #
+# real engine (slow): bit-exact collapse + deferred == in-step
+# --------------------------------------------------------------------------- #
+
+
+def _setup(rounds):
+    from repro.configs import get_reduced
+    from repro.configs.shapes import concrete_inputs
+    from repro.models.model import SplittableModel
+    from repro.optim import sgd
+
+    spec = get_reduced("smollm-135m")
+    model = SplittableModel(spec)
+    plan = default_plan(spec.n_units, N, cuts=(1, 2), intervals=(3, 2, 1),
+                        entities=(N, 4, 1))
+    opt = sgd(1e-2)
+    batches = []
+    for r in range(rounds):
+        b = concrete_inputs(spec, N * 2, 16, jax.random.PRNGKey(r))
+        batches.append(jax.tree.map(
+            lambda x: x.reshape((N, 2) + x.shape[1:]), b
+        ))
+    return model, plan, opt, batches
+
+
+def _run_sync(model, plan, opt, batches):
+    state = init_state_a(model, plan, opt, jax.random.PRNGKey(0))
+    cache, losses = {}, []
+    for r, batch in enumerate(batches):
+        fed = tuple((r + 1) % I == 0 if I > 1 else True
+                    for I in plan.intervals)
+        if fed not in cache:
+            cache[fed] = jax.jit(
+                build_train_step_a(model, plan, opt, fed_round=fed)
+            )
+        state, loss = cache[fed](state, batch)
+        losses.append(float(loss))
+    return state, losses
+
+
+@pytest.mark.slow
+def test_async_staleness0_bitexact_vs_sync_dispatch():
+    """All-zero staleness IS the synchronous production dispatch."""
+    model, plan, opt, batches = _setup(6)
+    ref_state, ref_losses = _run_sync(model, plan, opt, batches)
+
+    tr = make_async_trainer(model, plan, opt, staleness=0)
+    state = init_state_a(model, plan, opt, jax.random.PRNGKey(0))
+    losses = []
+    for r, batch in enumerate(batches):
+        state, loss = tr.run_round(state, batch, r)
+        losses.append(float(loss))
+    assert not tr.pending
+    state = tr.drain(state)
+
+    assert losses == ref_losses
+    for a, b in zip(jax.tree.leaves(state.params),
+                    jax.tree.leaves(ref_state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.slow
+def test_async_drain_at_due_round_matches_in_step_sync():
+    """With no local steps between snapshot and apply, the deferred
+    fed_level_apply is bit-identical to the in-step fed level: run 2
+    rounds at s=1 (tiers snapshot on round 1, due round 2) and drain."""
+    model, plan, opt, batches = _setup(2)
+    plan2 = default_plan(plan.n_units, N, cuts=plan.cuts,
+                         intervals=(2, 2, 1), entities=plan.entities)
+    ref_state, _ = _run_sync(model, plan2, opt, batches)
+
+    tr = make_async_trainer(model, plan2, opt, staleness=1)
+    state = init_state_a(model, plan2, opt, jax.random.PRNGKey(0))
+    for r, batch in enumerate(batches):
+        state, _ = tr.run_round(state, batch, r)
+    assert {p.tier for p in tr.pending} == {0, 1}
+    state = tr.drain(state)
+
+    for a, b in zip(jax.tree.leaves(state.params),
+                    jax.tree.leaves(ref_state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

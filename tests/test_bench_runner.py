@@ -1,0 +1,79 @@
+"""benchmarks.run harness scaffolding: --timeout must limit a harness
+from ANY calling thread.
+
+``signal.alarm`` only works on the main thread; driving ``main()``
+programmatically from a worker (the --json CI wrappers, notebooks)
+previously ran with no limit at all.  The watchdog fallback injects
+``HarnessTimeout`` into the calling thread instead.
+"""
+import threading
+import time
+
+import pytest
+
+from benchmarks.run import HarnessTimeout, _alarm
+
+
+def test_alarm_disabled_at_zero():
+    with _alarm(0):
+        pass  # no signal handler touched, no watchdog spawned
+    assert not [
+        t for t in threading.enumerate() if t.name == "bench-watchdog"
+    ]
+
+
+def test_alarm_interrupts_main_thread():
+    with pytest.raises(HarnessTimeout, match="exceeded --timeout 1s"):
+        with _alarm(1):
+            deadline = time.time() + 30
+            while time.time() < deadline:
+                time.sleep(0.01)
+    # the alarm is cancelled on exit: nothing fires later
+    with _alarm(1):
+        pass
+
+
+def test_alarm_interrupts_worker_thread():
+    """Regression: a worker thread must get the watchdog fallback, not a
+    silent no-limit run (signal.alarm would raise or be ignored there)."""
+    out = {}
+
+    def work():
+        try:
+            with _alarm(1):
+                deadline = time.time() + 30
+                while time.time() < deadline:
+                    time.sleep(0.01)
+                out["result"] = "ran to completion"
+        except HarnessTimeout as e:
+            out["result"] = "timeout"
+            out["msg"] = str(e)
+        except ValueError as e:  # what signal.signal raises off-main-thread
+            out["result"] = f"signal error: {e}"
+
+    t = threading.Thread(target=work)
+    t.start()
+    t.join(25)
+    assert not t.is_alive()
+    assert out.get("result") == "timeout", out
+    assert "exceeded --timeout 1s" in out["msg"]
+    # the watchdog cleaned up after itself
+    assert not [
+        w for w in threading.enumerate() if w.name == "bench-watchdog"
+    ]
+
+
+def test_worker_thread_within_budget_is_untouched():
+    out = {}
+
+    def work():
+        with _alarm(30):
+            out["result"] = sum(range(100))
+
+    t = threading.Thread(target=work)
+    t.start()
+    t.join(10)
+    assert out["result"] == 4950
+    assert not [
+        w for w in threading.enumerate() if w.name == "bench-watchdog"
+    ]

@@ -110,6 +110,18 @@ def test_atomic_overwrite(tmp_path):
     assert not [f for f in os.listdir(tmp_path) if f.endswith(".tmp.npz")]
 
 
+def test_bare_filename_save_and_overwrite(tmp_path, monkeypatch):
+    """A path with no directory component must save (and atomically
+    overwrite) — the durability fsync opens the *containing directory*,
+    and ``os.path.dirname("ck.npz")`` is '' (not an openable path)."""
+    monkeypatch.chdir(tmp_path)
+    save_checkpoint("ck.npz", {"a": jnp.zeros(2)}, step=1)
+    save_checkpoint("ck.npz", {"a": jnp.ones(2)}, step=2)
+    t, step, _ = load_checkpoint("ck.npz", {"a": jnp.zeros(2)})
+    assert step == 2 and np.all(np.asarray(t["a"]) == 1)
+    assert not [f for f in os.listdir(".") if f.endswith(".tmp.npz")]
+
+
 def test_interrupted_save_leaves_previous_checkpoint_intact(
     tmp_path, monkeypatch
 ):

@@ -4,7 +4,7 @@ import pytest
 
 from repro.core.convergence import (
     HyperSpec, corollary1_rounds, synthetic_hyperspec, theorem1_bound,
-    tier_G2_sums, bound_constants,
+    tier_G2_sums, bound_constants, stale_interval_weights, staleness_rounds,
 )
 
 
@@ -57,6 +57,69 @@ def test_corollary_rounds(hp):
     R = corollary1_rounds(hp, eps, [2, 2, 1], (4, 8))
     np.testing.assert_allclose(R, 500, rtol=1e-6)
     assert corollary1_rounds(hp, 1e-12, [2, 2, 1], (4, 8)) is None
+
+
+# --------------------------------------------------------------------------- #
+# bounded-staleness pricing (DESIGN.md §17)
+# --------------------------------------------------------------------------- #
+
+
+def test_staleness_zero_collapses_bitexact(hp):
+    """s ≡ 0 must evaluate the exact pre-async float expression."""
+    base = theorem1_bound(hp, 500, [4, 2, 1], (4, 8))
+    assert theorem1_bound(hp, 500, [4, 2, 1], (4, 8), staleness=0) == base
+    assert theorem1_bound(hp, 500, [4, 2, 1], (4, 8), staleness=None) == base
+    assert (
+        theorem1_bound(hp, 500, [4, 2, 1], (4, 8), staleness=[0, 0, 0]) == base
+    )
+    R = corollary1_rounds(hp, base, [4, 2, 1], (4, 8), staleness=0)
+    np.testing.assert_allclose(R, 500, rtol=1e-6)
+
+
+def test_staleness_inflates_monotonically(hp):
+    prev = theorem1_bound(hp, 500, [4, 2, 1], (4, 8))
+    for s in (1, 2, 4, 8):
+        b = theorem1_bound(hp, 500, [4, 2, 1], (4, 8), staleness=(s, 0, 0))
+        assert b > prev
+        prev = b
+    # a stale sync needs more rounds to hit the same target eps
+    eps = theorem1_bound(hp, 500, [4, 2, 1], (4, 8))
+    R0 = corollary1_rounds(hp, 1.01 * eps, [4, 2, 1], (4, 8))
+    R1 = corollary1_rounds(hp, 1.01 * eps, [4, 2, 1], (4, 8),
+                           staleness=(1, 0, 0))
+    assert R1 is None or R1 > R0
+
+
+def test_staleness_drift_matches_interval_inflation(hp):
+    """The stale drift weight is exactly (I+s)²: a tier at (I, s) prices
+    identically to the synchronous tier at interval I+s."""
+    b_async = theorem1_bound(hp, 500, [4, 2, 1], (4, 8), staleness=(3, 0, 0))
+    b_sync = theorem1_bound(hp, 500, [7, 2, 1], (4, 8))
+    np.testing.assert_allclose(b_async, b_sync, rtol=1e-12)
+
+
+def test_stale_interval_weights():
+    w = stale_interval_weights([4, 2, 1])
+    np.testing.assert_allclose(w, [16.0, 4.0, 0.0])
+    np.testing.assert_allclose(
+        stale_interval_weights([4, 2, 1], (0, 0, 0)), w
+    )
+    w2 = stale_interval_weights([4, 2, 1], (3, 0, 0))
+    np.testing.assert_allclose(w2, [49.0, 4.0, 0.0])
+    # an I=1 tier landing s rounds late drifts the full (1+s)^2
+    np.testing.assert_allclose(
+        stale_interval_weights([1, 2, 1], (2, 0, 0)), [9.0, 4.0, 0.0]
+    )
+
+
+def test_staleness_rounds_validation():
+    np.testing.assert_array_equal(staleness_rounds(None, 3), [0, 0, 0])
+    np.testing.assert_array_equal(staleness_rounds(2, 3), [2, 2, 2])
+    np.testing.assert_array_equal(staleness_rounds((1, 0, 0), 3), [1, 0, 0])
+    with pytest.raises(ValueError, match="per-tier staleness"):
+        staleness_rounds((1, 0), 3)
+    with pytest.raises(ValueError, match=">= 0"):
+        staleness_rounds((-1, 0, 0), 3)
 
 
 @pytest.mark.parametrize("seed", range(8))

@@ -117,3 +117,144 @@ def test_grouped_moe_sharded_equivalence():
                          capture_output=True, text=True, timeout=560)
     assert out.returncode == 0, out.stderr[-3000:]
     assert "SHARDED-MOE-OK" in out.stdout
+
+
+ENGINE_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_reduced
+    from repro.configs.shapes import concrete_inputs
+    from repro.core.async_agg import make_async_trainer
+    from repro.core.engine import build_train_step_a, init_state_a
+    from repro.core.sharded import (
+        build_sharded_train_step_a, init_sharded_state_a,
+    )
+    from repro.core.tiers import GuardSpec, default_plan
+    from repro.launch.mesh import make_debug_mesh
+    from repro.models.model import SplittableModel
+    from repro.optim import sgd
+    from repro.compress import Int8Stochastic
+
+    assert len(jax.devices()) == 4
+    N, R = 8, 4
+    spec = get_reduced("smollm-135m")
+    model = SplittableModel(spec)
+    opt = sgd(1e-2)
+    # entities (8, 2, 1): tier 0's 8 groups land device-local on D=4,
+    # tier 1's 2 groups force the matmul-shaped cross-device path
+    plan = default_plan(spec.n_units, N, cuts=(1, 2), intervals=(2, 2, 1),
+                        entities=(N, 2, 1))
+    mesh = make_debug_mesh(data=4, model=1)
+
+    batches, masks = [], []
+    for r in range(R):
+        b = concrete_inputs(spec, N * 2, 16, jax.random.PRNGKey(r))
+        batches.append(jax.tree.map(
+            lambda x: x.reshape((N, 2) + x.shape[1:]), b
+        ))
+        masks.append((jnp.arange(N) % 3 != r % 3).astype(jnp.float32))
+
+    def fed(r):
+        return tuple((r + 1) % I == 0 if I > 1 else True
+                     for I in plan.intervals)
+
+    def run(sharded, **kw):
+        with_mask = kw.get("with_mask", False)
+        if sharded:
+            state = init_sharded_state_a(model, plan, opt,
+                                         jax.random.PRNGKey(0), mesh)
+            mk = lambda f: build_sharded_train_step_a(
+                model, plan, opt, mesh, fed_round=f, **kw)
+        else:
+            state = init_state_a(model, plan, opt, jax.random.PRNGKey(0))
+            mk = lambda f: jax.jit(build_train_step_a(
+                model, plan, opt, fed_round=f, **kw))
+        steps, losses = {}, []
+        for r in range(R):
+            f = fed(r)
+            if f not in steps:
+                steps[f] = mk(f)
+            args = (state, batches[r]) + ((masks[r],) if with_mask else ())
+            state, loss = steps[f](*args)
+            losses.append(float(loss))
+        return losses, state.params
+
+    configs = {
+        "plain": {},
+        "mask": dict(with_mask=True),
+        "compress": dict(compressor=Int8Stochastic(tile=128)),
+        "guard+mask": dict(with_mask=True, guard=GuardSpec()),
+    }
+    for name, kw in configs.items():
+        ref_losses, ref_params = run(False, **kw)
+        sh_losses, sh_params = run(True, **kw)
+        np.testing.assert_allclose(
+            sh_losses, ref_losses, rtol=2e-5,
+            err_msg=f"{name}: sharded losses diverge",
+        )
+        # the quantized wire amplifies reduction-order noise: a value that
+        # lands on the other side of an int8 rounding boundary jumps a
+        # full quant step, so the compressed config gets a step-sized atol
+        atol = 2e-3 if name == "compress" else 2e-6
+        for a, b in zip(jax.tree.leaves(sh_params),
+                        jax.tree.leaves(ref_params)):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=2e-5, atol=atol,
+                err_msg=f"{name}: sharded params diverge",
+            )
+        print(f"config {name}: sharded == single-host")
+
+    # async over the sharded step: s=0 is bit-identical to the sharded
+    # sync dispatch (the same shard_map programs run in the same order)
+    _, sync_params = run(True)
+    tr = make_async_trainer(model, plan, opt, staleness=0, mesh=mesh)
+    state = init_sharded_state_a(model, plan, opt, jax.random.PRNGKey(0),
+                                 mesh)
+    for r in range(R):
+        state, _ = tr.run_round(state, batches[r], r)
+    assert not tr.pending
+    for a, b in zip(jax.tree.leaves(state.params),
+                    jax.tree.leaves(sync_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # s=1: defer, then drain right at the due round — equivalent to the
+    # in-step fed levels up to cross-device reduction order
+    tr1 = make_async_trainer(model, plan, opt, staleness=1, mesh=mesh)
+    state = init_sharded_state_a(model, plan, opt, jax.random.PRNGKey(0),
+                                 mesh)
+    for r in range(2):
+        state, loss = tr1.run_round(state, batches[r], r)
+        assert np.isfinite(float(loss))
+    assert {p.tier for p in tr1.pending} == {0, 1}
+    state = tr1.drain(state)
+    # reference: the sharded sync engine over the same 2 rounds
+    st = init_sharded_state_a(model, plan, opt, jax.random.PRNGKey(0), mesh)
+    steps = {}
+    for r in range(2):
+        f = fed(r)
+        if f not in steps:
+            steps[f] = build_sharded_train_step_a(
+                model, plan, opt, mesh, fed_round=f)
+        st, _ = steps[f](st, batches[r])
+    for a, b in zip(jax.tree.leaves(state.params),
+                    jax.tree.leaves(st.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-6)
+    print("SHARDED-ENGINE-OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_engine_a_equivalence():
+    """core.sharded == core.engine across mask x compression x guard, plus
+    the async trainer's staleness-0 bit-exact collapse on the mesh."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", ENGINE_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "SHARDED-ENGINE-OK" in out.stdout

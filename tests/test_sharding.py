@@ -99,6 +99,52 @@ def test_cache_pspecs_decode_vs_long():
     assert any("data" in [e for e in ps if e] for ps in flatl if ps)  # seq dim
 
 
+def test_train_pspecs_client_axis_only():
+    """The sharded training step (core.sharded) shards ONLY the client
+    axis: no leaf may pick up a ``model`` entry (the param_pspecs(tp=1)
+    pitfall its docstring documents)."""
+    p = abstract_params("smollm-135m", client=8)
+    pps = sh.train_pspecs(p, ("data",), num_clients=8)
+    flat = jax.tree.leaves(pps, is_leaf=lambda x: isinstance(x, P))
+    assert all(ps[0] == "data" for ps in flat)
+    assert all(all(e is None for e in ps[1:]) for ps in flat)
+    # multi-pod: the client axis spans both mesh axes
+    pps2 = sh.train_pspecs(p, ("pod", "data"), num_clients=8)
+    assert all(
+        ps[0] == ("pod", "data")
+        for ps in jax.tree.leaves(pps2, is_leaf=lambda x: isinstance(x, P))
+    )
+
+
+def test_train_pspecs_replicates_non_client_leaves():
+    tree = {
+        "stacked": sds((8, 3, 4), jnp.float32),
+        "scalar": sds((), jnp.float32),
+        "counter": sds((3,), jnp.int32),  # leading dim != num_clients
+    }
+    pps = sh.train_pspecs(tree, ("data",), num_clients=8)
+    assert pps["stacked"] == P("data", None, None)
+    assert pps["scalar"] == P()
+    assert pps["counter"] == P()
+    # num_clients=None: every non-scalar leaf is treated as stacked
+    loose = sh.train_pspecs(tree, ("data",))
+    assert loose["counter"] == P("data")
+
+
+def test_make_debug_mesh_too_few_devices_fails_loudly():
+    """The device count is fixed at backend init — asking for more must
+    raise an actionable error, not silently build a smaller mesh (this
+    test process initialized jax without XLA_FLAGS)."""
+    import pytest
+
+    from repro.launch.mesh import make_debug_mesh
+
+    with pytest.raises(
+        RuntimeError, match="xla_force_host_platform_device_count"
+    ):
+        make_debug_mesh(data=1024, model=2)
+
+
 def test_opt_pspecs_follow_params():
     p = abstract_params("qwen2-1.5b", client=4)
     pps = sh.param_pspecs(p, tp=16, client_axes=("data",))
